@@ -1,0 +1,112 @@
+"""Fig. 6 + Fig. 7 analogs: spatial utilization vs array sizing, and
+per-layer/per-model dataflow latency (DF1/DF2/OPT2) for Mirage vs systolic."""
+
+from __future__ import annotations
+
+from benchmarks import hw_model as hm
+from repro.configs import ARCHS
+
+
+def fig_6(print_fn=print):
+    print_fn("# Fig 6 analog: spatial utilization vs rows / n_units (g=16)")
+    work = hm.alexnet_gemms() + hm.transformer_gemms()
+    for rows in (8, 16, 32, 64, 128):
+        u = hm.spatial_utilization(work, rows=rows, g=16, n_units=8)
+        print_fn(f"fig6,rows_{rows},{u:.3f},utilization")
+    for n_units in (2, 4, 8, 16, 32):
+        u = hm.spatial_utilization(work, rows=32, g=16, n_units=n_units)
+        print_fn(f"fig6,units_{n_units},{u:.3f},utilization")
+    # assigned archs at the chosen 32x16x8 point
+    for arch_id in sorted(ARCHS):
+        gemms = hm.config_gemms(ARCHS[arch_id], batch=8, seq=512)
+        u = hm.spatial_utilization(gemms, rows=32, g=16, n_units=8)
+        print_fn(f"fig6,{arch_id},{u:.3f},utilization@32x16x8")
+
+
+def fig_7(print_fn=print):
+    print_fn("# Fig 7 analog: per-step latency by dataflow (batch 256)")
+    hw = hm.MirageHW()
+    workloads = {
+        "alexnet": hm.alexnet_gemms(256),
+        "transformer": hm.transformer_gemms(256),
+    }
+    for name, gemms in workloads.items():
+        for df in ("DF1", "DF2", "OPT2"):
+            t = hm.training_step_latency_s(gemms, "mirage", hw, dataflow=df)
+            print_fn(f"fig7,{name}_mirage_{df},{t*1e3:.3f},ms/step")
+        for df in ("DF1", "DF3", "OPT2"):
+            t = hm.training_step_latency_s(gemms, "systolic", hw, fmt="INT12",
+                                           n_arrays=1, dataflow=df)
+            print_fn(f"fig7,{name}_systolic_{df},{t*1e3:.3f},ms/step")
+    # paper finding: flexible dataflow (OPT2) helps systolic ~12%, mirage ~0%
+    g = workloads["transformer"]
+    m_best = min(hm.training_step_latency_s(g, "mirage", hw, dataflow=d)
+                 for d in ("DF1", "DF2"))
+    m_opt = hm.training_step_latency_s(g, "mirage", hw, dataflow="OPT2")
+    s_best = min(hm.training_step_latency_s(g, "systolic", hw, fmt="INT12",
+                                            dataflow=d) for d in ("DF1", "DF3"))
+    s_opt = hm.training_step_latency_s(g, "systolic", hw, fmt="INT12",
+                                       dataflow="OPT2")
+    print_fn(f"fig7,mirage_opt2_gain,{(m_best/m_opt-1)*100:.1f},pct(paper~0)")
+    print_fn(f"fig7,systolic_opt2_gain,{(s_best/s_opt-1)*100:.1f},pct(paper~12.5)")
+
+
+def fig_8(print_fn=print):
+    print_fn("# Fig 8 analog: iso-energy / iso-area runtime+EDP+power")
+    hw = hm.MirageHW()
+    p_rx = hm.calibrate_p_rx(hw)
+    mirage_pj = hw.energy_per_mac_pj(p_rx)["total"]
+    gemms = hm.transformer_gemms(256)
+    t_mirage = hm.training_step_latency_s(gemms, "mirage", hw, dataflow="OPT2")
+    p_mirage = hw.peak_power_w(p_rx)["total"]
+    print_fn(f"fig8,mirage_step_s,{t_mirage:.4f},s/step")
+    print_fn(f"fig8,mirage_power_w,{p_mirage:.2f},W")
+    for fmt in ("FP32", "INT12", "INT8", "FMAC"):
+        for mode in ("iso_energy", "iso_area"):
+            if mode == "iso_energy":
+                n = hm.iso_energy_arrays(fmt, hw, p_rx)
+            else:
+                n = hm.iso_area_arrays(fmt, hw)
+                if n == 0:
+                    continue
+            t = hm.training_step_latency_s(gemms, "systolic", hw, fmt=fmt,
+                                           n_arrays=n, dataflow="OPT2")
+            pj = hm.SYSTOLIC_FORMATS[fmt][0]
+            power = (n * hw.rows * hw.g * hm.SYSTOLIC_FORMATS[fmt][2]
+                     * pj * 1e-12)
+            edp_ratio = (t * t * power) / (t_mirage * t_mirage * p_mirage)
+            print_fn(f"fig8,{fmt}_{mode}_arrays,{n},count")
+            print_fn(f"fig8,{fmt}_{mode}_step_s,{t:.4f},speedup_vs_mirage="
+                     f"{t_mirage/t:.2f}x")
+            print_fn(f"fig8,{fmt}_{mode}_power_w,{power:.2f},"
+                     f"mirage/systolic={p_mirage/power:.2f}")
+            print_fn(f"fig8,{fmt}_{mode}_edp_vs_mirage,{edp_ratio:.2f},"
+                     f">1 means mirage better")
+
+
+def table_iii(print_fn=print):
+    print_fn("# Table III analog: inference IPS / IPS-per-W")
+    hw = hm.MirageHW()
+    p_rx = hm.calibrate_p_rx(hw)
+    p = hw.peak_power_w(p_rx)["total"]
+    # ResNet50 fwd ~ 4.1 GFLOP -> 2.05 GMAC; AlexNet ~ 0.72 GFLOP
+    resnet50 = [(49 * 49, 576, 64)] + [(14 * 14 * 4, 1152, 128)] * 16
+    alexnet = hm.alexnet_gemms(1)
+    for name, gemms in (("resnet50", resnet50), ("alexnet", alexnet)):
+        t = sum(hm.mirage_gemm_latency_opt_s(m, k, n, hw)[0]
+                for m, k, n in gemms)
+        ips = 1.0 / t
+        print_fn(f"table3,{name}_ips,{ips:.0f},paper={10474 if name=='resnet50' else 64963}")
+        print_fn(f"table3,{name}_ips_per_w,{ips/p:.1f},paper="
+                 f"{1540.6 if name=='resnet50' else 1904.5}")
+
+
+def main(print_fn=print):
+    fig_6(print_fn)
+    fig_7(print_fn)
+    fig_8(print_fn)
+    table_iii(print_fn)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Table II + Fig. 5b analog: MAC-level energy/area/frequency for Mirage vs
+systolic-array formats, and the pJ/MAC sensitivity sweep over (b_m, g)."""
+
+from __future__ import annotations
+
+from benchmarks import hw_model as hm
+
+
+def table_ii(print_fn=print):
+    hw = hm.MirageHW()
+    p_rx = hm.calibrate_p_rx(hw)
+    e = hw.energy_per_mac_pj(p_rx)
+    area = hw.area_mm2()
+    mac_area = area["total_3d"] / (hw.n_units * hw.rows * hw.g)
+    print_fn("# Table II analog: pJ/MAC, mm2/MAC, freq")
+    print_fn(f"table2,mirage_pj_mac,{e['total']:.3f},paper=0.21(calibrated)")
+    print_fn(f"table2,mirage_mm2_mac,{mac_area:.4f},paper=0.12")
+    print_fn(f"table2,mirage_freq_hz,{hm.PHOTONIC_CLOCK_HZ:.0f},paper=10GHz")
+    print_fn(f"table2,calibrated_p_rx_w,{p_rx:.3e},shot-noise-floor-fit")
+    for fmt, (pj, mm2, f) in hm.SYSTOLIC_FORMATS.items():
+        print_fn(f"table2,{fmt}_pj_mac,{pj},published")
+    ratios = {f: hm.SYSTOLIC_FORMATS[f][0] / e["total"]
+              for f in hm.SYSTOLIC_FORMATS}
+    print_fn(f"table2,energy_ratio_vs_fp32,{ratios['FP32']:.1f},paper=59.1x")
+    print_fn(f"table2,energy_ratio_vs_int8,{ratios['INT8']:.1f},paper=2x")
+    return e
+
+
+def fig_5b(print_fn=print):
+    print_fn("# Fig 5b analog: pJ/MAC vs (b_m, g)")
+    p_rx = hm.calibrate_p_rx(hm.MirageHW())
+    k_for_bm = {3: 4, 4: 5, 5: 6}
+    for b_m, k in k_for_bm.items():
+        for g in (4, 8, 16, 32, 64):
+            # Eq. 10: need log2 M >= 2(b_m+1)+log2 g-1
+            import math
+            M = (2**k - 1) * 2**k * (2**k + 1)
+            need = 2 * (b_m + 1) + math.log2(g) - 1
+            kk = k
+            while math.log2(M) < need:
+                kk += 1
+                M = (2**kk - 1) * 2**kk * (2**kk + 1)
+            hw = hm.MirageHW(g=g, b_m=b_m, k=kk)
+            e = hw.energy_per_mac_pj(p_rx)["total"]
+            print_fn(f"fig5b,bm{b_m}_g{g}_k{kk},{e:.4f},pJ/MAC")
+
+
+def fig_9(print_fn=print):
+    hw = hm.MirageHW()
+    p_rx = hm.calibrate_p_rx(hw)
+    pw = hw.peak_power_w(p_rx)
+    ar = hw.area_mm2()
+    print_fn("# Fig 9 analog: peak power + area breakdown")
+    for k, v in pw.items():
+        print_fn(f"fig9,power_{k}_w,{v:.3f},paper_total=19.95W")
+    for k, v in ar.items():
+        print_fn(f"fig9,area_{k}_mm2,{v:.1f},paper_total3d=234mm2")
+    frac_sram = pw["sram"] / pw["total"]
+    print_fn(f"fig9,sram_power_fraction,{frac_sram:.2f},paper=0.612")
+
+
+def main(print_fn=print):
+    table_ii(print_fn)
+    fig_5b(print_fn)
+    fig_9(print_fn)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Op-level microbenchmarks: us/call for every GEMM mode and Pallas kernel
+(CPU jit walltime — relative costs of the numerics paths, not TPU numbers)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gemm
+from repro.core.precision import get_policy
+from repro.kernels.bfp_quantize import bfp_fake_quant_pallas
+from repro.kernels.mirage_gemm import mirage_gemm_pallas
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(print_fn=print):
+    print_fn("# op microbenchmarks (CPU jit; relative numerics-path costs)")
+    rng = np.random.default_rng(0)
+    M, K, N = 256, 1024, 256
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+
+    for mode in ("fp32", "bf16", "int8", "mirage", "mirage_faithful",
+                 "mirage_rns"):
+        p = get_policy(mode if mode != "mirage" else "mirage")
+        if mode == "mirage":
+            p = get_policy("mirage")
+        else:
+            p = get_policy(mode)
+        f = jax.jit(lambda a, b, pp=p: gemm.mirage_matmul_nograd(a, b, pp))
+        us = _time(f, x, w)
+        print_fn(f"ops,matmul_{mode}_{M}x{K}x{N},{us:.1f},us_per_call")
+
+    us = _time(lambda a: bfp_fake_quant_pallas(a, interpret=True), x, iters=3)
+    print_fn(f"ops,pallas_bfp_quant_interp,{us:.1f},us_per_call")
+    us = _time(lambda a, b: mirage_gemm_pallas(a, b, interpret=True), x, w,
+               iters=2)
+    print_fn(f"ops,pallas_mirage_gemm_interp,{us:.1f},us_per_call")
+
+    # grad path
+    p = get_policy("mirage")
+    gfn = jax.jit(jax.grad(lambda a, b: jnp.sum(
+        gemm.mirage_matmul(a, b, p) ** 2), argnums=(0, 1)))
+    us = _time(lambda a, b: gfn(a, b)[0], x, w)
+    print_fn(f"ops,matmul_mirage_fwd_bwd,{us:.1f},us_per_call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,375 @@
+"""Analytical model of the Mirage photonic accelerator (paper Section IV-B).
+
+Reproduces the paper's in-house simulator: device-level energy/area/latency
+for the RNS-MMVMU datapath, the tiling latency model behind Fig. 7/8, the
+pJ/MAC sensitivity of Fig. 5b, utilization of Fig. 6, and the power/area
+breakdown of Fig. 9.
+
+Device constants are taken verbatim from Section IV-B. One quantity the paper
+does not fully specify is the shot-noise-limited receiver power for
+"SNR > m"; we model laser power as
+    P_laser = P_rx_min * m^2 * 10^(loss_dB/10) / (coupler_eff * laser_eff)
+with P_rx_min calibrated once so the flagship configuration (b_m=4, g=16,
+k=5) lands on the paper's published 0.21 pJ/MAC — all RELATIVE behaviour
+(vs g, b_m, moduli, and vs the systolic baselines) then follows from first
+principles. The calibration constant is printed for transparency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Device constants (Section IV-B)
+# ---------------------------------------------------------------------------
+
+PHOTONIC_CLOCK_HZ = 10e9          # 10 GHz MVM rate
+DIGITAL_CLOCK_HZ = 1e9            # 1 GHz digital, x10 interleaved
+PS_PROGRAM_NS = 5.0               # phase-shifter settle per tile [3]
+MVM_NS = 0.1                      # one MVM per 0.1 ns
+
+PS_LOSS_DB = 0.04                 # 25um phase shifter loss
+MRR_LOSS_DB = 0.2                 # MRR insertion+propagation when coupled
+BEND_LOSS_DB = 0.01               # 180-degree bend
+COUPLER_LOSS_DB = 0.2             # laser-to-chip coupler
+LASER_EFF = 0.20                  # wall-plug efficiency
+DETECTOR_A_PER_W = 1.1
+TIA_J_PER_BIT = 57e-15
+MRR_TUNE_W = 0.3e-12              # electro-optic MRR switching power
+
+DAC6_W, DAC6_GSPS, DAC6_MM2 = 136e-3, 20e9, 0.072   # [27]
+ADC6_W, ADC6_GSPS, ADC6_MM2 = 23e-3, 24e9, 0.03     # [56]
+RNS_CONV_J = 0.48e-12             # per RNS-BNS conversion [21]
+RNS_CONV_MM2 = 1545.8e-6          # mm^2
+SRAM_BYTES = 3 * 8 * 2**20        # three 8MB arrays
+SRAM_PJ_PER_BYTE = 0.6            # 40nm 32kB-bank read energy estimate
+SRAM_MM2_PER_MB = 0.45            # 40nm SRAM compiler estimate
+
+# device geometry for area
+PS_LEN_UM = 25.0
+MRR_RADIUS_UM = 10.0
+WG_PITCH_UM = 5.0
+
+# Published Table II constants (the paper's own synthesis results)
+SYSTOLIC_FORMATS = {
+    # name: (pJ/MAC, mm^2/MAC, freq_Hz)
+    "FP32": (12.42, 9.6e-3, 500e6),
+    "bfloat16": (3.20, 3.5e-3, 500e6),
+    "HFP8": (1.47, 1.4e-3, 500e6),
+    "INT12": (0.71, 7.7e-4, 1e9),
+    "INT8": (0.42, 4.1e-4, 1e9),
+    "FMAC": (0.11, None, 500e6),
+}
+
+MIRAGE_TABLE_II_PJ_MAC = 0.21     # calibration target
+
+
+@dataclasses.dataclass(frozen=True)
+class MirageHW:
+    """One Mirage accelerator instance."""
+    g: int = 16                  # MMUs per MDPU (contraction width)
+    rows: int = 32               # MDPUs per MMVMU
+    n_units: int = 8             # RNS-MMVMUs
+    k: int = 5                   # moduli {2^k-1, 2^k, 2^k+1}
+    b_m: int = 4
+
+    @property
+    def moduli(self) -> Tuple[int, int, int]:
+        return (2**self.k - 1, 2**self.k, 2**self.k + 1)
+
+    @property
+    def converter_bits(self) -> Tuple[int, ...]:
+        return tuple(int(math.ceil(math.log2(m))) for m in self.moduli)
+
+    # ------------------------------------------------------------------
+    # optics: loss + laser power
+    # ------------------------------------------------------------------
+
+    def path_loss_db(self) -> float:
+        """Optical loss along one MDPU row: g MMUs, each with ceil(log2 m)
+        digit stages (2 MRR switches + shifter-or-bypass + bends)."""
+        digits = max(self.converter_bits)
+        per_digit = 2 * MRR_LOSS_DB / 2 + PS_LOSS_DB + 2 * BEND_LOSS_DB
+        # (on average one of the two MRR couplings is on the taken route)
+        return COUPLER_LOSS_DB + self.g * digits * per_digit
+
+    def laser_power_w(self, p_rx_min_w: float) -> float:
+        """Per-MDPU-row laser power to keep SNR > m at the detector, doubled
+        for the two-quadrature phase detection (Section III-B3)."""
+        m = max(self.moduli)
+        p_rx = p_rx_min_w * m**2
+        return 2 * p_rx * 10 ** (self.path_loss_db() / 10) / LASER_EFF
+
+    # ------------------------------------------------------------------
+    # energy
+    # ------------------------------------------------------------------
+
+    def energy_per_mac_pj(self, p_rx_min_w: float,
+                          include_sram: bool = False) -> Dict[str, float]:
+        """pJ per MAC, broken down by component. One RNS output consumes the
+        work of all 3 modular MMVMUs and amortizes over g MACs."""
+        macs_per_output = self.g
+        out_rate = PHOTONIC_CLOCK_HZ
+        comp = {}
+        # lasers: n_moduli rows' worth of optical power per output stream
+        laser_w = sum(self.laser_power_w(p_rx_min_w) for _ in self.moduli)
+        comp["laser"] = laser_w / out_rate * 1e12
+        # MRR switching: g MMUs x digits x n_moduli
+        n_mrr = self.g * sum(self.converter_bits)
+        comp["mrr"] = n_mrr * MRR_TUNE_W / out_rate * 1e12
+        # ADCs: 2 per detection (I/Q) per modulus; 6b scaled 4x per bit
+        adc = 0.0
+        for bits in self.converter_bits:
+            e6 = ADC6_W / ADC6_GSPS
+            adc += 2 * e6 * 4.0 ** (bits - 6)
+        comp["adc"] = adc * 1e12
+        # DACs: programmed once per tile, amortized over reuse (weight
+        # stationary, Section IV-B2) — negligible steady-state; charge the
+        # program burst over a nominal 512-MVM tile lifetime
+        dac = 0.0
+        for bits in self.converter_bits:
+            e6 = DAC6_W / DAC6_GSPS
+            dac += self.g * e6 * 4.0 ** (bits - 6) / 512.0
+        comp["dac"] = dac * 1e12
+        # TIAs: bits per output per modulus, two quadratures
+        comp["tia"] = sum(2 * b * TIA_J_PER_BIT for b in self.converter_bits) * 1e12
+        # RNS<->BNS conversions: one forward (input) + one reverse per output
+        comp["rns_conv"] = 2 * RNS_CONV_J * 1e12
+        # FP32 accumulate (digital, per output)
+        comp["accum"] = 0.9  # pJ, 32b add + SRAM-local reg traffic at 40nm
+        if include_sram:
+            comp["sram"] = 2 * 4 * SRAM_PJ_PER_BYTE  # rd+wr one FP32 word
+        total = sum(comp.values())
+        return {**{k: v / macs_per_output for k, v in comp.items()},
+                "total": total / macs_per_output}
+
+    # ------------------------------------------------------------------
+    # area
+    # ------------------------------------------------------------------
+
+    def area_mm2(self) -> Dict[str, float]:
+        digits = max(self.converter_bits)
+        # one MMU: digit shifters with lengths L..2^(b-1)L + 2 MRRs per digit
+        ps_len_um = PS_LEN_UM * (2**digits - 1)
+        mmu_um2 = ps_len_um * WG_PITCH_UM + digits * (
+            (2 * MRR_RADIUS_UM) ** 2 * 2)
+        mdpu_um2 = self.g * mmu_um2
+        photonic_um2 = (len(self.moduli) * self.n_units * self.rows
+                        * mdpu_um2) * 1.5   # routing/pitch overhead
+        photonic = photonic_um2 * 1e-6
+        n_adc = len(self.moduli) * self.n_units * self.rows * 2
+        n_dac = len(self.moduli) * self.n_units * self.g
+        adc = n_adc * ADC6_MM2
+        dac = n_dac * DAC6_MM2
+        conv = len(self.moduli) * self.n_units * 10 * RNS_CONV_MM2
+        sram = SRAM_BYTES / 2**20 * SRAM_MM2_PER_MB
+        digital_logic = 8.0
+        return {"photonic": photonic, "adc": adc, "dac": dac,
+                "rns_conv": conv, "sram": sram, "digital": digital_logic,
+                "electronic_total": adc + dac + conv + sram + digital_logic,
+                "total_3d": max(photonic, adc + dac + conv + sram + digital_logic)}
+
+    def peak_power_w(self, p_rx_min_w: float) -> Dict[str, float]:
+        """Peak power at full utilization (Fig. 9 analog)."""
+        rate = PHOTONIC_CLOCK_HZ * self.n_units * self.rows  # outputs/s
+        e = self.energy_per_mac_pj(p_rx_min_w)
+        out = {}
+        for kcomp in ("laser", "mrr", "adc", "dac", "tia", "rns_conv", "accum"):
+            out[kcomp] = e[kcomp] * self.g * 1e-12 * rate
+        # SRAM: FP32 read+write per output (paper: dominant)
+        out["sram"] = rate * 2 * 4 * SRAM_PJ_PER_BYTE * 1e-12
+        out["total"] = sum(out.values())
+        return out
+
+    def peak_macs_per_s(self) -> float:
+        return PHOTONIC_CLOCK_HZ * self.n_units * self.rows * self.g
+
+
+P_RX_FLOOR_W = 1e-9   # ~1 nW: shot-noise-limited receiver floor at 10 GHz
+
+
+def calibrate_p_rx(hw: MirageHW = MirageHW()) -> float:
+    """Solve P_rx_min so the flagship config hits the paper's 0.21 pJ/MAC.
+
+    With our component accounting the converter/TIA/conversion energies alone
+    (~0.4 pJ/MAC) already exceed the paper's published total, so the fit
+    saturates at the physical receiver floor (1 nW) — we report our
+    first-principles number next to the paper's and keep the 1 nW floor;
+    all RELATIVE comparisons (vs g, b_m, and the systolic formats) are
+    preserved. See EXPERIMENTS.md for the discrepancy discussion."""
+    lo, hi = P_RX_FLOOR_W, 1e-3
+    for _ in range(80):
+        mid = math.sqrt(lo * hi)
+        t = hw.energy_per_mac_pj(mid)["total"]
+        if t > MIRAGE_TABLE_II_PJ_MAC:
+            hi = mid
+        else:
+            lo = mid
+    return max(math.sqrt(lo * hi), P_RX_FLOOR_W)
+
+
+# ---------------------------------------------------------------------------
+# Latency model (Fig. 7): tiled GEMM schedules DF1/DF2 (+ systolic DF3)
+# ---------------------------------------------------------------------------
+
+def mirage_gemm_latency_s(M: int, K: int, N: int, hw: MirageHW,
+                          dataflow: str = "DF1") -> float:
+    """O(M x K -> N): stationary operand programmed per tile (5 ns), then one
+    MVM per 0.1 ns streams the moving operand. Tiles run across n_units.
+
+    DF1 (weight stationary): tiles = ceil(N/rows)*ceil(K/g), stream M.
+    DF2 (input stationary):  tiles = ceil(M/rows)*ceil(K/g), stream N.
+    """
+    if dataflow == "DF1":
+        tiles = math.ceil(N / hw.rows) * math.ceil(K / hw.g)
+        stream = M
+    elif dataflow == "DF2":
+        tiles = math.ceil(M / hw.rows) * math.ceil(K / hw.g)
+        stream = N
+    else:
+        raise ValueError("Mirage supports DF1/DF2 only (Section V-A3)")
+    t_tile = PS_PROGRAM_NS * 1e-9 + stream * MVM_NS * 1e-9
+    return math.ceil(tiles / hw.n_units) * t_tile
+
+
+def mirage_gemm_latency_opt_s(M, K, N, hw: MirageHW) -> Tuple[float, str]:
+    """OPT2: best dataflow per GEMM (Section V-A3)."""
+    best = min((mirage_gemm_latency_s(M, K, N, hw, df), df)
+               for df in ("DF1", "DF2"))
+    return best
+
+
+def systolic_gemm_latency_s(M: int, K: int, N: int, rows: int = 32,
+                            cols: int = 16, n_arrays: int = 1,
+                            freq_hz: float = 1e9,
+                            dataflow: str = "DF1") -> float:
+    """Classic systolic estimate: per (rows x cols) tile, fill + stream."""
+    if dataflow in ("DF1", "DF2"):
+        tiles = math.ceil(N / rows) * math.ceil(K / cols)
+        stream = M
+        fill = rows + cols
+    else:  # DF3 output stationary: K streams through
+        tiles = math.ceil(M / rows) * math.ceil(N / cols)
+        stream = K
+        fill = rows + cols
+    cycles = math.ceil(tiles / n_arrays) * (stream + fill)
+    return cycles / freq_hz
+
+
+# ---------------------------------------------------------------------------
+# Workloads: training step = 3 GEMMs per layer (Eqs. 1-3)
+# ---------------------------------------------------------------------------
+
+def alexnet_gemms(batch: int = 256) -> List[Tuple[int, int, int]]:
+    """(M, K, N) im2col GEMMs for AlexNet's 5 convs + 3 FCs."""
+    convs = [  # (out_hw, k*k*cin, cout)
+        (55 * 55, 11 * 11 * 3, 64),
+        (27 * 27, 5 * 5 * 64, 192),
+        (13 * 13, 3 * 3 * 192, 384),
+        (13 * 13, 3 * 3 * 384, 256),
+        (13 * 13, 3 * 3 * 256, 256),
+    ]
+    fcs = [(1, 9216, 4096), (1, 4096, 4096), (1, 4096, 1000)]
+    return ([(batch * hw_, k, n) for hw_, k, n in convs]
+            + [(batch, k, n) for _, k, n in fcs])
+
+
+def transformer_gemms(batch: int = 256, seq: int = 128, d: int = 768,
+                      ffn: int = 3072, layers: int = 12) -> List[Tuple[int, int, int]]:
+    per_layer = [
+        (batch * seq, d, 3 * d),    # qkv
+        (batch * seq, d, d),        # out proj
+        (batch * seq, d, ffn),      # ffn up
+        (batch * seq, ffn, d),      # ffn down
+    ]
+    return per_layer * layers
+
+
+def config_gemms(cfg, batch: int, seq: int) -> List[Tuple[int, int, int]]:
+    """Per-training-step GEMMs of one of our assigned ModelConfigs."""
+    T = batch * seq
+    hd = cfg.resolved_head_dim
+    out: List[Tuple[int, int, int]] = []
+    for _ in range(cfg.n_layers):
+        if cfg.family in ("ssm", "hybrid"):
+            d_in = 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads
+            out += [(T, cfg.d_model, d_in), (T, cfg.d_inner, cfg.d_model)]
+            continue
+        out += [(T, cfg.d_model, cfg.n_heads * hd),
+                (T, cfg.d_model, 2 * cfg.n_kv_heads * hd),
+                (T, cfg.n_heads * hd, cfg.d_model)]
+        if cfg.n_experts:
+            ff = cfg.moe_d_ff
+            act = cfg.experts_per_token
+            out += [(T * act, cfg.d_model, 2 * ff), (T * act, ff, cfg.d_model)]
+        elif cfg.d_ff:
+            out += [(T, cfg.d_model, 2 * cfg.d_ff), (T, cfg.d_ff, cfg.d_model)]
+    out.append((T, cfg.d_model, cfg.vocab_size))
+    return out
+
+
+def training_step_latency_s(gemms: Sequence[Tuple[int, int, int]],
+                            engine: str = "mirage",
+                            hw: MirageHW = MirageHW(),
+                            fmt: str = "FP32", n_arrays: int = 1,
+                            dataflow: str = "OPT2") -> float:
+    """Training = fwd (MxKxN) + dX (MxNxK) + dW (KxMxN) per GEMM."""
+    total = 0.0
+    for (M, K, N) in gemms:
+        tri = [(M, K, N), (M, N, K), (K, M, N)]
+        for (m, k, n) in tri:
+            if engine == "mirage":
+                if dataflow == "OPT2":
+                    t, _ = mirage_gemm_latency_opt_s(m, k, n, hw)
+                else:
+                    t = mirage_gemm_latency_s(m, k, n, hw, dataflow)
+            else:
+                freq = SYSTOLIC_FORMATS[fmt][2]
+                if dataflow == "OPT2":
+                    t = min(systolic_gemm_latency_s(m, k, n, hw.rows, hw.g,
+                                                    n_arrays, freq, df)
+                            for df in ("DF1", "DF3"))
+                else:
+                    t = systolic_gemm_latency_s(m, k, n, hw.rows, hw.g,
+                                                n_arrays, freq, dataflow)
+            total += t
+    return total
+
+
+def spatial_utilization(gemms, rows: int, g: int, n_units: int) -> float:
+    """Fig. 6: mean per-layer fraction of MAC slots doing useful work (tile
+    rounding on N/K plus idle units on the last tile round)."""
+    utils = []
+    for (M, K, N) in gemms:
+        tiles = math.ceil(N / rows) * math.ceil(K / g)
+        rounds = math.ceil(tiles / n_units)
+        useful = M * K * N
+        allocated = rounds * n_units * rows * g * M
+        utils.append(useful / max(allocated, 1.0))
+    return sum(utils) / max(len(utils), 1)
+
+
+def iso_energy_arrays(fmt: str, hw: MirageHW = MirageHW(),
+                      p_rx: float = None) -> int:
+    """Systolic array count whose pJ/MAC budget matches Mirage (Fig. 8 left):
+    arrays sized so energy/MAC is equal => count scales with the
+    energy-per-MAC ratio at iso MAC-throughput demand."""
+    p_rx = p_rx if p_rx is not None else calibrate_p_rx(hw)
+    mirage_pj = hw.energy_per_mac_pj(p_rx)["total"]
+    fmt_pj = SYSTOLIC_FORMATS[fmt][0]
+    # same total energy rate: n_arrays * (rows*g) * f * pj == mirage rate * pj_m
+    mirage_rate = hw.peak_macs_per_s()
+    fmt_rate = hw.rows * hw.g * SYSTOLIC_FORMATS[fmt][2]
+    n = (mirage_rate * mirage_pj) / (fmt_rate * fmt_pj)
+    return max(1, int(round(n)))
+
+
+def iso_area_arrays(fmt: str, hw: MirageHW = MirageHW()) -> int:
+    area = hw.area_mm2()["total_3d"]
+    mm2 = SYSTOLIC_FORMATS[fmt][1]
+    if mm2 is None:
+        return 0
+    per_array = hw.rows * hw.g * mm2
+    return max(1, int(area / per_array))

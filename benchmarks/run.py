@@ -1,0 +1,78 @@
+"""Benchmark harness: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only table1,fig8
+
+Output: ``name,value,derived`` CSV lines per section, plus a Roofline dump
+if results/dryrun_baseline.json exists (produced by repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def roofline_section(print_fn=print):
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "results", "dryrun_baseline.json")
+    if not os.path.exists(path):
+        print_fn("roofline,skipped,0,run repro.launch.dryrun first")
+        return
+    rows = json.load(open(path))
+    print_fn("# Roofline terms from the compiled dry-run (seconds/step)")
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        tag = f"{r['arch']}|{r['shape']}|{r['mesh']}"
+        print_fn(f"roofline,{tag},{r['dominant']},"
+                 f"compute={r['compute_s']:.4f};memory={r['memory_s']:.4f};"
+                 f"collective={r['collective_s']:.4f};"
+                 f"frac={r['roofline_fraction']:.4f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,fig5a,fig5b,fig6,fig7,"
+                         "fig8,fig9,table3,ops,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(*names):
+        return only is None or bool(only.intersection(names))
+
+    t0 = time.time()
+    from benchmarks import bench_accuracy, bench_dataflow, bench_gemm, bench_ops
+
+    if want("table2"):
+        bench_gemm.table_ii()
+    if want("fig5b"):
+        bench_gemm.fig_5b()
+    if want("fig9"):
+        bench_gemm.fig_9()
+    if want("fig6"):
+        bench_dataflow.fig_6()
+    if want("fig7"):
+        bench_dataflow.fig_7()
+    if want("fig8"):
+        bench_dataflow.fig_8()
+    if want("table3"):
+        bench_dataflow.table_iii()
+    if want("ops"):
+        bench_ops.main()
+    if want("table1"):
+        bench_accuracy.table_i()
+    if want("fig5a"):
+        bench_accuracy.fig_5a()
+    if want("roofline"):
+        roofline_section()
+    print(f"# benchmarks done in {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,156 @@
+"""Fault-tolerant checkpointing: atomic, sharded, async, elastic.
+
+Design (no orbax dependency — pure numpy + manifest):
+  * A checkpoint is a directory ``step_<N>/`` holding one ``.npy`` file per
+    pytree leaf (flattened path-encoded names) + ``manifest.json`` with the
+    treedef, shapes, dtypes, and training metadata (data-pipeline state).
+  * Writes go to ``step_<N>.tmp/`` then ``os.rename`` — a crash mid-write can
+    never corrupt the latest checkpoint (restore scans only committed dirs).
+  * ``save_async`` runs serialization on a writer thread so the train loop
+    keeps stepping (device->host copy happens synchronously, disk I/O async).
+  * Restore is ELASTIC: arrays are loaded to host then device_put with the
+    CURRENT sharding specs, so a run checkpointed on mesh A resumes on mesh B
+    (different device count / topology) without conversion tools.
+  * ``keep_last`` old checkpoints are garbage-collected after each commit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(template, flat):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, {kk[len(k) + 1:]: vv
+                                       for kk, vv in flat.items()
+                                       if kk == k or kk.startswith(k + "/")})
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)):
+        typ = type(template)
+        return typ(_unflatten_into(v, {kk[len(str(i)) + 1:]: vv
+                                       for kk, vv in flat.items()
+                                       if kk == str(i) or kk.startswith(f"{i}/")})
+                   for i, v in enumerate(template))
+    # leaf: flat has exactly one entry keyed ""
+    return flat[""]
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def available_steps(self):
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+
+    def save(self, state, step: int, metadata: Optional[Dict] = None):
+        """Synchronous atomic save. ``state`` is any pytree of jax/np arrays."""
+        host_state = jax.tree_util.tree_map(np.asarray, state)
+        self._write(host_state, step, metadata or {})
+
+    def save_async(self, state, step: int, metadata: Optional[Dict] = None):
+        """Device->host copy now; disk write on a background thread."""
+        host_state = jax.tree_util.tree_map(np.asarray, state)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(host_state, step, metadata or {}),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _write(self, host_state, step: int, metadata: Dict):
+        with self._lock:
+            final = self._step_dir(step)
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            flat = _flatten(host_state)
+            names = {}
+            for i, (path, arr) in enumerate(flat.items()):
+                fname = f"leaf_{i:05d}.npy"
+                np.save(os.path.join(tmp, fname), np.asarray(arr))
+                names[path] = fname
+            manifest = {
+                "step": step,
+                "leaves": names,
+                "metadata": metadata,
+                "format": 1,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)   # atomic commit
+            self._gc()
+
+    def _gc(self):
+        steps = self.available_steps()
+        for s in steps[:-self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None):
+        """Load into the structure of ``template``. If ``shardings`` (a
+        matching pytree of NamedSharding) is given, leaves are device_put
+        with the CURRENT mesh — elastic restore onto any topology."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for path, fname in manifest["leaves"].items():
+            flat[path] = np.load(os.path.join(d, fname))
+        state = _unflatten_into(template, flat)
+        if shardings is not None:
+            state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state, manifest["metadata"]

@@ -1,0 +1,66 @@
+"""Architecture registry: the 10 assigned architectures + paper-scale configs."""
+
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    ALL_SHAPES,
+)
+from repro.configs.command_r_plus_104b import CONFIG as command_r_plus_104b
+from repro.configs.qwen2_1_5b import CONFIG as qwen2_1_5b
+from repro.configs.qwen2_0_5b import CONFIG as qwen2_0_5b
+from repro.configs.qwen3_14b import CONFIG as qwen3_14b
+from repro.configs.zamba2_2_7b import CONFIG as zamba2_2_7b
+from repro.configs.mamba2_2_7b import CONFIG as mamba2_2_7b
+from repro.configs.seamless_m4t_large_v2 import CONFIG as seamless_m4t_large_v2
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as qwen3_moe_30b_a3b
+from repro.configs.mixtral_8x7b import CONFIG as mixtral_8x7b
+from repro.configs.internvl2_2b import CONFIG as internvl2_2b
+
+ARCHS = {
+    c.arch_id: c
+    for c in (
+        command_r_plus_104b,
+        qwen2_1_5b,
+        qwen2_0_5b,
+        qwen3_14b,
+        zamba2_2_7b,
+        mamba2_2_7b,
+        seamless_m4t_large_v2,
+        qwen3_moe_30b_a3b,
+        mixtral_8x7b,
+        internvl2_2b,
+    )
+}
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+# Cells skipped per the assignment rules (pure full-attention archs have no
+# sub-quadratic long-context path; see DESIGN.md Section 4).
+SKIPPED_CELLS = {
+    ("command-r-plus-104b", "long_500k"): "pure full attention (no sub-quadratic path)",
+    ("qwen2-1.5b", "long_500k"): "pure full attention",
+    ("qwen2-0.5b", "long_500k"): "pure full attention",
+    ("qwen3-14b", "long_500k"): "pure full attention",
+    ("qwen3-moe-30b-a3b", "long_500k"): "pure full attention",
+    ("internvl2-2b", "long_500k"): "pure full attention",
+    ("seamless-m4t-large-v2", "long_500k"): "enc-dec with full attention",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_is_skipped(arch_id: str, shape_name: str):
+    return SKIPPED_CELLS.get((arch_id, shape_name))

@@ -1,0 +1,23 @@
+"""InternVL2 2B [arXiv:2404.16821; hf:OpenGVLab/InternVL2-2B].
+
+VLM: InternLM2-1.8B language backbone (24L, d_model 2048, 16 heads / 8 KV,
+d_ff 8192, vocab 92553) + InternViT vision frontend. Per the assignment the
+vision tower is a STUB: input_specs() provides precomputed patch embeddings
+(B, patches, frontend_dim) which an MLP projector maps into the LM stream."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    head_dim=128,
+    frontend="vit_stub",
+    frontend_dim=1024,
+    frontend_len=256,
+)

@@ -1,0 +1,26 @@
+"""SeamlessM4T large v2 [arXiv:2308.11596; hf:facebook/seamless-m4t-v2-large].
+
+Encoder-decoder transformer BACKBONE per the assignment: 24 encoder + 24
+decoder layers, d_model 1024, 16 heads (kv=16), d_ff 8192, vocab 256206,
+LayerNorm. The speech/audio modality frontend is a STUB: input_specs()
+provides precomputed frame embeddings (B, frames, d_model)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,             # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    head_dim=64,
+    norm_type="layernorm",
+    qkv_bias=True,
+    frontend="audio_stub",
+    frontend_dim=1024,
+    frontend_len=1024,       # encoder frames per example (default; shapes override)
+)

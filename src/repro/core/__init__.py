@@ -1,0 +1,36 @@
+"""Mirage core: BFP + RNS numerics for DNN training (the paper's contribution)."""
+
+from repro.core.precision import (
+    MiragePolicy,
+    PAPER_POLICY,
+    FP32_POLICY,
+    BF16_POLICY,
+    INT8_POLICY,
+    FAITHFUL_POLICY,
+    RNS_POLICY,
+    get_policy,
+    special_moduli,
+    required_output_bits,
+    check_overflow_bound,
+)
+from repro.core.bfp import (
+    BFPTensor,
+    bfp_quantize,
+    bfp_dequantize,
+    bfp_fake_quant,
+    bfp_error_bound,
+)
+from repro.core.rns import (
+    to_rns,
+    to_rns_special,
+    from_rns_special,
+    from_rns_generic_np,
+    rns_matmul,
+    mod_matmul,
+    rns_dot_reconstruct,
+)
+from repro.core.gemm import (
+    mirage_matmul,
+    mirage_matmul_nograd,
+    quantize_operands,
+)

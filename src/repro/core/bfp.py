@@ -1,0 +1,121 @@
+"""Block Floating Point (BFP) quantization (paper Section III-A, step 2).
+
+Groups of ``g`` consecutive elements along the contraction dimension share one
+exponent; each element keeps a signed mantissa of ``b_m`` magnitude bits.
+Values are stored as ``q * 2^(E - (b_m - 1))`` where ``E = floor(log2 max|x|)``
+over the group and ``q`` is an integer in ``[-(2^b_m - 1), 2^b_m - 1]``.
+
+All functions are shape-polymorphic over leading batch dims and jit-friendly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BFPTensor(NamedTuple):
+    """Quantized representation of a tensor grouped along its last axis.
+
+    mantissa: integer-valued f32 array, shape (..., G, g).
+    scale:    power-of-two f32 array, shape (..., G, 1) — equals 2^(E - b_m + 1).
+    orig_k:   static original length of the contraction axis (pre-padding).
+    """
+
+    mantissa: jax.Array
+    scale: jax.Array
+    orig_k: int
+
+
+def _group_reshape(x: jax.Array, g: int) -> Tuple[jax.Array, int]:
+    """Pad the last axis to a multiple of g and reshape to (..., G, g)."""
+    k = x.shape[-1]
+    pad = (-k) % g
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    new_shape = x.shape[:-1] + ((k + pad) // g, g)
+    return x.reshape(new_shape), k
+
+
+def _exponent(maxabs: jax.Array) -> jax.Array:
+    """floor(log2 |x|) computed exactly via frexp; zero groups get exponent 0."""
+    # frexp: x = m * 2^e with m in [0.5, 1)  =>  floor(log2 x) = e - 1.
+    _, e = jnp.frexp(jnp.maximum(maxabs, jnp.finfo(jnp.float32).tiny))
+    e = e - 1
+    return jnp.where(maxabs > 0, e, jnp.zeros_like(e))
+
+
+def _exp2_exact(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e, by constructing the f32 exponent field.
+
+    (jnp.exp2 is NOT guaranteed exact for integer arguments on all XLA
+    backends — observed 2-ulp error for exp2(96.0) on CPU.)
+    """
+    e = jnp.clip(e, -126, 127).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+
+
+def _round(v: jax.Array, rounding: str, key: Optional[jax.Array]) -> jax.Array:
+    if rounding == "nearest":
+        return jnp.round(v)  # round-half-to-even
+    if rounding == "truncate":
+        return jnp.trunc(v)  # toward zero: hardware LSB truncation on sign-magnitude
+    if rounding == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        u = jax.random.uniform(key, v.shape, dtype=v.dtype)
+        return jnp.floor(v + u)
+    raise ValueError(f"unknown rounding mode {rounding!r}")
+
+
+def bfp_quantize(
+    x: jax.Array,
+    b_m: int,
+    g: int,
+    rounding: str = "nearest",
+    key: Optional[jax.Array] = None,
+) -> BFPTensor:
+    """Quantize ``x`` along its last axis into BFP(b_m, g).
+
+    Returns mantissas as integer-valued float32 (exact for b_m <= 23) so the
+    downstream integer dot products map straight onto the MXU.
+    """
+    x = x.astype(jnp.float32)
+    xg, orig_k = _group_reshape(x, g)
+    maxabs = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    e = _exponent(maxabs)
+    scale = _exp2_exact(e - (b_m - 1))
+    qmax = float(2**b_m - 1)
+    q = _round(xg / scale, rounding, key)
+    q = jnp.clip(q, -qmax, qmax)
+    return BFPTensor(mantissa=q, scale=scale, orig_k=orig_k)
+
+
+def bfp_dequantize(t: BFPTensor) -> jax.Array:
+    """Reconstruct the (quantized) values, shape (..., K) with padding removed."""
+    xg = t.mantissa * t.scale
+    flat = xg.reshape(xg.shape[:-2] + (xg.shape[-2] * xg.shape[-1],))
+    return flat[..., : t.orig_k]
+
+
+def bfp_fake_quant(
+    x: jax.Array,
+    b_m: int,
+    g: int,
+    rounding: str = "nearest",
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Quantize-dequantize in one shot ("fake quantization")."""
+    return bfp_dequantize(bfp_quantize(x, b_m, g, rounding, key))
+
+
+def bfp_error_bound(b_m: int) -> float:
+    """Per-element relative-to-group-max quantization error bound.
+
+    |x - dq(q(x))| <= 0.5 * scale = 2^(E - b_m)  for round-to-nearest, and
+    <= scale = 2^(E - b_m + 1) for truncation. Expressed as a fraction of the
+    group max (|max| >= 2^E): nearest -> 2^-b_m, truncate -> 2^(1-b_m).
+    """
+    return 2.0 ** (-b_m)

@@ -1,0 +1,152 @@
+"""Precision policies for Mirage numerics.
+
+The paper's operating point is ``b_m = 4, g = 16`` with the special moduli set
+``{2^k - 1, 2^k, 2^k + 1}`` for ``k = 5`` -> ``{31, 32, 33}`` (Section V-A).
+A :class:`MiragePolicy` bundles everything a GEMM needs to know about the
+numerics: mode, BFP parameters, moduli, rounding, and which execution path
+(pure-jnp fast / pure-jnp faithful / RNS / Pallas kernel) to take.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+GEMM_MODES = (
+    "fp32",            # plain f32 matmul (paper's FP32 baseline)
+    "bf16",            # bfloat16 matmul, f32 accumulation (bfloat16 baseline)
+    "int8",            # per-tensor symmetric int8 (paper's INT8 baseline)
+    "mirage_fast",     # BFP quantize -> fold scales -> one MXU matmul
+    "mirage_faithful", # BFP quantize -> per-group integer dot + FP32 accumulate
+    "mirage_rns",      # full RNS path: residue GEMM per modulus + CRT per group
+)
+
+ROUNDING_MODES = ("nearest", "truncate", "stochastic")
+
+
+def special_moduli(k: int) -> Tuple[int, int, int]:
+    """The paper's conversion-friendly three-moduli set {2^k-1, 2^k, 2^k+1}."""
+    if k < 2:
+        raise ValueError(f"k must be >= 2, got {k}")
+    return (2**k - 1, 2**k, 2**k + 1)
+
+
+def rns_range(moduli: Tuple[int, ...]) -> int:
+    """Dynamic range M = prod(m_i). Values live in [-(M-1)//2, (M-1)//2]."""
+    return math.prod(moduli)
+
+
+def required_output_bits(b_m: int, g: int) -> int:
+    """Eq. (10): b_out = 2*(b_m + 1) + log2(g) - 1."""
+    return 2 * (b_m + 1) + int(math.ceil(math.log2(max(g, 1)))) - 1
+
+
+def check_overflow_bound(b_m: int, g: int, moduli: Tuple[int, ...]) -> None:
+    """Assert Eq. (10): log2(M) >= b_out so group dot products never overflow."""
+    M = rns_range(moduli)
+    b_out = required_output_bits(b_m, g)
+    if math.log2(M) < b_out:
+        raise ValueError(
+            f"RNS range M={M} (log2={math.log2(M):.2f} bits) cannot hold "
+            f"b_out={b_out} bits for b_m={b_m}, g={g} (Eq. 10). "
+            f"Increase k or reduce b_m/g."
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class MiragePolicy:
+    """Numerics policy applied to every dense GEMM in the model zoo.
+
+    Attributes:
+      mode: one of GEMM_MODES.
+      b_m: BFP mantissa bits (paper default 4).
+      g: BFP group size along the contraction dim (paper default 16).
+      k: special-moduli parameter; moduli = {2^k-1, 2^k, 2^k+1} (paper k=5).
+      rounding: mantissa rounding. Paper truncates (hardware shift); we default
+        to round-to-nearest which is free on TPU and slightly more accurate.
+      compute_dtype: dtype of the folded-scale matmul on the fast path.
+        BFP(b_m<=6) values are exactly representable in bfloat16, so "bfloat16"
+        is value-identical to "float32" while halving bytes and doubling MXU
+        throughput on TPU.
+      use_pallas: route the fast path through the fused Pallas kernel.
+      interpret: run Pallas kernels in interpret mode (CPU container).
+      noise_sigma: optional analog phase-noise sigma (residue-level), Section VII.
+      redundant_moduli: extra RRNS moduli for error correction (Section VII).
+    """
+
+    mode: str = "mirage_fast"
+    b_m: int = 4
+    g: int = 16
+    k: int = 5
+    rounding: str = "nearest"
+    compute_dtype: str = "float32"
+    use_pallas: bool = False
+    interpret: bool = True
+    noise_sigma: float = 0.0
+    redundant_moduli: Tuple[int, ...] = ()
+    # Weight-stationary quantization: the weight operand is ALREADY on the
+    # BFP grid (quantized once per step, like the photonic core programs a
+    # tile once and keeps it stationary) — the GEMM then skips its weight-
+    # side quantization. See runtime/trainer.py and EXPERIMENTS.md §Perf.
+    assume_quantized_weights: bool = False
+
+    def __post_init__(self):
+        if self.mode not in GEMM_MODES:
+            raise ValueError(f"mode {self.mode!r} not in {GEMM_MODES}")
+        if self.rounding not in ROUNDING_MODES:
+            raise ValueError(f"rounding {self.rounding!r} not in {ROUNDING_MODES}")
+        if self.mode.startswith("mirage"):
+            check_overflow_bound(self.b_m, self.g, self.moduli)
+
+    @property
+    def moduli(self) -> Tuple[int, int, int]:
+        return special_moduli(self.k)
+
+    @property
+    def all_moduli(self) -> Tuple[int, ...]:
+        return self.moduli + tuple(self.redundant_moduli)
+
+    @property
+    def rns_M(self) -> int:
+        return rns_range(self.moduli)
+
+    @property
+    def psi(self) -> int:
+        """Half-range: signed values representable in [-psi, psi]."""
+        return (self.rns_M - 1) // 2
+
+    @property
+    def mantissa_max(self) -> int:
+        """Symmetric (b_m+1)-bit signed mantissa magnitude bound (sign + b_m bits)."""
+        return 2**self.b_m - 1
+
+    @property
+    def converter_bits(self) -> int:
+        """DAC/ADC precision: ceil(log2 m) for the largest modulus (paper: 6b at k=5)."""
+        return max(int(math.ceil(math.log2(m))) for m in self.all_moduli)
+
+    def replace(self, **kw) -> "MiragePolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# Canonical policies
+PAPER_POLICY = MiragePolicy()  # b_m=4, g=16, k=5 — the paper's chosen point
+FP32_POLICY = MiragePolicy(mode="fp32")
+BF16_POLICY = MiragePolicy(mode="bf16")
+INT8_POLICY = MiragePolicy(mode="int8")
+FAITHFUL_POLICY = MiragePolicy(mode="mirage_faithful")
+RNS_POLICY = MiragePolicy(mode="mirage_rns")
+
+
+def get_policy(name: str, **overrides) -> MiragePolicy:
+    base = {
+        "fp32": FP32_POLICY,
+        "bf16": BF16_POLICY,
+        "int8": INT8_POLICY,
+        "mirage": PAPER_POLICY,
+        "mirage_fast": PAPER_POLICY,
+        "mirage_faithful": FAITHFUL_POLICY,
+        "mirage_rns": RNS_POLICY,
+    }[name]
+    return base.replace(**overrides) if overrides else base

@@ -1,0 +1,165 @@
+"""Residue Number System arithmetic (paper Sections II-D, III-A, III-C).
+
+Signed integers ``X`` in ``[-psi, psi]`` (``psi = (M-1)//2``, ``M = prod m_i``)
+are represented by non-negative residues ``x_i = X mod m_i``. The RNS is closed
+under + and *, so GEMMs run per-modulus at ``ceil(log2 m_i)`` bits.
+
+The paper uses the conversion-friendly set ``{2^k - 1, 2^k, 2^k + 1}``
+(Section III-C), for which forward conversion reduces to shifts/adds and
+reverse conversion (CRT) has a well-known adder-based closed form
+[Wang et al. 2002; Hiasat 2019]. Both are implemented here in int32-safe JAX
+(valid for k <= 10), plus a python-int generic CRT used as a test oracle.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Forward conversion: BNS -> RNS
+# --------------------------------------------------------------------------
+
+def to_rns(x: jax.Array, moduli: Sequence[int]) -> jax.Array:
+    """Residues of (possibly negative) integers, stacked on a new leading axis.
+
+    x: integer-valued array (int32 or exact f32). Returns int32 array of shape
+    (n_moduli,) + x.shape with entries in [0, m_i).
+    """
+    xi = jnp.round(x).astype(jnp.int32)
+    return jnp.stack([jnp.mod(xi, m) for m in moduli], axis=0)
+
+
+def to_rns_special(x: jax.Array, k: int) -> jax.Array:
+    """Forward conversion for {2^k-1, 2^k, 2^k+1} using shifts/adds only.
+
+    Mirrors the paper's 'simple shift operation' hardware (Section III-A step 3):
+      x mod 2^k     : low k bits
+      x mod 2^k - 1 : sum of k-bit digits, folded
+      x mod 2^k + 1 : alternating sum of k-bit digits, folded
+    Input magnitude must satisfy |x| < M = 2^k (2^{2k} - 1).
+    """
+    m1, m2, m3 = 2**k - 1, 2**k, 2**k + 1
+    M = m1 * m2 * m3
+    xi = jnp.round(x).astype(jnp.int32)
+    xi = jnp.mod(xi, M)  # lift to [0, M)
+    mask = m2 - 1
+    d0 = xi & mask
+    d1 = (xi >> k) & mask
+    d2 = (xi >> (2 * k)) & mask
+    d3 = xi >> (3 * k)  # nonzero only while folding
+    # mod 2^k - 1: digits sum (2^k == 1 mod m1); two folds suffice for 3 digits.
+    s = d0 + d1 + d2 + d3
+    s = (s & mask) + (s >> k)
+    s = (s & mask) + (s >> k)
+    r1 = jnp.where(s == m1, 0, s)
+    # mod 2^k: low bits.
+    r2 = d0
+    # mod 2^k + 1: alternating digit sum (2^k == -1 mod m3).
+    a = d0 - d1 + d2 - d3
+    r3 = jnp.mod(a, m3)
+    return jnp.stack([r1, r2, r3.astype(jnp.int32)], axis=0)
+
+
+# --------------------------------------------------------------------------
+# Reverse conversion: RNS -> BNS
+# --------------------------------------------------------------------------
+
+def from_rns_special(res: jax.Array, k: int, signed: bool = True) -> jax.Array:
+    """Adder-based CRT for {2^k-1, 2^k, 2^k+1} (int32-safe for k <= 10).
+
+    Derivation: write X = q * 2^k + r2. Then
+      q ≡ r1 - r2 (mod 2^k - 1)   and   q ≡ r2 - r3 (mod 2^k + 1),
+    and CRT over the co-prime pair (2^k-1, 2^k+1) with both inverses equal to
+    2^(k-1) gives
+      q = | (a (2^k+1) + b (2^k-1)) * 2^(k-1) |_{2^{2k} - 1}.
+    """
+    m1, m2, m3 = 2**k - 1, 2**k, 2**k + 1
+    M = m1 * m2 * m3
+    Mq = m1 * m3  # 2^{2k} - 1
+    r1, r2, r3 = res[0], res[1], res[2]
+    a = jnp.mod(r1 - r2, m1)
+    b = jnp.mod(r2 - r3, m3)
+    q = jnp.mod((a * m3 + b * m1) * (2 ** (k - 1)), Mq)
+    X = q * m2 + r2
+    if signed:
+        psi = (M - 1) // 2
+        X = jnp.where(X > psi, X - M, X)
+    return X.astype(jnp.int32)
+
+
+def crt_constants(moduli: Sequence[int]) -> Tuple[int, Tuple[int, ...]]:
+    """Generic CRT constants: M and c_i = (M_i * T_i) mod M (python ints)."""
+    M = math.prod(moduli)
+    consts = []
+    for m in moduli:
+        Mi = M // m
+        Ti = pow(Mi, -1, m)
+        consts.append((Mi * Ti) % M)
+    return M, tuple(consts)
+
+
+def from_rns_generic_np(res: np.ndarray, moduli: Sequence[int], signed: bool = True) -> np.ndarray:
+    """Generic CRT oracle on host with python-int precision (any moduli)."""
+    M, consts = crt_constants(moduli)
+    acc = np.zeros(res.shape[1:], dtype=object)
+    for i, c in enumerate(consts):
+        acc = (acc + res[i].astype(object) * c) % M
+    if signed:
+        psi = (M - 1) // 2
+        acc = np.where(acc > psi, acc - M, acc)
+    return acc.astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# Modular arithmetic primitives
+# --------------------------------------------------------------------------
+
+def mod_matmul(xr: jax.Array, wr: jax.Array, m: int) -> jax.Array:
+    """(xr @ wr) mod m for non-negative residues.
+
+    Accumulates the exact integer dot product first (safe while
+    K * (m-1)^2 < 2^31 for int32, or < 2^24 for exact f32), then reduces once.
+    This equals the per-MAC modular accumulation the optical phase performs
+    (mod is a ring homomorphism). Inputs may be int32 or exact f32.
+    """
+    acc = jnp.matmul(
+        xr.astype(jnp.float32), wr.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return jnp.mod(acc, float(m))
+
+
+def mod_mac(a: jax.Array, b: jax.Array, c: jax.Array, m: int) -> jax.Array:
+    """(a * b + c) mod m elementwise on residues."""
+    return jnp.mod(a * b + c, m)
+
+
+def rns_matmul(
+    x_res: jax.Array, w_res: jax.Array, moduli: Sequence[int]
+) -> jax.Array:
+    """Per-modulus residue matmuls: (n, M, K) x (n, K, N) -> (n, M, N)."""
+    outs = [mod_matmul(x_res[i], w_res[i], m) for i, m in enumerate(moduli)]
+    return jnp.stack(outs, axis=0)
+
+
+def rns_dot_reconstruct(
+    x: jax.Array, w: jax.Array, k: int
+) -> jax.Array:
+    """End-to-end integer matmul via RNS: quantized ints in, exact ints out.
+
+    x: (..., K) integer-valued, w: (K, N) integer-valued. The result is exact
+    as long as |x @ w| <= psi (Eq. 10 responsibility of the caller).
+    """
+    moduli = (2**k - 1, 2**k, 2**k + 1)
+    xr = to_rns_special(x, k)
+    wr = to_rns_special(w, k)
+    out_res = jnp.stack(
+        [mod_matmul(xr[i], wr[i], m) for i, m in enumerate(moduli)], axis=0
+    ).astype(jnp.int32)
+    return from_rns_special(out_res, k, signed=True)

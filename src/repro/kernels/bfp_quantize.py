@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: BFP fake-quantization (shared-exponent groups).
+
+Implements paper Section III-A step 2 as a tiled VMEM kernel: for each group
+of ``g`` consecutive elements along the last axis, find the max exponent,
+round mantissas to ``b_m`` bits, and write back the dequantized values.
+
+The group exponent is extracted from the f32 bit pattern (exact — no log2
+rounding hazards) and the power-of-two scale is *constructed* in the exponent
+field, so the kernel is bit-exact against the pure-jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _exp2_int(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e in [-126, 127], via exponent-field construction."""
+    e = jnp.clip(e, -126, 127)
+    bits = (e + 127).astype(jnp.int32) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _floor_log2(x: jax.Array) -> jax.Array:
+    """floor(log2 x) for x > 0 (normal f32), from the exponent bit field."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return ((bits >> 23) & 0xFF) - 127
+
+
+def _quantize_block(x: jax.Array, b_m: int, g: int, rounding: str) -> jax.Array:
+    """Fake-quantize a (rows, cols) block; cols must be a multiple of g."""
+    rows, cols = x.shape
+    xg = x.reshape(rows, cols // g, g)
+    maxabs = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    e = _floor_log2(jnp.maximum(maxabs, 1e-30))
+    e = jnp.where(maxabs > 0, e, 0)
+    scale = _exp2_int(e - (b_m - 1))
+    qmax = float(2**b_m - 1)
+    v = xg / scale
+    q = jnp.trunc(v) if rounding == "truncate" else jnp.round(v)
+    q = jnp.clip(q, -qmax, qmax)
+    return (q * scale).reshape(rows, cols)
+
+
+def _kernel(x_ref, o_ref, *, b_m: int, g: int, rounding: str):
+    o_ref[...] = _quantize_block(x_ref[...].astype(jnp.float32), b_m, g, rounding)
+
+
+@functools.partial(jax.jit, static_argnames=("b_m", "g", "rounding", "block_rows",
+                                             "block_cols", "interpret"))
+def bfp_fake_quant_pallas(
+    x: jax.Array,
+    b_m: int = 4,
+    g: int = 16,
+    rounding: str = "nearest",
+    block_rows: int = 256,
+    block_cols: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fake-quantize ``x`` along its last axis in BFP(b_m, g).
+
+    Works for any rank: leading dims are flattened into rows. The last axis is
+    padded to a multiple of g (padding never leaks into group maxima because
+    padded lanes are zero and |x| >= 0 dominates them only within their own
+    padded group, which is discarded).
+    """
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    xf = x.reshape(-1, k).astype(jnp.float32)
+    rows = xf.shape[0]
+    pad_k = (-k) % g
+    if pad_k:
+        xf = jnp.pad(xf, ((0, 0), (0, pad_k)))
+    kp = k + pad_k
+
+    br = min(block_rows, rows)
+    bc = min(block_cols, kp)
+    bc = max(g, (bc // g) * g)  # block must contain whole groups
+    pad_r = (-rows) % br
+    pad_c = (-kp) % bc
+    if pad_r or pad_c:
+        xf = jnp.pad(xf, ((0, pad_r), (0, pad_c)))
+
+    grid = (xf.shape[0] // br, xf.shape[1] // bc)
+    out = pl.pallas_call(
+        functools.partial(_kernel, b_m=b_m, g=g, rounding=rounding),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, jnp.float32),
+        interpret=interpret,
+    )(xf)
+    return out[:rows, :k].reshape(orig_shape)

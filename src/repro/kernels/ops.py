@@ -1,0 +1,39 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On the CPU container all kernels execute with ``interpret=True`` (the policy
+default); on real TPU hardware set ``MiragePolicy(use_pallas=True,
+interpret=False)``. Each wrapper handles padding/reshaping so callers can pass
+arbitrary ranks; the kernels see MXU-aligned 2-D blocks.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import MiragePolicy
+from repro.kernels.bfp_quantize import bfp_fake_quant_pallas
+from repro.kernels.mirage_gemm import mirage_gemm_pallas
+from repro.kernels.rns_matmul import rns_matmul_pallas
+
+
+def bfp_fake_quant(x: jax.Array, policy: MiragePolicy) -> jax.Array:
+    return bfp_fake_quant_pallas(
+        x, b_m=policy.b_m, g=policy.g, rounding=policy.rounding,
+        interpret=policy.interpret)
+
+
+def mirage_matmul_fused(x: jax.Array, w: jax.Array,
+                        policy: MiragePolicy) -> jax.Array:
+    """Fused BFP-quantize + GEMM (paper dataflow steps 2-9 in one kernel)."""
+    return mirage_gemm_pallas(
+        x, w, b_m=policy.b_m, g=policy.g, rounding=policy.rounding,
+        compute_dtype=policy.compute_dtype, interpret=policy.interpret)
+
+
+def rns_residue_matmul(x_res: jax.Array, w_res: jax.Array,
+                       moduli: Tuple[int, ...],
+                       interpret: bool = True) -> jax.Array:
+    return rns_matmul_pallas(x_res, w_res, tuple(moduli), interpret=interpret)

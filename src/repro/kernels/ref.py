@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (bitwise/allclose targets)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp, rns
+from repro.core.precision import MiragePolicy
+
+
+def bfp_fake_quant_ref(x: jax.Array, b_m: int = 4, g: int = 16,
+                       rounding: str = "nearest") -> jax.Array:
+    """Oracle for kernels.bfp_quantize.bfp_fake_quant_pallas."""
+    return bfp.bfp_fake_quant(x.astype(jnp.float32), b_m, g, rounding)
+
+
+def mirage_gemm_ref(x: jax.Array, w: jax.Array, b_m: int = 4, g: int = 16,
+                    rounding: str = "nearest",
+                    compute_dtype: str = "float32") -> jax.Array:
+    """Oracle for kernels.mirage_gemm.mirage_gemm_pallas: quantize both
+    operands along K, fold scales, single f32-accumulated matmul."""
+    xq = bfp.bfp_fake_quant(x.astype(jnp.float32), b_m, g, rounding)
+    wq = bfp.bfp_fake_quant(w.astype(jnp.float32).T, b_m, g, rounding).T
+    dt = jnp.bfloat16 if compute_dtype == "bfloat16" else jnp.float32
+    return jnp.matmul(xq.astype(dt), wq.astype(dt),
+                      preferred_element_type=jnp.float32)
+
+
+def rns_matmul_ref(x_res: jax.Array, w_res: jax.Array,
+                   moduli: Tuple[int, ...]) -> jax.Array:
+    """Oracle for kernels.rns_matmul.rns_matmul_pallas."""
+    return rns.rns_matmul(x_res, w_res, moduli).astype(jnp.int32)

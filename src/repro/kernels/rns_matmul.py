@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: per-modulus residue GEMM (modular matmul).
+
+The photonic MMVMU accumulates phase mod 2*pi/m per MAC; digitally the modulo
+is a ring homomorphism, so the kernel accumulates exact integer partial dots
+per K-block (kept below the f32 exact-integer window 2^24) and reduces
+``mod m`` once per block, keeping the running accumulator in [0, m). This
+preserves the paper's invariant that no stored value ever exceeds
+ceil(log2 m) bits of information outside the accumulator.
+
+Grid: (modulus, M blocks, N blocks, K blocks). The modulus value is streamed
+in as a (1,)-blocked operand indexed by the first grid axis, so one compiled
+kernel serves the whole moduli set.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(mod_ref, x_ref, w_ref, o_ref):
+    m = mod_ref[0]
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # exact integer partial dot in f32 (block_k * (m-1)^2 < 2^24 enforced below)
+    part = jnp.dot(x_ref[0], w_ref[0], preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.mod(o_ref[0] + jnp.mod(part, m), m)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("moduli", "block_m", "block_n", "block_k", "interpret"),
+)
+def rns_matmul_pallas(
+    x_res: jax.Array,
+    w_res: jax.Array,
+    moduli: Tuple[int, ...],
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """(n_mod, M, K) x (n_mod, K, N) -> (n_mod, M, N) residue matmul.
+
+    x_res/w_res: non-negative residues (int32 or exact f32).
+    moduli: static tuple of modulus values.
+    """
+    nm, M, K = x_res.shape
+    N = w_res.shape[2]
+    assert len(moduli) == nm, (moduli, x_res.shape)
+    xf = x_res.astype(jnp.float32)
+    wf = w_res.astype(jnp.float32)
+    mf = jnp.asarray(moduli, jnp.float32)
+
+    # keep block-partial dots exactly representable in f32
+    max_m = max(moduli)
+    exact_cap = (2**24) // max(1, (max_m - 1) ** 2)
+    bk = max(1, min(block_k, K, exact_cap))
+    bm_ = min(block_m, M)
+    bn = min(block_n, N)
+    pm, pn, pk = (-M) % bm_, (-N) % bn, (-K) % bk
+    if pm or pk:
+        xf = jnp.pad(xf, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        wf = jnp.pad(wf, ((0, 0), (0, pk), (0, pn)))
+
+    grid = (nm, xf.shape[1] // bm_, wf.shape[2] // bn, xf.shape[2] // bk)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda mi, i, j, k: (mi,)),
+            pl.BlockSpec((1, bm_, bk), lambda mi, i, j, k: (mi, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda mi, i, j, k: (mi, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn), lambda mi, i, j, k: (mi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nm, xf.shape[1], wf.shape[2]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(mf, xf, wf)
+    return out[:, :M, :N].astype(jnp.int32)

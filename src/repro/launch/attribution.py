@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Per-op / per-source attribution of the roofline terms for one cell.
+
+  PYTHONPATH=src python -m repro.launch.attribution --arch X --shape Y
+
+Prints the top HBM-byte and collective-byte contributors with their
+multiplicities and jax op_name provenance — the profile that drives the
+hypothesis->change->measure loop in EXPERIMENTS.md Section Perf.
+"""
+
+import argparse      # noqa: E402
+import collections   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+
+from repro.launch import hlo_analysis as ha  # noqa: E402
+from repro.launch.dryrun import lower_cell   # noqa: E402
+
+
+def attribute(hlo: str, default_group: int):
+    comps = ha.parse_computations(hlo)
+    entry = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo).group(1)
+    rows = []
+    coll_rows = []
+
+    def visit(cn, mult):
+        comp = comps.get(cn)
+        if comp is None:
+            return
+        info = {i.name: i.out_bytes for i in comp.instrs}
+        for ins in comp.instrs:
+            if ins.op == "while":
+                c = re.search(r"condition=%?([\w.\-]+)", ins.rhs)
+                b = re.search(r"body=%?([\w.\-]+)", ins.rhs)
+                trip = ha._trip_count(comps[c.group(1)]) if c and c.group(1) in comps else 1
+                if b:
+                    visit(b.group(1), mult * trip)
+                continue
+            if ins.op == "conditional":
+                mbc = re.search(r"branch_computations=\{([^}]*)\}", ins.rhs)
+                if mbc:
+                    for br in [x.strip().lstrip("%") for x in mbc.group(1).split(",")]:
+                        visit(br, mult)
+                continue
+            md = re.search(r'op_name="([^"]*)"', ins.rhs)
+            src = md.group(1) if md else ""
+            base = ins.op.replace("-start", "")
+            if base in ("all-reduce", "all-gather", "reduce-scatter",
+                        "all-to-all", "collective-permute") and ins.out_bytes:
+                coll_rows.append((mult * ins.out_bytes, base, mult, src))
+            if ins.op in ha._SKIP_BYTES_OPS or ins.op.endswith("-done"):
+                continue
+            if ins.op == "fusion":
+                mcc = re.search(r"calls=%?([\w.\-]+)", ins.rhs)
+                sub = comps.get(mcc.group(1)) if mcc else None
+                root = next((i for i in sub.instrs if i.is_root), None) if sub else None
+                sub_info = ({i.name: i.out_bytes for i in sub.instrs}
+                            if sub else {})
+                if root is not None and root.op == "dynamic-update-slice":
+                    upd = sub_info.get(root.operands[1], 0) if len(root.operands) > 1 else 0
+                    rows.append((mult * 2 * upd, "fusion:dus", mult, src))
+                    continue
+                if root is not None and root.op == "dynamic-slice":
+                    rows.append((mult * 2 * ins.out_bytes, "fusion:ds", mult, src))
+                    continue
+                # slice-aware operand accounting (matches hlo_analysis)
+                pbyidx = {}
+                uses = {}
+                if sub is not None:
+                    for si in sub.instrs:
+                        if si.op == "parameter":
+                            mp = re.search(r"parameter\((\d+)\)", si.rhs)
+                            if mp:
+                                pbyidx[int(mp.group(1))] = si.name
+                        for o in si.operands:
+                            uses.setdefault(o, []).append(si)
+                op_bytes = 0
+                for oi, oname in enumerate(ins.operands):
+                    full = info.get(oname, 0)
+                    pn = pbyidx.get(oi)
+                    us = uses.get(pn, []) if pn else []
+                    if us and all(u.op == "dynamic-slice" for u in us):
+                        op_bytes += sum(sub_info.get(u.name, 0) for u in us)
+                    else:
+                        op_bytes += full
+                rows.append((mult * (ins.out_bytes + op_bytes), "fusion",
+                             mult, src))
+                continue
+            if ins.op == "dynamic-update-slice":
+                upd = info.get(ins.operands[1], 0) if len(ins.operands) > 1 else 0
+                rows.append((mult * 2 * upd, ins.op, mult, src))
+                continue
+            if ins.op == "dynamic-slice":
+                rows.append((mult * 2 * ins.out_bytes, ins.op, mult, src))
+                continue
+            b = ins.out_bytes + sum(info.get(o, 0) for o in ins.operands)
+            rows.append((mult * b, ins.op, mult, src))
+
+    visit(entry, 1.0)
+    return rows, coll_rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default="mirage")
+    ap.add_argument("--perf-level", type=int, default=0)
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args(argv)
+
+    cfg, shape, mesh, model, lowered, compiled = lower_cell(
+        args.arch, args.shape, args.multi_pod, args.policy, args.perf_level)
+    hlo = compiled.as_text()
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(hlo)
+    rows, coll = attribute(hlo, mesh.size)
+    total = sum(r[0] for r in rows)
+    print(f"== HBM bytes/device: {total:.3e} "
+          f"({total/819e9:.2f}s at 819GB/s) ==")
+    agg = collections.Counter()
+    for b, op, mult, src in rows:
+        key = (op, src.split("/")[-1][:60] if src else "?",
+               "/".join(p for p in src.split("/") if "while" not in p
+                        and "body" not in p)[:80])
+        agg[key] += b
+    for (op, leaf, src), b in agg.most_common(args.top):
+        print(f"  {b:.2e} ({100*b/total:5.1f}%) {op:22s} {leaf:40s} {src}")
+    ctotal = sum(r[0] for r in coll)
+    print(f"== collective payload bytes/device: {ctotal:.3e} ==")
+    cagg = collections.Counter()
+    for b, op, mult, src in coll:
+        cagg[(op, src.split("/")[-1][:70])] += b
+    for (op, src), b in cagg.most_common(args.top):
+        print(f"  {b:.2e} ({100*b/max(ctotal,1):5.1f}%) {op:20s} {src}")
+
+
+if __name__ == "__main__":
+    main()

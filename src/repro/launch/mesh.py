@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to materialize the placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the pod axis is the
+    outer data-parallel (DCN) axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, pods: int = 0):
+    """Small mesh for CI-scale multi-device tests (subprocess with a handful
+    of forced host devices)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,62 @@
+"""Render dry-run JSON results into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def render(path: str, mesh_filter: str = None) -> str:
+    rows = json.load(open(path))
+    out = []
+    out.append("| arch | shape | mesh | chips | compute s | memory s | "
+               "collective s | dominant | MODEL_FLOPS | useful/HLO | "
+               "roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                       f"SKIP: {r['reason']} | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh')} | — "
+                       f"| ERROR | | | | | | |")
+            continue
+        if mesh_filter and mesh_filter not in r["mesh"]:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{'multi' if 'multi' in r['mesh'] else 'single'} | {r['chips']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['model_flops']:.2e} | {r['useful_flop_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def render_collectives(path: str) -> str:
+    rows = json.load(open(path))
+    out = ["| arch | shape | mesh | collective counts | wire bytes/device |",
+           "|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        cc = ", ".join(f"{k}:{v}" for k, v in
+                       sorted(r.get("collective_counts", {}).items()))
+        out.append(f"| {r['arch']} | {r['shape']} | "
+                   f"{'multi' if 'multi' in r['mesh'] else 'single'} "
+                   f"| {cc} | {fmt_bytes(r['collective_wire_bytes'])} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1
+                 else "results/dryrun_baseline.json"))

@@ -1,0 +1,227 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e-class constants):
+
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips * 819 GB/s HBM)
+  collective = wire_bytes / (chips * 50 GB/s ICI per link)
+
+``compiled.cost_analysis()`` reports the per-device partitioned module, so
+per-device flops/bytes divide by the single-chip peak directly (equivalently,
+HLO_FLOPs = per_device * chips). Collective bytes are NOT in cost_analysis:
+we parse the optimized HLO and charge each collective its ring wire cost:
+
+  all-reduce      2 * (G-1)/G * bytes
+  all-gather          (G-1)/G * bytes(output)
+  reduce-scatter      (G-1)/G * bytes(input)  ~= (G-1) * bytes(output)
+  all-to-all          (G-1)/G * bytes
+  collective-permute  bytes
+
+where G is the replica-group size parsed from the instruction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    raw_bytes: Dict[str, int]     # per-device payload bytes (output side)
+    wire_bytes: Dict[str, float]  # ring-cost wire bytes
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_raw(self) -> int:
+        return sum(self.raw_bytes.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    raw: Dict[str, int] = {}
+    wire: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        rhs = rhs.strip()
+        op = None
+        for c in _COLLECTIVES:
+            # match "<shape> <op>(" — avoids -start/-done fragments double count
+            if re.search(rf"\s{c}(\.\d+)?\(", " " + rhs) or rhs.startswith(c + "("):
+                op = c
+                break
+        if op is None:
+            continue
+        if f" {op}-done" in rhs or rhs.startswith(f"{op}-done"):
+            continue
+        shape_part = rhs.split(op)[0]
+        nbytes = _shape_bytes(shape_part)
+        if nbytes == 0:
+            continue
+        G = _group_size(s, default_group)
+        if op == "all-reduce":
+            w = 2.0 * (G - 1) / G * nbytes
+        elif op == "all-gather":
+            w = (G - 1) / G * nbytes
+        elif op == "reduce-scatter":
+            w = (G - 1) * nbytes          # input = G * output
+        elif op == "all-to-all":
+            w = (G - 1) / G * nbytes
+        else:                              # collective-permute
+            w = float(nbytes)
+        counts[op] = counts.get(op, 0) + 1
+        raw[op] = raw.get(op, 0) + nbytes
+        wire[op] = wire.get(op, 0.0) + w
+    return CollectiveStats(counts, raw, wire)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    per_device_flops: float
+    per_device_bytes: float
+    collectives: CollectiveStats
+    model_flops: float = 0.0           # 6ND / 2ND analytic (global)
+    peak_memory_bytes: float = 0.0     # per device (memory_analysis)
+
+    @property
+    def compute_s(self) -> float:
+        return self.per_device_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.per_device_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collectives.total_wire / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def hlo_flops_global(self) -> float:
+        return self.per_device_flops * self.chips
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        if self.hlo_flops_global == 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_global
+
+    @property
+    def bound_time_s(self) -> float:
+        """Roofline-ideal step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of ideal: useful compute time / achievable step time.
+
+        useful time = MODEL_FLOPS / (chips * peak). Equals MFU when
+        compute-dominated and everything overlaps perfectly."""
+        if self.bound_time_s == 0:
+            return 0.0
+        useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return useful / self.bound_time_s
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "per_device_flops": self.per_device_flops,
+            "per_device_bytes": self.per_device_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "collective_wire_bytes": self.collectives.total_wire,
+            "collective_counts": self.collectives.counts,
+            "collective_raw_bytes": self.collectives.raw_bytes,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.hlo_flops_global,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def count_params(abstract_params) -> int:
+    import jax
+    return sum(int(math.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(abstract_params))
+
+
+def model_flops_estimate(cfg, shape, n_params: int) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), with N = active
+    params for MoE (experts scaled by k/E)."""
+    n_active = n_params
+    if cfg.n_experts > 0:
+        expert_params = (cfg.n_layers * cfg.n_experts * 3
+                         * cfg.d_model * cfg.moe_d_ff)
+        n_active = (n_params - expert_params
+                    + expert_params * cfg.experts_per_token / cfg.n_experts)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_encdec:
+            tokens = shape.global_batch * (shape.seq_len + shape.seq_len // 8)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch

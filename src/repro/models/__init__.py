@@ -1,0 +1,5 @@
+"""Model zoo: unified LM (dense/moe/ssm/hybrid/vlm) + enc-dec backbone."""
+
+from repro.models.lm import LM, LMCallOptions
+from repro.models.encdec import EncDec
+from repro.models.registry import build_model, input_specs

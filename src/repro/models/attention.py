@@ -1,0 +1,261 @@
+"""GQA attention: chunked (flash-style) training/prefill path + cached decode.
+
+Memory discipline: scores are never materialized at (L x S). The prefill path
+runs an online-softmax scan over KV chunks inside a map over Q chunks, so the
+peak buffer is (B, q_chunk, H, kv_chunk). Supports causal masking, sliding
+windows (mixtral), QK-norm (qwen3), cross-attention (seamless), and KV-head
+repetition so kv heads can be sharded over large TP meshes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import MiragePolicy
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    pass  # attention params are plain dicts; see attn_init
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              qkv_bias: bool, qk_norm: bool, d_in: Optional[int] = None):
+    ks = jax.random.split(key, 5)
+    d_in = d_in or d_model
+    p = {
+        "q": common.dense_init(ks[0], d_in, n_heads * head_dim, qkv_bias),
+        "k": common.dense_init(ks[1], d_in, n_kv_heads * head_dim, qkv_bias),
+        "v": common.dense_init(ks[2], d_in, n_kv_heads * head_dim, qkv_bias),
+        "o": common.dense_init(ks[3], n_heads * head_dim, d_model, False),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((head_dim,), jnp.float32)
+    return p
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, Kv, D) -> (B, S, Kv*n_rep, D). Exact duplication, used to make
+    kv heads divisible by the TP degree (value-identical; tested)."""
+    if n_rep == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """(Lq, Sk) boolean validity mask from absolute positions. Padded key
+    slots carry position 2^30 and must be masked in the non-causal path too."""
+    m = k_pos[None, :] < 2**29
+    m = jnp.broadcast_to(m, (q_pos.shape[0], k_pos.shape[0]))
+    if causal:
+        m = m & (q_pos[:, None] >= k_pos[None, :])
+    if window is not None:
+        m = m & (q_pos[:, None] - k_pos[None, :] < window)
+    return m
+
+
+def chunked_attention(
+    q: jax.Array,            # (B, Lq, H, D) — rope already applied
+    k: jax.Array,            # (B, Sk, Kv, D)
+    v: jax.Array,            # (B, Sk, Kv, D)
+    q_positions: jax.Array,  # (Lq,) absolute positions
+    k_positions: jax.Array,  # (Sk,)
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    score_dtype=jnp.float32,
+) -> jax.Array:
+    """Online-softmax attention; returns (B, Lq, H, D).
+
+    score_dtype=bfloat16 halves the HBM traffic of the materialized score/
+    probability tensors (the dominant memory term of training cells — see
+    EXPERIMENTS.md §Perf); running max/denominator/accumulator stay f32."""
+    B, Lq, H, D = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    assert H % Kv == 0, (H, Kv)
+    sm_scale = 1.0 / math.sqrt(D)
+
+    qc = min(q_chunk, Lq)
+    kc = min(kv_chunk, Sk)
+    pad_q = (-Lq) % qc
+    pad_k = (-Sk) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad_k), constant_values=2**30)
+    nq, nk = q.shape[1] // qc, k.shape[1] // kc
+
+    # (B, nq, qc, Kv, rep, D) view of q; k/v chunked on axis 1.
+    q5 = q.reshape(B, nq, qc, Kv, rep, D)
+    k4 = k.reshape(B, nk, kc, Kv, D)
+    v4 = v.reshape(B, nk, kc, Kv, D)
+    qpos = q_positions.reshape(nq, qc)
+    kpos = k_positions.reshape(nk, kc)
+
+    def one_q_chunk(args):
+        qi, qp = args  # (B, qc, Kv, rep, D), (qc,)
+
+        def kv_step(carry, inp):
+            acc, m_run, l_run = carry
+            ki, vi, kp = inp  # (B, kc, Kv, D), (B, kc, Kv, D), (kc,)
+            s = jnp.einsum("bqkrd,bskd->bqkrs",
+                           qi.astype(score_dtype), ki.astype(score_dtype),
+                           preferred_element_type=score_dtype) * sm_scale
+            mask = _chunk_mask(qp, kp, causal, window)  # (qc, kc)
+            neg = jnp.asarray(-3e4 if score_dtype == jnp.bfloat16 else NEG_INF,
+                              score_dtype)
+            s = jnp.where(mask[None, :, None, None, :], s, neg)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1).astype(jnp.float32))
+            p = jnp.exp(s - m_new[..., None].astype(score_dtype))
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1, dtype=jnp.float32)
+            pv = jnp.einsum("bqkrs,bskd->bqkrd", p, vi.astype(score_dtype),
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, qc, Kv, rep, D), jnp.float32)
+        m0 = jnp.full((B, qc, Kv, rep), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, Kv, rep), jnp.float32)
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.moveaxis(k4, 1, 0), jnp.moveaxis(v4, 1, 0), kpos))
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return out  # (B, qc, Kv, rep, D)
+
+    outs = jax.lax.map(one_q_chunk, (jnp.moveaxis(q5, 1, 0), qpos))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * qc, H, D)
+    return out[:, :Lq]
+
+
+def attn_apply(
+    p, x, policy: MiragePolicy, *,
+    n_heads: int, n_kv_heads: int, head_dim: int,
+    positions: jax.Array, rope_theta: float,
+    causal: bool = True, window: Optional[int] = None,
+    qk_norm: bool = False, kv_repeat: int = 1,
+    x_kv: Optional[jax.Array] = None, use_rope: bool = True,
+    q_chunk: int = 1024, kv_chunk: int = 1024,
+    kv_positions: Optional[jax.Array] = None, opt=None,
+    skip_o_proj: bool = False,
+):
+    """Full attention block over a sequence (training / prefill path).
+
+    x_kv: source for k/v (cross-attention); defaults to x (self-attention).
+    skip_o_proj: return the pre-projection context (B, L, H*D) so the caller
+    can merge the o-projection with another row-sharded GEMM (one TP
+    all-reduce instead of two — §Perf iteration 3 for parallel blocks).
+    Returns (out, (k_cache, v_cache)) so prefill can keep the projected KV.
+    """
+    B, L, _ = x.shape
+    src = x if x_kv is None else x_kv
+    S = src.shape[1]
+    q = common.dense(p["q"], x, policy).reshape(B, L, n_heads, head_dim)
+    k = common.dense(p["k"], src, policy).reshape(B, S, n_kv_heads, head_dim)
+    v = common.dense(p["v"], src, policy).reshape(B, S, n_kv_heads, head_dim)
+    if qk_norm:
+        q = common.head_rmsnorm(p["q_norm"], q)
+        k = common.head_rmsnorm(p["k_norm"], k)
+    kv_pos = kv_positions if kv_positions is not None else (
+        positions if x_kv is None else jnp.arange(S))
+    if use_rope:
+        q = common.apply_rope(q, positions, rope_theta)
+        k = common.apply_rope(k, kv_pos, rope_theta)
+    k = _repeat_kv(k, kv_repeat)
+    v = _repeat_kv(v, kv_repeat)
+    # Pin head-parallel layout: batch over dp, heads over tp (replicated when
+    # the head count doesn't divide TP — never resharded mid-attention).
+    q = common.constrain(q, opt, ("dp", None, "tp", None))
+    k = common.constrain(k, opt, ("dp", None, "tp", None))
+    v = common.constrain(v, opt, ("dp", None, "tp", None))
+    score_dtype = (jnp.bfloat16 if opt is not None and
+                   getattr(opt, "attn_dtype", "float32") == "bfloat16"
+                   else jnp.float32)
+    # Pallas flash kernel (TPU deployment path): valid for full-sequence
+    # self-attention (contiguous positions starting at 0) — train/prefill.
+    use_flash = (opt is not None and getattr(opt, "use_flash_kernel", False)
+                 and x_kv is None and kv_positions is None)
+    if use_flash:
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(
+            q, k, v, causal=causal, window=window,
+            interpret=getattr(policy, "interpret", True))
+    else:
+        out = chunked_attention(
+            q, k, v, positions, kv_pos,
+            causal=causal, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            score_dtype=score_dtype)
+    out = out.reshape(B, L, n_heads * head_dim)
+    out = common.constrain(out, opt, ("dp", None, "tp"))
+    if skip_o_proj:
+        return out, (k, v)
+    return common.dense(p["o"], out, policy), (k, v)
+
+
+def attn_decode_step(
+    p, x, cache_k, cache_v, idx, policy: MiragePolicy, *,
+    n_heads: int, n_kv_heads: int, head_dim: int, rope_theta: float,
+    window: Optional[int] = None, qk_norm: bool = False, kv_repeat: int = 1,
+    use_rope: bool = True, cross: bool = False,
+):
+    """One decode step. x: (B, 1, d). cache_k/v: (B, S_cap, Kv_eff, D) holding
+    keys ALREADY rope'd at their absolute positions. ``idx``: current length.
+
+    Sliding windows use modular slot addressing: position p lives at slot
+    p % S_cap, so the cache capacity for SWA archs is min(seq, window).
+    Cross-attention reads a fixed precomputed cache and writes nothing.
+    """
+    B = x.shape[0]
+    S_cap = cache_k.shape[1]
+    q = common.dense(p["q"], x, policy).reshape(B, 1, n_heads, head_dim)
+    if qk_norm:
+        q = common.head_rmsnorm(p["q_norm"], q)
+    if use_rope:
+        q = common.apply_rope(q, jnp.reshape(idx, (1,)), rope_theta)
+
+    if not cross:
+        knew = common.dense(p["k"], x, policy).reshape(B, 1, n_kv_heads, head_dim)
+        vnew = common.dense(p["v"], x, policy).reshape(B, 1, n_kv_heads, head_dim)
+        if qk_norm:
+            knew = common.head_rmsnorm(p["k_norm"], knew)
+        if use_rope:
+            knew = common.apply_rope(knew, jnp.reshape(idx, (1,)), rope_theta)
+        knew = _repeat_kv(knew, kv_repeat)
+        vnew = _repeat_kv(vnew, kv_repeat)
+        slot = jnp.mod(idx, S_cap)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, knew, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, vnew, (0, slot, 0, 0))
+        # absolute position held by each slot (after this write)
+        slots = jnp.arange(S_cap)
+        kpos = idx - jnp.mod(idx - slots, S_cap)
+        valid = (kpos >= 0) & (kpos >= (idx - (window - 1) if window else 0))
+    else:
+        slots = jnp.arange(S_cap)
+        kpos = slots
+        valid = jnp.ones((S_cap,), bool)
+
+    Kv_eff = cache_k.shape[2]
+    rep = n_heads // Kv_eff
+    sm = 1.0 / math.sqrt(head_dim)
+    q5 = q.reshape(B, 1, Kv_eff, rep, head_dim)
+    s = jnp.einsum("bqkrd,bskd->bqkrs", q5, cache_k,
+                   preferred_element_type=jnp.float32) * sm
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkrs,bskd->bqkrd", w, cache_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, n_heads * head_dim)
+    return common.dense(p["o"], out, policy), cache_k, cache_v

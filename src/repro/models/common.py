@@ -1,0 +1,155 @@
+"""Shared functional layers. Every GEMM routes through ``dense`` -> Mirage.
+
+Models are pure functions over parameter pytrees (nested dicts of jax arrays)
+so they compose with pjit/shard_map, scan-over-layers, and checkpointing
+without a framework dependency.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import mirage_matmul
+from repro.core.precision import MiragePolicy
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: Optional[float] = None):
+    w_key, _ = jax.random.split(key)
+    std = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    p = {"w": (jax.random.normal(w_key, (d_in, d_out), jnp.float32) * std)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def embed_init(key, vocab: int, d: int):
+    return {"emb": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def norm_init(d: int, norm_type: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Apply functions
+# --------------------------------------------------------------------------
+
+def dense(p, x, policy: MiragePolicy):
+    """The Mirage-quantized GEMM. x: (..., d_in) @ w: (d_in, d_out)."""
+    y = mirage_matmul(x, p["w"], policy)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def constrain(x, opt, roles):
+    """with_sharding_constraint by logical role per dim ('dp'|'tp'|None).
+
+    No-op unless the call options carry an activation-sharding plan. Dims not
+    divisible by the mapped axis size fall back to replication, so odd head
+    counts never fail — they just stay unsharded (visible in the roofline).
+    """
+    if opt is None or getattr(opt, "act_dp", None) is None:
+        return x
+    from jax.sharding import PartitionSpec
+    spec = []
+    for dim, role in zip(x.shape, roles):
+        ax = opt.act_dp if role == "dp" else (
+            opt.act_tp if role == "tp" else None)
+        if ax is None:
+            spec.append(None)
+            continue
+        size = opt.axis_size(ax)
+        spec.append(ax if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+
+
+def embed(p, tokens):
+    return jnp.take(p["emb"], tokens, axis=0)
+
+
+def unembed(p, x, policy: MiragePolicy):
+    """Tied output head: x @ emb^T. The embedding table is never
+    pre-quantized (gathers stay FP32), so the head GEMM always quantizes its
+    weight side itself — even under weight-stationary quantization."""
+    if policy.assume_quantized_weights:
+        policy = policy.replace(assume_quantized_weights=False)
+    return mirage_matmul(x, p["emb"].T, policy)
+
+
+def norm(p, x, eps: float = 1e-5, norm_type: str = "rmsnorm"):
+    x32 = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        return y * p["scale"] + p["bias"]
+    return y * p["scale"]
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-5):
+    """Per-head RMSNorm over the head_dim axis (qwen3 qk_norm)."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (half-rotation / llama convention)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, L, H, D); positions: (B, L) or (L,) absolute positions."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, L, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, mlp_type: str = "swiglu", bias: bool = False):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "gate": dense_init(ks[0], d, d_ff, bias),
+            "up": dense_init(ks[1], d, d_ff, bias),
+            "down": dense_init(ks[2], d_ff, d, bias),
+        }
+    return {
+        "up": dense_init(ks[0], d, d_ff, bias),
+        "down": dense_init(ks[1], d_ff, d, bias),
+    }
+
+
+def mlp(p, x, policy: MiragePolicy, mlp_type: str = "swiglu", opt=None):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x, policy)) * dense(p["up"], x, policy)
+    else:
+        h = jax.nn.gelu(dense(p["up"], x, policy))
+    h = constrain(h, opt, ("dp",) + (None,) * (h.ndim - 2) + ("tp",))
+    return dense(p["down"], h, policy)

@@ -1,0 +1,223 @@
+"""Encoder-decoder transformer (SeamlessM4T v2 backbone).
+
+Encoder: bidirectional self-attention + GELU MLP over precomputed frame
+embeddings (the audio frontend is a stub per the assignment). Decoder: causal
+self-attention + cross-attention over encoder output + GELU MLP. LayerNorm,
+QKV biases (fairseq style). Serving keeps a self-attn KV cache plus
+precomputed per-layer cross-attention K/V.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import MiragePolicy
+from repro.models import attention, common
+from repro.models.lm import LMCallOptions
+
+
+class EncDec:
+    def __init__(self, cfg: ModelConfig, policy: MiragePolicy,
+                 options: LMCallOptions = LMCallOptions()):
+        self.cfg = cfg
+        self.policy = policy
+        self.opt = options
+
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        return {
+            "ln1": common.norm_init(cfg.d_model, cfg.norm_type),
+            "attn": attention.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.resolved_head_dim,
+                                        cfg.qkv_bias, False),
+            "ln2": common.norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": common.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu",
+                                   cfg.qkv_bias),
+        }
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        return {
+            "ln1": common.norm_init(cfg.d_model, cfg.norm_type),
+            "self_attn": attention.attn_init(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, cfg.qkv_bias, False),
+            "ln_x": common.norm_init(cfg.d_model, cfg.norm_type),
+            "cross_attn": attention.attn_init(
+                ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.resolved_head_dim, cfg.qkv_bias, False),
+            "ln2": common.norm_init(cfg.d_model, cfg.norm_type),
+            "mlp": common.mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu",
+                                   cfg.qkv_bias),
+        }
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+        enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+        dec_keys = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "frontend_proj": common.dense_init(ks[2], cfg.frontend_dim,
+                                               cfg.d_model),
+            "embed": common.embed_init(ks[3], cfg.vocab_size, cfg.d_model),
+            "enc_layers": jax.vmap(self._enc_layer_init)(enc_keys),
+            "enc_norm": common.norm_init(cfg.d_model, cfg.norm_type),
+            "dec_layers": jax.vmap(self._dec_layer_init)(dec_keys),
+            "final_norm": common.norm_init(cfg.d_model, cfg.norm_type),
+            "lm_head": common.dense_init(ks[4], cfg.d_model, cfg.vocab_size,
+                                         False, scale=0.02),
+        }
+
+    # ------------------------------------------------------------------
+
+    def encode(self, params, frames):
+        cfg, opt = self.cfg, self.opt
+        h = common.dense(params["frontend_proj"], frames, self.policy)
+        h = h.astype(opt.carry)
+        positions = jnp.arange(h.shape[1])
+
+        def body(hh, lp):
+            n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+            a, _ = attention.attn_apply(
+                lp["attn"], n1, self.policy, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                positions=positions, rope_theta=cfg.rope_theta, causal=False,
+                kv_repeat=opt.kv_repeat, q_chunk=opt.q_chunk,
+                kv_chunk=opt.kv_chunk, opt=opt)
+            hh = hh + a
+            n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+            hh = hh + common.mlp(lp["mlp"], n2, self.policy, "gelu", opt=self.opt)
+            return hh.astype(opt.carry), None
+
+        if opt.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+        return common.norm(params["enc_norm"], h, cfg.norm_eps, cfg.norm_type)
+
+    def _decoder(self, params, tokens, enc_out, collect_cache=False):
+        cfg, opt = self.cfg, self.opt
+        h = common.embed(params["embed"], tokens).astype(opt.carry)
+        L = h.shape[1]
+        positions = jnp.arange(L)
+        enc_pos = jnp.arange(enc_out.shape[1])
+
+        def body(hh, lp):
+            n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+            a, (sk, sv) = attention.attn_apply(
+                lp["self_attn"], n1, self.policy, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                positions=positions, rope_theta=cfg.rope_theta, causal=True,
+                kv_repeat=opt.kv_repeat, q_chunk=opt.q_chunk,
+                kv_chunk=opt.kv_chunk, opt=opt)
+            hh = hh + a
+            nx = common.norm(lp["ln_x"], hh, cfg.norm_eps, cfg.norm_type)
+            c, (xk, xv) = attention.attn_apply(
+                lp["cross_attn"], nx, self.policy, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                positions=positions, rope_theta=cfg.rope_theta, causal=False,
+                x_kv=enc_out, use_rope=False, kv_positions=enc_pos,
+                kv_repeat=opt.kv_repeat, q_chunk=opt.q_chunk,
+                kv_chunk=opt.kv_chunk, opt=opt)
+            hh = hh + c
+            n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+            hh = hh + common.mlp(lp["mlp"], n2, self.policy, "gelu", opt=self.opt)
+            hh = hh.astype(self.opt.carry)
+            return hh, (sk, sv, xk, xv) if collect_cache else None
+
+        if opt.remat and not collect_cache:
+            body = jax.checkpoint(body, prevent_cse=False)
+        h, caches = jax.lax.scan(body, h, params["dec_layers"])
+        h = common.norm(params["final_norm"], h, cfg.norm_eps, cfg.norm_type)
+        return h, caches
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        enc_out = self.encode(params, batch["frames"])
+        h, _ = self._decoder(params, batch["tokens"], enc_out)
+        B, L, d = h.shape
+        if self.opt.ce_chunk:
+            from repro.models.lm import chunked_ce
+            head_fn = lambda hh: common.dense(params["lm_head"], hh, self.policy)
+            ce = chunked_ce(h.reshape(B * L, d),
+                            batch["labels"].reshape(B * L), head_fn,
+                            self.opt.ce_chunk)
+        else:
+            logits = common.dense(params["lm_head"], h, self.policy)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(logp, batch["labels"][..., None],
+                                     axis=-1)[..., 0]
+            ce = -jnp.mean(ll)
+        return ce, {"ce": ce, "aux": jnp.zeros(()),
+                    "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    # ------------------------------------------------------------------
+
+    def cache_spec(self, batch: int, cap: int, enc_len: int):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        kv_eff = cfg.n_kv_heads * self.opt.kv_repeat
+        nl = cfg.n_layers
+        return {
+            "idx": ((), jnp.int32),
+            "self_k": ((nl, batch, cap, kv_eff, hd), jnp.float32),
+            "self_v": ((nl, batch, cap, kv_eff, hd), jnp.float32),
+            "cross_k": ((nl, batch, enc_len, kv_eff, hd), jnp.float32),
+            "cross_v": ((nl, batch, enc_len, kv_eff, hd), jnp.float32),
+        }
+
+    def init_cache(self, batch: int, cap: int, enc_len: int):
+        return {k: (jnp.zeros(s, d) if k != "idx" else jnp.zeros((), jnp.int32))
+                for k, (s, d) in self.cache_spec(batch, cap, enc_len).items()}
+
+    def prefill(self, params, frames, tokens, cap: int):
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        h, caches = self._decoder(params, tokens, enc_out, collect_cache=True)
+        sk, sv, xk, xv = caches
+        B, L = tokens.shape
+        cache = self.init_cache(B, cap, enc_out.shape[1])
+        pad = cap - L
+        cache["self_k"] = jnp.pad(sk, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["self_v"] = jnp.pad(sv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["cross_k"], cache["cross_v"] = xk, xv
+        cache["idx"] = jnp.asarray(L, jnp.int32)
+        logits = common.dense(params["lm_head"], h[:, -1:, :], self.policy)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        h = common.embed(params["embed"], tokens)
+        idx = cache["idx"]
+
+        def body(hh, xs):
+            lp, sk, sv, xk, xv = xs
+            n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+            a, sk, sv = attention.attn_decode_step(
+                lp["self_attn"], n1, sk, sv, idx, self.policy,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                kv_repeat=self.opt.kv_repeat)
+            hh = hh + a
+            nx = common.norm(lp["ln_x"], hh, cfg.norm_eps, cfg.norm_type)
+            c, _, _ = attention.attn_decode_step(
+                lp["cross_attn"], nx, xk, xv, idx, self.policy,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                kv_repeat=self.opt.kv_repeat, cross=True, use_rope=False)
+            hh = hh + c
+            n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+            hh = hh + common.mlp(lp["mlp"], n2, self.policy, "gelu", opt=self.opt)
+            return hh, (sk, sv)
+
+        h, (sks, svs) = jax.lax.scan(
+            body, h, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                      cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, self_k=sks, self_v=svs, idx=idx + 1)
+        h = common.norm(params["final_norm"], h, cfg.norm_eps, cfg.norm_type)
+        logits = common.dense(params["lm_head"], h, self.policy)
+        return logits, cache

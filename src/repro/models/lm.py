@@ -1,0 +1,562 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid / vlm
+architecture families. Layers are stacked (vmapped init) and executed with
+``lax.scan`` so the traced HLO is one layer deep regardless of depth — this
+keeps 64-layer 104B dry-run compiles tractable and is also the remat boundary.
+
+Family mapping:
+  dense  : pre-norm GQA attention + (Sw/Gelu)MLP; optional parallel block
+           (command-r), QKV bias (qwen2), qk_norm (qwen3), SWA (mixtral).
+  moe    : attention + MoE FFN (qwen3-moe, mixtral).
+  ssm    : Mamba2 (SSD) blocks only (mamba2-2.7b).
+  hybrid : Mamba2 stack + one SHARED attention/MLP block applied every
+           ``attn_every`` layers on concat(hidden, embeddings) (zamba2).
+  vlm    : dense LM consuming [projected patch embeddings; text tokens].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.precision import MiragePolicy
+from repro.models import attention, common, mamba2, moe
+
+
+@dataclasses.dataclass(frozen=True)
+class LMCallOptions:
+    """Mesh/runtime-dependent knobs that don't change parameters."""
+    kv_repeat: int = 1          # repeat kv heads so TP divides them
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    remat: bool = False
+    carry_dtype: str = "float32"  # scan-carry activations (bf16 at scale)
+    ce_chunk: int = 0             # chunked CE loss (0 = unchunked)
+    # Activation sharding constraints (None = let GSPMD propagate freely).
+    # act_dp/act_tp name mesh axes; mesh_sizes carries their sizes so the
+    # constraint helper can fall back to replication on non-divisible dims.
+    attn_dtype: str = "float32"   # bf16 scores halve attention HBM traffic
+    # parallel-block projection merge (command-r): one row-sharded GEMM for
+    # [attn_ctx ; mlp_hidden] -> d, i.e. ONE TP all-reduce per layer not two
+    merge_parallel_proj: bool = False
+    moe_impl: str = "gspmd"       # gspmd | ep_shard_map (§Perf MoE fix)
+    use_flash_kernel: bool = False  # Pallas flash attention (TPU; §Perf FA)
+    act_dp: Optional[Tuple[str, ...]] = None
+    act_tp: Optional[str] = None
+    mesh_sizes: Tuple[Tuple[str, int], ...] = ()
+
+    @property
+    def carry(self):
+        return jnp.bfloat16 if self.carry_dtype == "bfloat16" else jnp.float32
+
+    def axis_size(self, ax) -> int:
+        sizes = dict(self.mesh_sizes)
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= sizes.get(a, 1)
+            return n
+        return sizes.get(ax, 1)
+
+
+def chunked_ce(h: jax.Array, labels: jax.Array, head_fn, chunk: int):
+    """Cross-entropy without materializing (T, V) logits: scan over token
+    chunks, recomputing each chunk's logits in the backward pass (checkpoint).
+
+    h: (T, d) hidden states, labels: (T,). Returns mean CE."""
+    T = h.shape[0]
+    chunk = min(chunk, T) if chunk else T
+    pad = (-T) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+        labels = jnp.pad(labels, (0, pad), constant_values=-1)
+    nch = h.shape[0] // chunk
+    hc = h.reshape(nch, chunk, -1)
+    lc = labels.reshape(nch, chunk)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(acc, xs):
+        hh, ll = xs
+        logits = head_fn(hh).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        valid = ll >= 0
+        ce = -jnp.sum(jnp.where(
+            valid,
+            jnp.take_along_axis(logp, jnp.maximum(ll, 0)[:, None],
+                                axis=-1)[:, 0],
+            0.0))
+        return acc + ce, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros(()), (hc, lc))
+    return total / T
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig, policy: MiragePolicy,
+                 options: LMCallOptions = LMCallOptions()):
+        self.cfg = cfg
+        self.policy = policy
+        self.opt = options
+        kinds = set(cfg.layer_kinds())
+        assert len(kinds) == 1, kinds
+        self.kind = kinds.pop()
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def _layer_init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        ks = jax.random.split(key, 4)
+        if self.kind == "mamba":
+            return {"ln1": common.norm_init(cfg.d_model, cfg.norm_type),
+                    "mamba": mamba2.mamba_init(ks[0], cfg)}
+        p = {
+            "ln1": common.norm_init(cfg.d_model, cfg.norm_type),
+            "attn": attention.attn_init(
+                ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd,
+                cfg.qkv_bias, cfg.qk_norm),
+            "ln2": common.norm_init(cfg.d_model, cfg.norm_type),
+        }
+        if self.kind == "attn_moe":
+            p["moe"] = moe.moe_init(ks[1], cfg.d_model, cfg.n_experts,
+                                    cfg.moe_d_ff)
+        else:
+            p["mlp"] = common.mlp_init(ks[1], cfg.d_model, cfg.d_ff, "swiglu",
+                                       cfg.qkv_bias and False)
+        return p
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        layer_keys = jax.random.split(keys[0], cfg.n_layers)
+        params: Dict[str, Any] = {
+            "embed": common.embed_init(keys[1], cfg.vocab_size, cfg.d_model),
+            "layers": jax.vmap(self._layer_init)(layer_keys),
+            "final_norm": common.norm_init(cfg.d_model, cfg.norm_type),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = common.dense_init(
+                keys[2], cfg.d_model, cfg.vocab_size, False, scale=0.02)
+        if cfg.family == "hybrid":
+            hd = cfg.resolved_head_dim
+            sk = jax.random.split(keys[3], 4)
+            params["shared"] = {
+                "proj": common.dense_init(sk[0], 2 * cfg.d_model, cfg.d_model),
+                "ln1": common.norm_init(cfg.d_model, cfg.norm_type),
+                "attn": attention.attn_init(
+                    sk[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, hd,
+                    False, False),
+                "ln2": common.norm_init(cfg.d_model, cfg.norm_type),
+                "mlp": common.mlp_init(sk[2], cfg.d_model, cfg.d_ff),
+            }
+        if cfg.frontend is not None:
+            fk = jax.random.split(keys[4], 2)
+            params["frontend_proj"] = {
+                "fc1": common.dense_init(fk[0], cfg.frontend_dim, cfg.d_model),
+                "fc2": common.dense_init(fk[1], cfg.d_model, cfg.d_model),
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    # embedding / head
+    # ------------------------------------------------------------------
+
+    def _embed_inputs(self, params, tokens, extra_embeds):
+        h = common.embed(params["embed"], tokens)
+        n_prefix = 0
+        if extra_embeds is not None:
+            proj = params["frontend_proj"]
+            pe = common.dense(proj["fc2"],
+                              jax.nn.gelu(common.dense(proj["fc1"], extra_embeds,
+                                                       self.policy)),
+                              self.policy)
+            h = jnp.concatenate([pe, h], axis=1)
+            n_prefix = extra_embeds.shape[1]
+        return h, n_prefix
+
+    def _head(self, params, h):
+        h = common.norm(params["final_norm"], h, self.cfg.norm_eps,
+                        self.cfg.norm_type)
+        if self.cfg.tie_embeddings:
+            return common.unembed(params["embed"], h, self.policy)
+        return common.dense(params["lm_head"], h, self.policy)
+
+    # ------------------------------------------------------------------
+    # blocks
+    # ------------------------------------------------------------------
+
+    def _attn_mlp_block(self, lp, h, positions, aux):
+        cfg, policy, opt = self.cfg, self.policy, self.opt
+        hd = cfg.resolved_head_dim
+        parallel = cfg.arch_id.startswith("command-r")
+        merge = parallel and opt.merge_parallel_proj
+        n1 = common.norm(lp["ln1"], h, cfg.norm_eps, cfg.norm_type)
+        a, _ = attention.attn_apply(
+            lp["attn"], n1, policy, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=hd, positions=positions,
+            rope_theta=cfg.rope_theta, causal=True, window=cfg.sliding_window,
+            qk_norm=cfg.qk_norm, kv_repeat=opt.kv_repeat,
+            q_chunk=opt.q_chunk, kv_chunk=opt.kv_chunk, opt=opt,
+            skip_o_proj=merge)
+        if self.kind == "attn_moe":
+            h = h + a
+            n2 = common.norm(lp["ln2"], h, cfg.norm_eps, cfg.norm_type)
+            moe_fn = (moe.moe_apply_ep if opt.moe_impl == "ep_shard_map"
+                      else moe.moe_apply)
+            m, aux_l = moe_fn(
+                lp["moe"], n2, policy, n_experts=cfg.n_experts,
+                experts_per_token=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor, opt=self.opt)
+            return h + m, aux + aux_l
+        # command-r parallel block: attn and mlp both read ln1(h)
+        if parallel:
+            if merge:
+                # §Perf iteration 3: merge the two row-sharded projections
+                # (attn o-proj + mlp down-proj) into ONE GEMM -> one TP
+                # all-reduce per layer instead of two. Identical math: the
+                # concat dims align with g-groups and TP shard boundaries.
+                hh = (jax.nn.silu(common.dense(lp["mlp"]["gate"], n1, policy))
+                      * common.dense(lp["mlp"]["up"], n1, policy))
+                hh = common.constrain(hh, opt, ("dp", None, "tp"))
+                cat = jnp.concatenate([a, hh], axis=-1)
+                w_cat = jnp.concatenate(
+                    [lp["attn"]["o"]["w"], lp["mlp"]["down"]["w"]], axis=0)
+                from repro.core.gemm import mirage_matmul
+                return h + mirage_matmul(cat, w_cat, policy), aux
+            m = common.mlp(lp["mlp"], n1, policy, opt=self.opt)
+            return h + a + m, aux
+        h = h + a
+        n2 = common.norm(lp["ln2"], h, cfg.norm_eps, cfg.norm_type)
+        return h + common.mlp(lp["mlp"], n2, policy, opt=self.opt), aux
+
+    def _mamba_block(self, lp, h):
+        cfg = self.cfg
+        n1 = common.norm(lp["ln1"], h, cfg.norm_eps, cfg.norm_type)
+        return h + mamba2.mamba_apply(lp["mamba"], n1, cfg, self.policy,
+                                    opt=self.opt)
+
+    def _shared_block(self, sp, h, emb0, positions):
+        cfg, opt = self.cfg, self.opt
+        hd = cfg.resolved_head_dim
+        u = common.dense(sp["proj"], jnp.concatenate([h, emb0], axis=-1),
+                         self.policy)
+        n1 = common.norm(sp["ln1"], u, cfg.norm_eps, cfg.norm_type)
+        a, _ = attention.attn_apply(
+            sp["attn"], n1, self.policy, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=hd, positions=positions,
+            rope_theta=cfg.rope_theta, causal=True,
+            kv_repeat=opt.kv_repeat, q_chunk=opt.q_chunk,
+            kv_chunk=opt.kv_chunk)
+        u = u + a
+        n2 = common.norm(sp["ln2"], u, cfg.norm_eps, cfg.norm_type)
+        return h + u + common.mlp(sp["mlp"], n2, self.policy, opt=self.opt)
+
+    # ------------------------------------------------------------------
+    # forward (train / prefill logits over the full sequence)
+    # ------------------------------------------------------------------
+
+    def forward_hidden(self, params, tokens, extra_embeds=None):
+        """Run the layer stack; returns (hidden, aux, n_prefix)."""
+        cfg = self.cfg
+        h, n_prefix = self._embed_inputs(params, tokens, extra_embeds)
+        h = h.astype(self.opt.carry)
+        L = h.shape[1]
+        positions = jnp.arange(L)
+        emb0 = h
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def body(carry, xs):
+            hh, aux = carry
+            lp, idx = xs
+            if self.kind == "mamba":
+                hh = self._mamba_block(lp, hh)
+                if cfg.attn_every:
+                    hh = jax.lax.cond(
+                        (idx + 1) % cfg.attn_every == 0,
+                        lambda v: self._shared_block(params["shared"], v,
+                                                     emb0, positions),
+                        lambda v: v, hh)
+            else:
+                hh, aux = self._attn_mlp_block(lp, hh, positions, aux)
+            return (hh.astype(self.opt.carry), aux), None
+
+        if self.opt.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (h, aux), _ = jax.lax.scan(
+            body, (h, aux0),
+            (params["layers"], jnp.arange(cfg.n_layers)))
+        return h, aux, n_prefix
+
+    def forward(self, params, tokens, extra_embeds=None):
+        h, aux, n_prefix = self.forward_hidden(params, tokens, extra_embeds)
+        logits = self._head(params, h)
+        return logits, aux, n_prefix
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        h, aux, n_prefix = self.forward_hidden(
+            params, tokens, batch.get("patches"))
+        h = h[:, n_prefix:, :]
+        B, L, d = h.shape
+        if self.opt.ce_chunk:
+            head_fn = lambda hh: self._head(params, hh)
+            ce = chunked_ce(h.reshape(B * L, d), labels.reshape(B * L),
+                            head_fn, self.opt.ce_chunk)
+        else:
+            logits = self._head(params, h)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+            ce = -jnp.mean(ll)
+        total = ce + self.cfg.router_aux_loss * aux / max(self.cfg.n_layers, 1)
+        return total, {"ce": ce, "aux": aux,
+                       "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+
+    # ------------------------------------------------------------------
+    # serving: prefill + single-token decode with caches
+    # ------------------------------------------------------------------
+
+    def cache_spec(self, batch: int, cap: int) -> Dict[str, Any]:
+        """Abstract cache shapes (used by init_cache and the dry-run specs)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        nl = cfg.n_layers
+        spec: Dict[str, Any] = {"idx": ((), jnp.int32)}
+        if self.kind == "mamba":
+            H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+            conv_dim = cfg.d_inner + 2 * N
+            spec["ssm"] = ((nl, batch, H, P, N), jnp.float32)
+            spec["conv"] = ((nl, batch, cfg.ssm_conv - 1, conv_dim), jnp.float32)
+            if cfg.attn_every:
+                napp = cfg.n_layers // cfg.attn_every
+                kv_eff = cfg.n_kv_heads * self.opt.kv_repeat
+                cache_len = min(cap, cfg.sliding_window or cap)
+                spec["shared_k"] = ((napp, batch, cache_len, kv_eff, hd), jnp.float32)
+                spec["shared_v"] = ((napp, batch, cache_len, kv_eff, hd), jnp.float32)
+        else:
+            kv_eff = cfg.n_kv_heads * self.opt.kv_repeat
+            cache_len = min(cap, cfg.sliding_window or cap)
+            spec["k"] = ((nl, batch, cache_len, kv_eff, hd), jnp.float32)
+            spec["v"] = ((nl, batch, cache_len, kv_eff, hd), jnp.float32)
+        return spec
+
+    def init_cache(self, batch: int, cap: int) -> Dict[str, Any]:
+        return {k: (jnp.zeros(s, d) if k != "idx" else jnp.zeros((), jnp.int32))
+                for k, (s, d) in self.cache_spec(batch, cap).items()}
+
+    def prefill(self, params, tokens, cap: int, extra_embeds=None):
+        """Run the prompt, build the cache, return last-position logits."""
+        cfg = self.cfg
+        h, n_prefix = self._embed_inputs(params, tokens, extra_embeds)
+        B, L = h.shape[0], h.shape[1]
+        positions = jnp.arange(L)
+        emb0 = h
+        cache = self.init_cache(B, cap)
+        cache_len = min(cap, cfg.sliding_window or cap)
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if self.kind == "mamba":
+            def body(carry, xs):
+                hh, aux, shk, shv = carry
+                lp, idx = xs
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+                o, (st, cv) = mamba2.mamba_apply(
+                    lp["mamba"], n1, cfg, self.policy, return_cache=True,
+                    opt=self.opt)
+                hh = hh + o
+                if cfg.attn_every:
+                    napp = cfg.n_layers // cfg.attn_every
+                    app = (idx + 1) // cfg.attn_every - 1
+
+                    def do_shared(args):
+                        v, shk_, shv_ = args
+                        hd = cfg.resolved_head_dim
+                        u = common.dense(
+                            params["shared"]["proj"],
+                            jnp.concatenate([v, emb0], axis=-1), self.policy)
+                        n = common.norm(params["shared"]["ln1"], u,
+                                        cfg.norm_eps, cfg.norm_type)
+                        a, (kk, vv) = attention.attn_apply(
+                            params["shared"]["attn"], n, self.policy,
+                            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=hd, positions=positions,
+                            rope_theta=cfg.rope_theta, causal=True,
+                            kv_repeat=self.opt.kv_repeat,
+                            q_chunk=self.opt.q_chunk, kv_chunk=self.opt.kv_chunk, opt=self.opt)
+                        u = u + a
+                        n2 = common.norm(params["shared"]["ln2"], u,
+                                         cfg.norm_eps, cfg.norm_type)
+                        v = v + u + common.mlp(params["shared"]["mlp"], n2,
+                                               self.policy, opt=self.opt)
+                        kk = kk[:, -cache_len:]
+                        vv = vv[:, -cache_len:]
+                        pk = jnp.pad(kk, ((0, 0), (0, cache_len - kk.shape[1]),
+                                          (0, 0), (0, 0)))
+                        pv = jnp.pad(vv, ((0, 0), (0, cache_len - vv.shape[1]),
+                                          (0, 0), (0, 0)))
+                        shk_ = jax.lax.dynamic_update_index_in_dim(
+                            shk_, pk, jnp.maximum(app, 0), 0)
+                        shv_ = jax.lax.dynamic_update_index_in_dim(
+                            shv_, pv, jnp.maximum(app, 0), 0)
+                        return v, shk_, shv_
+
+                    hh, shk, shv = jax.lax.cond(
+                        (idx + 1) % cfg.attn_every == 0, do_shared,
+                        lambda args: args, (hh, shk, shv))
+                return (hh, aux, shk, shv), (st, cv)
+
+            shk = cache.get("shared_k", jnp.zeros((1,), jnp.float32))
+            shv = cache.get("shared_v", jnp.zeros((1,), jnp.float32))
+            (h, aux, shk, shv), (ssm, conv) = jax.lax.scan(
+                body, (h, aux0, shk, shv),
+                (params["layers"], jnp.arange(cfg.n_layers)))
+            cache["ssm"], cache["conv"] = ssm, conv
+            if cfg.attn_every:
+                cache["shared_k"], cache["shared_v"] = shk, shv
+        else:
+            def body(carry, xs):
+                hh, aux = carry
+                lp, idx = xs
+                hd = cfg.resolved_head_dim
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+                a, (kk, vv) = attention.attn_apply(
+                    lp["attn"], n1, self.policy, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                    positions=positions, rope_theta=cfg.rope_theta,
+                    causal=True, window=cfg.sliding_window,
+                    qk_norm=cfg.qk_norm, kv_repeat=self.opt.kv_repeat,
+                    q_chunk=self.opt.q_chunk, kv_chunk=self.opt.kv_chunk, opt=self.opt)
+                if self.kind == "attn_moe":
+                    hh = hh + a
+                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+                    m, aux_l = moe.moe_apply(
+                        lp["moe"], n2, self.policy, n_experts=cfg.n_experts,
+                        experts_per_token=cfg.experts_per_token,
+                        capacity_factor=cfg.capacity_factor, opt=self.opt)
+                    hh = hh + m
+                    aux = aux + aux_l
+                elif cfg.arch_id.startswith("command-r"):
+                    hh = hh + a + common.mlp(lp["mlp"], n1, self.policy, opt=self.opt)
+                else:
+                    hh = hh + a
+                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+                    hh = hh + common.mlp(lp["mlp"], n2, self.policy, opt=self.opt)
+                # keep the last cache_len positions (ring layout: pos % cache_len)
+                kk = kk[:, -cache_len:]
+                vv = vv[:, -cache_len:]
+                start = jnp.maximum(L - cache_len, 0)
+                roll = jnp.mod(start, cache_len)
+                kk = jnp.roll(kk, roll, axis=1)
+                vv = jnp.roll(vv, roll, axis=1)
+                pad_n = cache_len - kk.shape[1]
+                if pad_n:
+                    kk = jnp.pad(kk, ((0, 0), (0, pad_n), (0, 0), (0, 0)))
+                    vv = jnp.pad(vv, ((0, 0), (0, pad_n), (0, 0), (0, 0)))
+                return (hh, aux), (kk, vv)
+
+            (h, aux), (ks, vs) = jax.lax.scan(
+                body, (h, aux0), (params["layers"], jnp.arange(cfg.n_layers)))
+            cache["k"], cache["v"] = ks, vs
+
+        cache["idx"] = jnp.asarray(L, jnp.int32)
+        logits = self._head(params, h[:, -1:, :])
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B, 1). Returns (logits (B, 1, V), new cache)."""
+        cfg = self.cfg
+        h = common.embed(params["embed"], tokens)
+        emb0 = h
+        idx = cache["idx"]
+
+        if self.kind == "mamba":
+            def body(carry, xs):
+                hh, shk, shv = carry
+                lp, ssm_st, conv_st, li = xs
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+                o, ssm_st, conv_st = mamba2.mamba_decode_step(
+                    lp["mamba"], n1, cfg, self.policy, ssm_st, conv_st)
+                hh = hh + o
+                if cfg.attn_every:
+                    app = (li + 1) // cfg.attn_every - 1
+
+                    def do_shared(args):
+                        v, shk_, shv_ = args
+                        hd = cfg.resolved_head_dim
+                        u = common.dense(
+                            params["shared"]["proj"],
+                            jnp.concatenate([v, emb0], axis=-1), self.policy)
+                        n = common.norm(params["shared"]["ln1"], u,
+                                        cfg.norm_eps, cfg.norm_type)
+                        ck = shk_[jnp.maximum(app, 0)]
+                        cv = shv_[jnp.maximum(app, 0)]
+                        a, ck, cv = attention.attn_decode_step(
+                            params["shared"]["attn"], n, ck, cv, idx,
+                            self.policy, n_heads=cfg.n_heads,
+                            n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                            rope_theta=cfg.rope_theta,
+                            kv_repeat=self.opt.kv_repeat)
+                        shk_ = jax.lax.dynamic_update_index_in_dim(
+                            shk_, ck, jnp.maximum(app, 0), 0)
+                        shv_ = jax.lax.dynamic_update_index_in_dim(
+                            shv_, cv, jnp.maximum(app, 0), 0)
+                        u = u + a
+                        n2 = common.norm(params["shared"]["ln2"], u,
+                                         cfg.norm_eps, cfg.norm_type)
+                        return (v + u + common.mlp(params["shared"]["mlp"], n2,
+                                                   self.policy, opt=self.opt), shk_, shv_)
+
+                    hh, shk, shv = jax.lax.cond(
+                        (li + 1) % cfg.attn_every == 0, do_shared,
+                        lambda args: args, (hh, shk, shv))
+                return (hh, shk, shv), (ssm_st, conv_st)
+
+            shk = cache.get("shared_k", jnp.zeros((1,), jnp.float32))
+            shv = cache.get("shared_v", jnp.zeros((1,), jnp.float32))
+            (h, shk, shv), (ssm, conv) = jax.lax.scan(
+                body, (h, shk, shv),
+                (params["layers"], cache["ssm"], cache["conv"],
+                 jnp.arange(cfg.n_layers)))
+            cache = dict(cache, ssm=ssm, conv=conv)
+            if cfg.attn_every:
+                cache["shared_k"], cache["shared_v"] = shk, shv
+        else:
+            def body(hh, xs):
+                lp, ck, cv = xs
+                hd = cfg.resolved_head_dim
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+                a, ck, cv = attention.attn_decode_step(
+                    lp["attn"], n1, ck, cv, idx, self.policy,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=hd, rope_theta=cfg.rope_theta,
+                    window=cfg.sliding_window, qk_norm=cfg.qk_norm,
+                    kv_repeat=self.opt.kv_repeat)
+                if self.kind == "attn_moe":
+                    hh = hh + a
+                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+                    m, _ = moe.moe_apply(
+                        lp["moe"], n2, self.policy, n_experts=cfg.n_experts,
+                        experts_per_token=cfg.experts_per_token,
+                        capacity_factor=cfg.capacity_factor, opt=self.opt)
+                    hh = hh + m
+                elif cfg.arch_id.startswith("command-r"):
+                    hh = hh + a + common.mlp(lp["mlp"], n1, self.policy, opt=self.opt)
+                else:
+                    hh = hh + a
+                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+                    hh = hh + common.mlp(lp["mlp"], n2, self.policy, opt=self.opt)
+                return hh, (ck, cv)
+
+            h, (ks, vs) = jax.lax.scan(
+                body, h, (params["layers"], cache["k"], cache["v"]))
+            cache = dict(cache, k=ks, v=vs)
+
+        cache["idx"] = idx + 1
+        logits = self._head(params, h)
+        return logits, cache

@@ -1,0 +1,225 @@
+"""Mamba2 (SSD — state-space duality) block: chunked scan + O(1) decode.
+
+Follows Dao & Gu (arXiv:2405.21060) with n_groups=1 (the 2.7B config): the
+sequence is processed in chunks of Q tokens; within a chunk the quadratic
+"attention-like" form runs on the MXU, between chunks a (H, P, N) state is
+carried by ``lax.scan`` — so memory stays O(B*Q^2*H) regardless of L and the
+same recurrence yields the single-token decode step.
+
+Projections (in/out) go through the Mirage GEMM; the SSD recurrence itself is
+elementwise/small-einsum state math and stays FP32, mirroring the paper's
+"nonlinear ops stay digital FP32" split (DESIGN.md Section 4).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.precision import MiragePolicy
+from repro.models import common
+
+
+def mamba_init(key, cfg):
+    """Parameters for one Mamba2 block (n_groups = 1)."""
+    d = cfg.d_model
+    d_inner = cfg.d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N  # x, B, C share the causal conv
+    ks = jax.random.split(key, 6)
+    return {
+        # order: [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "in_proj": common.dense_init(ks[0], d, 2 * d_inner + 2 * N + H),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": common.norm_init(d_inner),
+        "out_proj": common.dense_init(ks[2], d_inner, d),
+    }
+
+
+def _split_proj(z_x_b_c_dt, d_inner: int, N: int, H: int):
+    z = z_x_b_c_dt[..., :d_inner]
+    x = z_x_b_c_dt[..., d_inner:2 * d_inner]
+    B = z_x_b_c_dt[..., 2 * d_inner:2 * d_inner + N]
+    C = z_x_b_c_dt[..., 2 * d_inner + N:2 * d_inner + 2 * N]
+    dt = z_x_b_c_dt[..., 2 * d_inner + 2 * N:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. u: (B, L, C); w: (K, C)."""
+    K = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    # stack K shifted views — cheap and fusion-friendly for small K
+    out = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum_decay(dA: jax.Array) -> jax.Array:
+    """L[i, j] = exp(sum_{j<m<=i} dA_m) for i >= j else 0. dA: (B, Q, H).
+    Returns (B, H, Q, Q)."""
+    Bt, Q, H = dA.shape
+    cs = jnp.cumsum(dA, axis=1)                       # (B, Q, H)
+    diff = cs[:, :, None, :] - cs[:, None, :, :]      # (B, Qi, Qj, H)
+    ii = jnp.arange(Q)
+    mask = (ii[:, None] >= ii[None, :])[None, :, :, None]
+    # mask BEFORE exp: masked lanes would overflow exp and poison gradients
+    Lmat = jnp.exp(jnp.where(mask, diff, -1e30))
+    return jnp.moveaxis(Lmat, 3, 1)                   # (B, H, Q, Q)
+
+
+def ssd_scan(
+    xh: jax.Array,      # (B, L, H, P)
+    dt: jax.Array,      # (B, L, H)  — post-softplus
+    A: jax.Array,       # (H,) negative
+    Bm: jax.Array,      # (B, L, N)
+    Cm: jax.Array,      # (B, L, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B, L, H, P), final_state (B, H, P, N))."""
+    Bt, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // Q
+    xc = xh.reshape(Bt, nc, Q, H, P)
+    dtc = dt.reshape(Bt, nc, Q, H)
+    Bc = Bm.reshape(Bt, nc, Q, N)
+    Cc = Cm.reshape(Bt, nc, Q, N)
+
+    state0 = (init_state if init_state is not None
+              else jnp.zeros((Bt, H, P, N), jnp.float32))
+
+    def step(state, inp):
+        xq, dtq, Bq, Cq = inp          # (B, Q, H, P), (B, Q, H), (B, Q, N) x2
+        dA = dtq * A                   # (B, Q, H)
+        cs = jnp.cumsum(dA, axis=1)
+        total = cs[:, -1, :]           # (B, H)
+        # --- intra-chunk (diagonal block): y = (CB^T . L) (dt x) ---
+        CB = jnp.einsum("bqn,bkn->bqk", Cq, Bq,
+                        preferred_element_type=jnp.float32)
+        Lmat = _segsum_decay(dA)       # (B, H, Q, Q)
+        y_diag = jnp.einsum("bqk,bhqk,bkh,bkhp->bqhp", CB, Lmat, dtq, xq,
+                            preferred_element_type=jnp.float32)
+        # --- inter-chunk: contribution of the carried state ---
+        y_off = jnp.einsum("bqn,bhpn->bqhp", Cq, state,
+                           preferred_element_type=jnp.float32)
+        y_off = y_off * jnp.exp(cs).transpose(0, 1, 2)[..., None]
+        # --- state update: decay old state, absorb this chunk ---
+        decay_to_end = jnp.exp(total[:, None, :] - cs)    # (B, Q, H)
+        new_state = (state * jnp.exp(total)[:, :, None, None]
+                     + jnp.einsum("bkn,bkh,bkhp->bhpn",
+                                  Bq, dtq * decay_to_end, xq,
+                                  preferred_element_type=jnp.float32))
+        return new_state, y_diag + y_off
+
+    final_state, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+         jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bt, nc * Q, H, P)[:, :L]
+    return y, final_state
+
+
+def ssd_reference(xh, dt, A, Bm, Cm):
+    """O(L) sequential oracle for tests: plain recurrence over tokens."""
+    Bt, L, H, P = xh.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(dt_t * A)                       # (B, H)
+        state = (state * decay[:, :, None, None]
+                 + jnp.einsum("bn,bh,bhp->bhpn", B_t, dt_t, x_t))
+        y = jnp.einsum("bn,bhpn->bhp", C_t, state)
+        return state, y
+
+    state0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def mamba_apply(p, x, cfg, policy: MiragePolicy,
+                init_state=None, conv_state=None, return_cache=False,
+                opt=None):
+    """Full Mamba2 block over a sequence. x: (B, L, d_model)."""
+    Bt, L, d = x.shape
+    d_inner, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    proj = common.dense(p["in_proj"], x, policy)
+    z, xi, Bm, Cm, dt = _split_proj(proj, d_inner, N, H)
+    # head-parallel layout: z/x/dt sharded over TP (head dim), B/C replicated
+    z = common.constrain(z, opt, ("dp", None, "tp"))
+    xi = common.constrain(xi, opt, ("dp", None, "tp"))
+    Bm = common.constrain(Bm, opt, ("dp", None, None))
+    Cm = common.constrain(Cm, opt, ("dp", None, None))
+    dt = common.constrain(dt, opt, ("dp", None, "tp"))
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    if conv_state is not None:
+        conv_src = jnp.concatenate([conv_state, conv_in], axis=1)
+        conv = _causal_conv(conv_src, p["conv_w"], p["conv_b"])[:, conv_state.shape[1]:]
+    else:
+        conv_src = conv_in
+        conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    conv = jax.nn.silu(conv)
+    xi = conv[..., :d_inner]
+    Bm = conv[..., d_inner:d_inner + N]
+    Cm = conv[..., d_inner + N:]
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(Bt, L, H, P)
+    xh = common.constrain(xh, opt, ("dp", None, "tp", None))
+    y, state = ssd_scan(xh, dt, A, Bm, Cm, cfg.ssm_chunk, init_state)
+    y = y + p["D"][None, None, :, None] * xh
+    y = common.constrain(y, opt, ("dp", None, "tp", None))
+    y = y.reshape(Bt, L, d_inner)
+    y = common.norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = common.dense(p["out_proj"], y, policy)
+    if return_cache:
+        K = cfg.ssm_conv
+        T = conv_src.shape[1]
+        new_conv_state = (conv_src[:, -(K - 1):, :] if T >= K - 1 else
+                          jnp.pad(conv_src, ((0, 0), (K - 1 - T, 0), (0, 0))))
+        return out, (state, new_conv_state)
+    return out
+
+
+def mamba_decode_step(p, x, cfg, policy: MiragePolicy, ssm_state, conv_state):
+    """One-token decode. x: (B, 1, d). ssm_state: (B, H, P, N);
+    conv_state: (B, K-1, conv_dim) of RAW (pre-conv) inputs."""
+    Bt = x.shape[0]
+    d_inner, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    proj = common.dense(p["in_proj"], x, policy)
+    z, xi, Bm, Cm, dt = _split_proj(proj, d_inner, N, H)
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)       # (B, 1, C)
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # (B, K, C)
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)[:, None, :]
+    new_conv_state = window[:, 1:, :]
+    xi = conv[..., :d_inner]
+    Bm = conv[..., d_inner:d_inner + N][:, 0]
+    Cm = conv[..., d_inner + N:][:, 0]
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]          # (B, H)
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(Bt, H, P)
+    decay = jnp.exp(dt * A)                                # (B, H)
+    ssm_state = (ssm_state * decay[:, :, None, None]
+                 + jnp.einsum("bn,bh,bhp->bhpn", Bm, dt, xh))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, ssm_state) + p["D"][None, :, None] * xh
+    y = y.reshape(Bt, 1, d_inner)
+    y = common.norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return common.dense(p["out_proj"], y, policy), ssm_state, new_conv_state

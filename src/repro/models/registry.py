@@ -1,0 +1,60 @@
+"""Model factory + abstract input specs for every (arch x shape) cell."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.precision import MiragePolicy, PAPER_POLICY
+from repro.models.encdec import EncDec
+from repro.models.lm import LM, LMCallOptions
+
+
+def build_model(cfg: ModelConfig, policy: MiragePolicy = PAPER_POLICY,
+                options: LMCallOptions = LMCallOptions()):
+    if cfg.is_encdec:
+        return EncDec(cfg, policy, options)
+    return LM(cfg, policy, options)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                options: LMCallOptions = LMCallOptions()) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: token batch (+ modality stubs). decode: one new token plus
+    the KV/SSM cache of ``seq_len`` (the cache is an *input* of serve_step).
+    """
+    B, L = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    model = build_model(cfg, options=options)
+
+    if cfg.is_encdec:
+        # encoder consumes `L` frames; decoder trains on L//8 target tokens
+        tgt = max(L // 8, 16)
+        if shape.kind == "train":
+            return {"frames": sd((B, L, cfg.frontend_dim), jnp.float32),
+                    "tokens": sd((B, tgt), jnp.int32),
+                    "labels": sd((B, tgt), jnp.int32)}
+        if shape.kind == "prefill":
+            return {"frames": sd((B, L, cfg.frontend_dim), jnp.float32),
+                    "tokens": sd((B, tgt), jnp.int32)}
+        cache = {k: sd(s, d) for k, (s, d)
+                 in model.cache_spec(B, tgt, L).items()}
+        return {"cache": cache, "tokens": sd((B, 1), jnp.int32)}
+
+    extra = {}
+    if cfg.frontend == "vit_stub":
+        extra["patches"] = sd((B, cfg.frontend_len, cfg.frontend_dim),
+                              jnp.float32)
+
+    if shape.kind == "train":
+        return {"tokens": sd((B, L), jnp.int32),
+                "labels": sd((B, L), jnp.int32), **extra}
+    if shape.kind == "prefill":
+        return {"tokens": sd((B, L), jnp.int32), **extra}
+    # decode: cache of seq_len capacity + one token
+    cache = {k: sd(s, d) for k, (s, d) in model.cache_spec(B, L).items()}
+    return {"cache": cache, "tokens": sd((B, 1), jnp.int32)}

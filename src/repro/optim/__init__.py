@@ -1,0 +1,4 @@
+"""Optimizers, schedules, gradient compression."""
+
+from repro.optim.optimizers import make_optimizer, adam_init, adam_update, sgdm_init, sgdm_update, clip_by_global_norm, global_norm
+from repro.optim import schedules, grad_compress

@@ -1,0 +1,62 @@
+"""BFP gradient compression with error feedback (beyond-paper feature).
+
+The paper's own numerics, reused as a *wire format* for data-parallel gradient
+reduction: gradients are BFP-quantized (shared-exponent groups, b_m mantissa
+bits) before the all-reduce, cutting DP traffic by ~32/(b_m+1) vs FP32 when
+packed. Error feedback (Karimireddy et al. 2019) accumulates the quantization
+residual locally so the compression bias vanishes over steps — property-tested
+in tests/test_grad_compress.py.
+
+Value-level simulation: we quantize-dequantize (so convergence behaviour is
+real) and account the compressed byte count analytically; bit-packing is a
+serialization detail the CPU container cannot exercise.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+
+
+def compress_tree(grads, b_m: int = 4, g: int = 16):
+    """Quantize every leaf to BFP(b_m, g) along its last axis."""
+    def q(x):
+        if x.ndim == 0:
+            return x
+        return bfp.bfp_fake_quant(x.astype(jnp.float32), b_m, g)
+    return jax.tree_util.tree_map(q, grads)
+
+
+def compress_with_error_feedback(grads, error_buf, b_m: int = 4, g: int = 16):
+    """Returns (quantized grads to reduce, new error buffer)."""
+    def step(gr, e):
+        if gr.ndim == 0:
+            return gr, e
+        corrected = gr.astype(jnp.float32) + e
+        qg = bfp.bfp_fake_quant(corrected, b_m, g)
+        return qg, corrected - qg
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error_buf)
+    out = [step(gr, e) for gr, e in zip(flat_g, flat_e)]
+    qs = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    es = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return qs, es
+
+
+def init_error_buffer(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def compressed_bytes_per_element(b_m: int, g: int) -> float:
+    """Wire cost: (b_m+1) mantissa bits per element + one 8-bit exponent per
+    group of g."""
+    return (b_m + 1 + 8.0 / g) / 8.0
+
+
+def compression_ratio(b_m: int = 4, g: int = 16) -> float:
+    return 4.0 / compressed_bytes_per_element(b_m, g)

@@ -1,0 +1,86 @@
+"""Optimizers with FP32 master weights (paper Eq. 4 + Section IV-A).
+
+The paper keeps an FP32 copy of the weights and applies updates in FP32 while
+all GEMMs run in BFP/RNS. Here the parameter pytree IS the FP32 master copy —
+Mirage quantization happens inside each GEMM — so SGD/Adam below are exactly
+the paper's update rule. Implemented as pure functions over pytrees (no optax
+dependency) so optimizer state shards like parameters (ZeRO-1 via sharding
+specs, not code changes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgdm_init(params):
+    return {"mom": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def sgdm_update(grads, state, params, lr, momentum=0.9, weight_decay=0.0):
+    """Paper's CNN recipe: SGD + momentum, FP32 updates (Eq. 4)."""
+    mom = jax.tree_util.tree_map(
+        lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m: (p - lr * (m + weight_decay * p)).astype(p.dtype),
+        params, mom)
+    return new_params, {"mom": mom, "count": state["count"] + 1}
+
+
+def adam_init(params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0):
+    """Adam/AdamW with FP32 moments (paper's transformer recipe)."""
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+    mhat_scale = 1.0 / (1.0 - b1 ** c)
+    vhat_scale = 1.0 / (1.0 - b2 ** c)
+
+    def upd(p, m_, v_):
+        step = lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+        return (p - step - lr * weight_decay * p).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}
+
+
+def make_optimizer(cfg: TrainConfig):
+    """Returns (init_fn, update_fn(grads, state, params, lr))."""
+    if cfg.optimizer == "sgdm":
+        return sgdm_init, lambda g, s, p, lr: sgdm_update(
+            g, s, p, lr, cfg.momentum, cfg.weight_decay)
+    if cfg.optimizer in ("adam", "adamw"):
+        wd = cfg.weight_decay if cfg.optimizer == "adamw" else 0.0
+        return adam_init, lambda g, s, p, lr: adam_update(
+            g, s, p, lr, cfg.beta1, cfg.beta2, 1e-8, wd)
+    raise ValueError(cfg.optimizer)

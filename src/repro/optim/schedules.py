@@ -1,0 +1,27 @@
+"""LR schedules: the paper's step decay (x0.1 every N epochs) + warmup-cosine."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def step_decay(base_lr: float, decay_every: int, factor: float = 0.1):
+    """Paper Section V-B: lr scaled down by 10 after each `decay_every` steps."""
+    def fn(step):
+        k = jnp.floor_divide(step, decay_every).astype(jnp.float32)
+        return base_lr * (factor ** k)
+    return fn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return fn
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.full((), base_lr, jnp.float32)

@@ -1,0 +1,236 @@
+"""Sharding rules: FSDP x TP x EP x SP over the production mesh.
+
+Logical roles:
+  fsdp  -> 'data'   (parameters + optimizer state sharded at rest; GSPMD
+                     inserts per-layer all-gathers — ZeRO-3 style)
+  tp    -> 'model'  (Megatron column/row GEMM sharding)
+  ep    -> 'model'  (expert dim of MoE weights/buffers when E % tp == 0)
+  dp    -> ('pod', 'data')  (batch; the pod axis is an outer DP axis)
+  sp    -> 'data'   (sequence axis of long-context decode caches)
+
+Every rule degrades gracefully: an axis is applied to a tensor dim only when
+the dim is divisible by the axis size, so odd head counts (qwen2's 14 heads,
+qwen3's 40) fall back to replication on that dim instead of failing — GSPMD
+then inserts the resharding collectives, which the roofline analysis makes
+visible (and the perf loop attacks).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _axsize(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= _axsize(mesh, a)
+        return n
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fit(mesh: Mesh, shape: Tuple[int, ...], want: Tuple[Any, ...]) -> P:
+    """Keep each requested axis only if the dim divides evenly."""
+    assert len(want) == len(shape), (shape, want)
+    out = []
+    for dim, ax in zip(shape, want):
+        if ax is None:
+            out.append(None)
+        elif dim % _axsize(mesh, ax) == 0 and _axsize(mesh, ax) > 1:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def tp_size(mesh: Mesh) -> int:
+    return _axsize(mesh, "model")
+
+
+def kv_repeat_for(cfg: ModelConfig, mesh: Mesh) -> int:
+    """Repeat KV heads so attention shards over the full TP degree (value-
+    identical; see tests). Only when head counts divide cleanly."""
+    tp = tp_size(mesh)
+    H, kv = cfg.n_heads, cfg.n_kv_heads
+    if cfg.family in ("ssm",):
+        return 1
+    if H % tp == 0 and kv < tp and tp % kv == 0:
+        return tp // kv
+    return 1
+
+
+# --------------------------------------------------------------------------
+# parameter specs (path-pattern -> dim roles)
+# --------------------------------------------------------------------------
+
+_PARAM_RULES = (
+    # (path regex, roles per dim)  — roles resolved below
+    (r"embed/emb$",            ("tp", "fsdp")),  # vocab-parallel
+    (r"lm_head/w$",            ("fsdp", "tp")),
+    (r"(attn|self_attn|cross_attn)/(q|k|v)/w$", ("fsdp", "tp")),
+    (r"(attn|self_attn|cross_attn)/o/w$",       ("tp", "fsdp")),
+    (r"(attn|self_attn|cross_attn)/(q|k|v)/b$", ("tp",)),
+    (r"(attn|self_attn|cross_attn)/o/b$",       (None,)),
+    (r"mlp/(gate|up)/w$",      ("fsdp", "tp")),
+    (r"mlp/down/w$",           ("tp", "fsdp")),
+    (r"mlp/(gate|up)/b$",      ("tp",)),
+    (r"mlp/down/b$",           (None,)),
+    (r"moe/router/w$",         ("fsdp", None)),
+    (r"moe/(gate|up)$",        ("ep", "fsdp", "tp_if_no_ep")),
+    (r"moe/down$",             ("ep", "tp_if_no_ep", "fsdp")),
+    (r"mamba/in_proj/w$",      ("fsdp", "tp")),
+    (r"mamba/out_proj/w$",     ("tp", "fsdp")),
+    (r"mamba/conv_w$",         (None, "tp")),
+    (r"frontend_proj/(fc1|fc2)?/?w$", ("fsdp", "tp")),
+    (r"frontend_proj/w$",      ("fsdp", "tp")),
+    (r"shared/proj/w$",        ("fsdp", "tp")),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(mesh: Mesh, cfg: ModelConfig, pathstr: str,
+               shape: Tuple[int, ...], stacked_layers: bool = True) -> P:
+    """Spec for one parameter leaf. Layer-stacked leaves (leading n_layers or
+    n_apps dim from vmapped init) get a leading None."""
+    # strip the known stacked prefix
+    lead_none = 0
+    core = shape
+    if pathstr.startswith(("layers/", "enc_layers/", "dec_layers/")) and len(shape) >= 1:
+        lead_none = 1
+        core = shape[1:]
+
+    roles: Optional[Tuple[Any, ...]] = None
+    for pat, r in _PARAM_RULES:
+        if re.search(pat, pathstr):
+            roles = r
+            break
+    if roles is None or len(roles) != len(core):
+        # norms, scalars, A_log, biases we didn't match: replicate
+        return P(*([None] * len(shape)))
+
+    ep_ok = cfg.n_experts > 0 and cfg.n_experts % tp_size(mesh) == 0
+    resolved = []
+    for role in roles:
+        if role == "fsdp":
+            resolved.append("data")
+        elif role == "tp":
+            resolved.append("model")
+        elif role == "ep":
+            resolved.append("model" if ep_ok else None)
+        elif role == "tp_if_no_ep":
+            resolved.append(None if ep_ok else "model")
+        else:
+            resolved.append(None)
+    spec = _fit(mesh, core, tuple(resolved))
+    return P(*([None] * lead_none + list(spec)))
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, params_shape_tree):
+    """NamedSharding tree for a (possibly abstract) parameter pytree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(mesh, cfg, _path_str(path),
+                                              tuple(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(one, params_shape_tree)
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+
+def batch_shardings(mesh: Mesh, cfg: ModelConfig, batch_tree):
+    """Token/label/frame/patch inputs: batch over (pod, data)."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _path_str(path)
+        if name.endswith("idx") or not shape:
+            return NamedSharding(mesh, P())
+        if name.split("/")[-1] in ("tokens", "labels"):
+            return NamedSharding(mesh, _fit(mesh, shape, (dp,) + (None,) * (len(shape) - 1)))
+        if name.split("/")[-1] in ("frames", "patches"):
+            return NamedSharding(mesh, _fit(mesh, shape, (dp,) + (None,) * (len(shape) - 1)))
+        return NamedSharding(mesh, cache_spec(mesh, cfg, name, shape))
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
+               shape: Tuple[int, ...]) -> P:
+    """KV/SSM cache leaves. Layout:
+      k/v/self_k/self_v/cross_k/cross_v/shared_k/shared_v:
+          (nl, B, S, kv_eff, hd) -> (None, dp, sp_if_B_unshardable, tp, None)
+      ssm:  (nl, B, H, P, N)     -> (None, dp, tp, None, None)
+      conv: (nl, B, K-1, C)      -> (None, dp, None, tp)
+    """
+    dp = dp_axes(mesh)
+    leaf = name.split("/")[-1]
+    if leaf == "idx" or not shape:
+        return P()
+    if leaf in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
+                "shared_k", "shared_v"):
+        nl, B, S, kv, hd = shape
+        b_ax = dp if B % _axsize(mesh, dp) == 0 else None
+        # SP: if batch can't use the data axis, shard the sequence dim there
+        s_ax = None if b_ax is not None else (
+            "data" if S % _axsize(mesh, "data") == 0 else None)
+        return _fit(mesh, shape, (None, b_ax, s_ax, "model", None))
+    if leaf == "ssm":
+        nl, B, H, Pd, N = shape
+        b_ax = dp if B % _axsize(mesh, dp) == 0 else None
+        return _fit(mesh, shape, (None, b_ax, "model", None, None))
+    if leaf == "conv":
+        nl, B, K, C = shape
+        b_ax = dp if B % _axsize(mesh, dp) == 0 else None
+        return _fit(mesh, shape, (None, b_ax, None, "model"))
+    return P(*([None] * len(shape)))
+
+
+def train_state_shardings(mesh: Mesh, cfg: ModelConfig, abstract_state):
+    """Shardings for {'params', 'opt': {'m','v','mom','count'}, 'step', 'err'}.
+    Optimizer moments and error-feedback buffers shard exactly like their
+    parameters (ZeRO-1 falls out of the fsdp component of the param specs)."""
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        keys = [k.key if hasattr(k, "key") else str(k) for k in path]
+        if keys[0] == "params":
+            sub = keys[1:]
+        elif keys[0] == "opt" and keys[1] in ("m", "v", "mom"):
+            sub = keys[2:]
+        elif keys[0] == "err":
+            sub = keys[1:]
+        else:
+            return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+        return NamedSharding(
+            mesh, param_spec(mesh, cfg, "/".join(sub), tuple(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(one, abstract_state)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

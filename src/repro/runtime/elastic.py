@@ -1,0 +1,126 @@
+"""Elastic scaling, preemption handling, straggler mitigation.
+
+At 1000+-node scale the failure model is: nodes die (restore on a smaller
+mesh), nodes come back (restore on a bigger mesh), the scheduler preempts
+(SIGTERM -> checkpoint -> exit), and individual hosts straggle (flag + skip).
+This module provides the host-side machinery; the numerical state lives in
+checkpoint/checkpointer.py whose restore is already mesh-elastic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> set a flag; the train loop checkpoints and exits
+    cleanly at the next step boundary instead of dying mid-write."""
+
+    def __init__(self, install: bool = True):
+        self.preempted = False
+        self._orig = {}
+        if install:
+            for sig in (signal.SIGTERM, signal.SIGINT):
+                try:
+                    self._orig[sig] = signal.signal(sig, self._handler)
+                except ValueError:
+                    pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.preempted = True
+
+    def uninstall(self):
+        for sig, h in self._orig.items():
+            signal.signal(sig, h)
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    min_devices: int = 1
+    reshard_on_restore: bool = True
+
+
+def current_world() -> int:
+    return jax.device_count()
+
+
+def elastic_restore(ckpt: Checkpointer, abstract_state, shardings,
+                    step: Optional[int] = None):
+    """Restore the latest checkpoint onto the CURRENT mesh. Because leaves are
+    stored unsharded (host numpy) and re-device_put with today's shardings,
+    this works across device-count changes (elastic up/down scale)."""
+    return ckpt.restore(abstract_state, step=step, shardings=shardings)
+
+
+class StragglerMitigator:
+    """Tracks per-step wall time; when a step exceeds ``factor`` x EMA more
+    than ``patience`` consecutive times, fires ``on_straggle`` (at cluster
+    scale: re-shard around the slow host / raise for the controller).
+
+    On a single host this demotes to monitoring + logging, but the hook is
+    what a production controller subscribes to."""
+
+    def __init__(self, factor: float = 2.0, patience: int = 3,
+                 on_straggle: Optional[Callable[[int, float], None]] = None):
+        self.factor = factor
+        self.patience = patience
+        self.on_straggle = on_straggle or (lambda step, dt: None)
+        self.ema = 0.0
+        self.beta = 0.9
+        self.consecutive = 0
+        self.events = 0
+
+    def record(self, step: int, dt: float) -> bool:
+        slow = self.ema > 0 and dt > self.factor * self.ema
+        if slow:
+            self.consecutive += 1
+            if self.consecutive >= self.patience:
+                self.events += 1
+                self.on_straggle(step, dt)
+                self.consecutive = 0
+        else:
+            self.consecutive = 0
+        self.ema = dt if self.ema == 0 else self.beta * self.ema + (1 - self.beta) * dt
+        return slow
+
+
+def fault_tolerant_train_loop(model, train_cfg, state, data, n_steps: int,
+                              ckpt: Checkpointer, ckpt_every: int = 50,
+                              log_fn=print, guard: Optional[PreemptionGuard] = None,
+                              straggler: Optional[StragglerMitigator] = None):
+    """Training loop with preemption-safe checkpointing + data-state capture.
+
+    The data pipeline state is stored in checkpoint metadata, so a restart
+    resumes on exactly the batch the failed run would have consumed next."""
+    import jax as _jax
+    from repro.runtime.trainer import make_train_step
+
+    step_fn = _jax.jit(make_train_step(model, train_cfg))
+    guard = guard or PreemptionGuard(install=False)
+    straggler = straggler or StragglerMitigator()
+    metrics = {}
+    for _ in range(n_steps):
+        batch = next(data)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        _jax.block_until_ready(metrics["loss"])
+        step = int(state["step"])
+        straggler.record(step, time.perf_counter() - t0)
+        if ckpt_every and step % ckpt_every == 0:
+            ckpt.save_async(state, step, metadata={"data": data.state()}
+                            if hasattr(data, "state") else None)
+        if guard.preempted:
+            log_fn(f"preempted at step {step}: checkpointing and exiting")
+            ckpt.wait()
+            ckpt.save(state, step, metadata={"data": data.state()}
+                      if hasattr(data, "state") else None)
+            break
+    ckpt.wait()
+    return state, metrics

@@ -1,0 +1,103 @@
+"""Serving runtime: continuous-batching decode loop over prefill/decode steps.
+
+Serving flow (paper Section V-D applies Mirage to inference — forward-only):
+  * requests enter a waiting queue;
+  * ``prefill`` runs per request (or batched per bucket) and parks the KV/SSM
+    cache in the batch slot;
+  * ``decode_step`` advances every active slot one token per tick;
+  * finished slots (EOS or max_tokens) retire and free capacity.
+
+On real hardware the jitted step functions carry the same in/out shardings
+the dry-run proves; the loop itself is host-side Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    max_tokens: int = 32
+    eos_id: Optional[int] = None
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class LMServer:
+    """Single-sequence-slot batched decoder (batch = len(slots))."""
+
+    def __init__(self, model, params, cap: int, batch_slots: int = 8,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.cap = cap
+        self.greedy = greedy
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.waiting: List[Request] = []
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, cap))
+        self._decode = jax.jit(model.decode_step)
+        self._caches: List[Any] = [None] * batch_slots
+        self.metrics = {"completed": 0, "tokens": 0, "ticks": 0}
+
+    def submit(self, req: Request):
+        req.t_enqueue = time.perf_counter()
+        self.waiting.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.waiting:
+                req = self.waiting.pop(0)
+                logits, cache = self._prefill(
+                    self.params, jnp.asarray(req.prompt)[None, :])
+                tok = int(jnp.argmax(logits[0, -1]))
+                req.tokens_out.append(tok)
+                req.t_first_token = time.perf_counter()
+                self.slots[i] = req
+                self._caches[i] = cache
+
+    def _retire(self, i: int):
+        req = self.slots[i]
+        req.t_done = time.perf_counter()
+        self.metrics["completed"] += 1
+        self.metrics["tokens"] += len(req.tokens_out)
+        self.slots[i] = None
+        self._caches[i] = None
+        return req
+
+    def tick(self) -> List[Request]:
+        """Admit waiting requests, decode one token for each active slot."""
+        self._admit()
+        done = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            last = jnp.asarray([[req.tokens_out[-1]]], jnp.int32)
+            logits, self._caches[i] = self._decode(
+                self.params, self._caches[i], last)
+            tok = int(jnp.argmax(logits[0, -1]))
+            req.tokens_out.append(tok)
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.tokens_out) >= req.max_tokens:
+                done.append(self._retire(i))
+        self.metrics["ticks"] += 1
+        return done
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished = []
+        for _ in range(max_ticks):
+            if not self.waiting and all(s is None for s in self.slots):
+                break
+            finished.extend(self.tick())
+        return finished

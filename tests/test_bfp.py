@@ -1,0 +1,94 @@
+"""BFP quantization invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bfp
+
+
+def test_quantize_shapes_and_padding():
+    x = jnp.arange(2 * 3 * 37, dtype=jnp.float32).reshape(2, 3, 37)
+    t = bfp.bfp_quantize(x, b_m=4, g=16)
+    assert t.mantissa.shape == (2, 3, 3, 16)  # 37 -> padded to 48 -> G=3
+    assert t.scale.shape == (2, 3, 3, 1)
+    back = bfp.bfp_dequantize(t)
+    assert back.shape == x.shape
+
+
+def test_mantissa_range():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32) * 100)
+    for b_m in (3, 4, 5, 6):
+        t = bfp.bfp_quantize(x, b_m=b_m, g=16)
+        q = np.asarray(t.mantissa)
+        assert np.all(np.abs(q) <= 2**b_m - 1)
+        assert np.all(q == np.round(q))  # integer-valued
+
+
+def test_scale_is_power_of_two():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    t = bfp.bfp_quantize(x, b_m=4, g=16)
+    s = np.asarray(t.scale)
+    e = np.log2(s)
+    np.testing.assert_allclose(e, np.round(e), atol=0)
+
+
+@pytest.mark.parametrize("rounding", ["nearest", "truncate"])
+def test_error_bound(rounding):
+    """|x - dq(q(x))| <= scale (truncate) or scale/2 (nearest), per element."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray((rng.normal(size=(16, 64)) * 10**rng.uniform(-3, 3, (16, 1))
+                     ).astype(np.float32))
+    t = bfp.bfp_quantize(x, b_m=4, g=16, rounding=rounding)
+    back = bfp.bfp_dequantize(t)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.asarray(t.scale)
+    bound = np.repeat(bound, 16, axis=-1).reshape(16, 64)
+    limit = bound * (0.5 if rounding == "nearest" else 1.0)
+    # clipping of the rounded-up max element can add at most one extra level
+    assert np.all(err <= limit + bound * (np.abs(np.asarray(t.mantissa)).reshape(16, 64) >= 15))
+
+
+def test_zero_group_is_exact():
+    x = jnp.zeros((2, 32), jnp.float32)
+    t = bfp.bfp_quantize(x, b_m=4, g=16)
+    np.testing.assert_array_equal(np.asarray(bfp.bfp_dequantize(t)), 0.0)
+
+
+def test_power_of_two_values_exact():
+    """Values on the quantization grid survive exactly. Group max 1.0 with
+    b_m=4 gives E=0, scale=2^-3: multiples of 0.125 up to 15/8 are exact."""
+    x = jnp.asarray([[1.0, 0.5, 0.25, 0.125, 1.875, -1.0, -0.5, 0.75] * 2],
+                    jnp.float32)
+    t = bfp.bfp_quantize(x, b_m=4, g=16)
+    np.testing.assert_allclose(np.asarray(bfp.bfp_dequantize(t)), np.asarray(x))
+
+
+def test_stochastic_rounding_unbiased():
+    key = jax.random.PRNGKey(0)
+    # with b_m=4 and group max 1+2^-6, scale=2^-3: value sits between levels
+    x = jnp.full((4096, 16), 1.0 + 2**-6, jnp.float32)
+    t = bfp.bfp_quantize(x, b_m=4, g=16, rounding="stochastic", key=key)
+    mean = float(np.asarray(bfp.bfp_dequantize(t)).mean())
+    assert abs(mean - (1.0 + 2**-6)) < 2e-3
+
+
+@settings(deadline=None, max_examples=100)
+@given(
+    b_m=st.sampled_from([3, 4, 5, 6]),
+    g=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_relative_error_property(b_m, g, seed):
+    """Per-element error <= 2^-b_m * group_max for round-to-nearest."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(3, g * 2)).astype(np.float32)
+    t = bfp.bfp_quantize(jnp.asarray(x), b_m=b_m, g=g)
+    back = np.asarray(bfp.bfp_dequantize(t))
+    gmax = np.abs(x.reshape(3, 2, g)).max(-1, keepdims=True)
+    err = np.abs(back - x).reshape(3, 2, g)
+    assert np.all(err <= bfp.bfp_error_bound(b_m) * np.maximum(gmax, 1e-30) * (1 + 1e-6))

@@ -1,0 +1,84 @@
+"""Structural checks for every (arch x shape) cell's abstract inputs —
+cheap (no compilation): shapes well-formed, caches consistent with model
+cache_spec, batch divisibility assumptions hold."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALL_SHAPES, ARCHS, cell_is_skipped
+from repro.models import build_model, input_specs
+from repro.models.lm import LMCallOptions
+
+CELLS = [(a, s) for a in sorted(ARCHS) for s in ALL_SHAPES]
+
+
+@pytest.mark.parametrize("arch_id,shape", CELLS,
+                         ids=[f"{a}-{s.name}" for a, s in CELLS])
+def test_input_specs_well_formed(arch_id, shape):
+    if cell_is_skipped(arch_id, shape.name):
+        pytest.skip(cell_is_skipped(arch_id, shape.name))
+    cfg = ARCHS[arch_id]
+    specs = input_specs(cfg, shape)
+    leaves = jax.tree_util.tree_leaves(specs)
+    assert leaves, (arch_id, shape.name)
+    for l in leaves:
+        assert isinstance(l, jax.ShapeDtypeStruct)
+        assert all(d >= 0 for d in l.shape)
+
+    if shape.kind == "train":
+        assert specs["tokens"].shape == specs["labels"].shape
+        if not cfg.is_encdec:
+            assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+    if shape.kind == "decode":
+        assert "cache" in specs
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+        # cache leaves must match the model's own cache_spec
+        model = build_model(cfg)
+        if cfg.is_encdec:
+            ms = model.cache_spec(shape.global_batch,
+                                  max(shape.seq_len // 8, 16), shape.seq_len)
+        else:
+            ms = model.cache_spec(shape.global_batch, shape.seq_len)
+        for k, (s, d) in ms.items():
+            assert specs["cache"][k].shape == tuple(s), (k, arch_id)
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_swa_caps_cache_capacity(arch_id):
+    """SWA archs must cap decode caches at the window (mixtral 500k decode
+    holds a 4096-slot ring, not a 524288 buffer)."""
+    cfg = ARCHS[arch_id]
+    if cfg.is_encdec:
+        pytest.skip("enc-dec")
+    model = build_model(cfg)
+    spec = model.cache_spec(1, 524_288)
+    if cfg.sliding_window:
+        assert spec["k"][0][2] == cfg.sliding_window
+    elif cfg.family in ("ssm", "hybrid"):
+        assert "ssm" in spec
+    else:
+        assert spec["k"][0][2] == 524_288
+
+
+def test_param_counts_match_published_scale():
+    """Total parameter counts are in the advertised ballpark."""
+    import math
+    expected = {
+        "command-r-plus-104b": (100e9, 112e9),
+        "qwen3-14b": (13e9, 16e9),
+        "mixtral-8x7b": (44e9, 48e9),
+        "qwen3-moe-30b-a3b": (28e9, 32e9),
+        "mamba2-2.7b": (2.4e9, 3.0e9),
+        "zamba2-2.7b": (2.3e9, 3.1e9),
+        "qwen2-1.5b": (1.2e9, 1.9e9),
+        "qwen2-0.5b": (0.4e9, 0.7e9),
+        "internvl2-2b": (1.6e9, 2.4e9),
+        "seamless-m4t-large-v2": (1.4e9, 2.6e9),
+    }
+    for arch_id, (lo, hi) in expected.items():
+        cfg = ARCHS[arch_id]
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        n = sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(params))
+        assert lo <= n <= hi, f"{arch_id}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"

@@ -1,0 +1,168 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes, dtypes, and block configurations."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.precision import special_moduli
+from repro.kernels import ref
+from repro.kernels.bfp_quantize import bfp_fake_quant_pallas
+from repro.kernels.mirage_gemm import mirage_gemm_pallas
+from repro.kernels.rns_matmul import rns_matmul_pallas
+
+
+def _rand(shape, seed=0, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=shape) * scale).astype(dtype))
+
+
+# --------------------------------------------------------------------------
+# bfp_quantize
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 16), (3, 37), (2, 5, 64), (1, 1), (7, 200)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_bfp_quant_kernel_matches_ref(shape, dtype):
+    x = _rand(shape, seed=hash(shape) % 2**31, dtype=dtype)
+    got = bfp_fake_quant_pallas(x, b_m=4, g=16, interpret=True)
+    want = ref.bfp_fake_quant_ref(x, b_m=4, g=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b_m,g", [(3, 8), (4, 16), (5, 32), (6, 16)])
+def test_bfp_quant_kernel_bm_g_sweep(b_m, g):
+    x = _rand((9, 3 * g + 5), seed=b_m * 10 + g)
+    got = bfp_fake_quant_pallas(x, b_m=b_m, g=g, interpret=True)
+    want = ref.bfp_fake_quant_ref(x, b_m=b_m, g=g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("rounding", ["nearest", "truncate"])
+def test_bfp_quant_kernel_rounding(rounding):
+    x = _rand((8, 64), seed=3)
+    got = bfp_fake_quant_pallas(x, rounding=rounding, interpret=True)
+    want = ref.bfp_fake_quant_ref(x, rounding=rounding)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bfp_quant_kernel_blocking_invariance():
+    """Different block shapes must not change results (groups are intact)."""
+    x = _rand((70, 300), seed=4)
+    a = bfp_fake_quant_pallas(x, block_rows=16, block_cols=64, interpret=True)
+    b = bfp_fake_quant_pallas(x, block_rows=256, block_cols=512, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bfp_quant_kernel_extreme_values():
+    x = jnp.asarray([[1e30, 1e-30, 0.0, -1e30] * 4, [65504.0, -2.0, 3e-8, 1.0] * 4],
+                    jnp.float32)
+    got = bfp_fake_quant_pallas(x, interpret=True)
+    want = ref.bfp_fake_quant_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# mirage_gemm (fused)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", [(4, 16, 4), (7, 37, 9), (32, 128, 16),
+                                 (1, 1, 1), (130, 257, 66)])
+def test_mirage_gemm_kernel_matches_ref(mkn):
+    m, k, n = mkn
+    x = _rand((m, k), seed=m * 100 + k)
+    w = _rand((k, n), seed=n * 100 + k)
+    got = mirage_gemm_pallas(x, w, interpret=True)
+    want = ref.mirage_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_mirage_gemm_kernel_dtypes(dtype):
+    x = _rand((8, 64), seed=11, dtype=dtype)
+    w = _rand((64, 8), seed=12, dtype=dtype)
+    got = mirage_gemm_pallas(x, w, interpret=True)
+    want = ref.mirage_gemm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_mirage_gemm_kernel_batched_input():
+    x = _rand((2, 3, 48), seed=13)
+    w = _rand((48, 5), seed=14)
+    got = mirage_gemm_pallas(x, w, interpret=True)
+    assert got.shape == (2, 3, 5)
+    want = ref.mirage_gemm_ref(x.reshape(-1, 48), w).reshape(2, 3, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_mirage_gemm_kernel_block_sweep():
+    x = _rand((50, 200), seed=15)
+    w = _rand((200, 30), seed=16)
+    outs = []
+    for bm_, bn, bk in [(16, 16, 32), (128, 128, 512), (32, 8, 16), (64, 32, 64)]:
+        outs.append(np.asarray(mirage_gemm_pallas(
+            x, w, block_m=bm_, block_n=bn, block_k=bk, interpret=True)))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+def test_mirage_gemm_kernel_matches_core_fast_path():
+    """The fused kernel and core.gemm mirage_fast agree (same numerics)."""
+    from repro.core import gemm
+    from repro.core.precision import get_policy
+    x = _rand((12, 96), seed=17)
+    w = _rand((96, 12), seed=18)
+    got = np.asarray(mirage_gemm_pallas(x, w, interpret=True))
+    want = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy("mirage")))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# rns_matmul
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [4, 5, 6])
+@pytest.mark.parametrize("mkn", [(4, 16, 4), (9, 33, 7), (32, 64, 16)])
+def test_rns_matmul_kernel_matches_ref(k, mkn):
+    m, kk, n = mkn
+    moduli = special_moduli(k)
+    rng = np.random.default_rng(k * 1000 + m)
+    xr = jnp.asarray(np.stack([rng.integers(0, mm, size=(m, kk)) for mm in moduli]),
+                     jnp.int32)
+    wr = jnp.asarray(np.stack([rng.integers(0, mm, size=(kk, n)) for mm in moduli]),
+                     jnp.int32)
+    got = rns_matmul_pallas(xr, wr, moduli, interpret=True)
+    want = ref.rns_matmul_ref(xr, wr, moduli)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rns_matmul_kernel_block_accumulation():
+    """K larger than block_k exercises the modular block accumulation."""
+    k = 5
+    moduli = special_moduli(k)
+    rng = np.random.default_rng(77)
+    xr = jnp.asarray(np.stack([rng.integers(0, mm, size=(8, 1024)) for mm in moduli]),
+                     jnp.int32)
+    wr = jnp.asarray(np.stack([rng.integers(0, mm, size=(1024, 8)) for mm in moduli]),
+                     jnp.int32)
+    got = rns_matmul_pallas(xr, wr, moduli, block_k=64, interpret=True)
+    want = ref.rns_matmul_ref(xr, wr, moduli)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rns_matmul_kernel_end_to_end_crt():
+    """Kernel residue GEMM + CRT == exact integer GEMM (hardware claim)."""
+    from repro.core import rns as rns_mod
+    k = 5
+    qmax = 15
+    rng = np.random.default_rng(5)
+    x = rng.integers(-qmax, qmax + 1, size=(6, 16)).astype(np.float32)
+    w = rng.integers(-qmax, qmax + 1, size=(16, 6)).astype(np.float32)
+    xr = rns_mod.to_rns_special(jnp.asarray(x), k)
+    wr = rns_mod.to_rns_special(jnp.asarray(w), k)
+    res = rns_matmul_pallas(xr, wr, special_moduli(k), interpret=True)
+    got = np.asarray(rns_mod.from_rns_special(res, k, signed=True))
+    np.testing.assert_array_equal(got, (x @ w).astype(np.int64))

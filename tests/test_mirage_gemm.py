@@ -1,0 +1,149 @@
+"""Mirage GEMM path equivalences and gradient behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gemm
+from repro.core.precision import MiragePolicy, get_policy
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("shape", [(5, 37, 9), (2, 16, 4), (7, 64, 13), (1, 1, 1)])
+def test_faithful_equals_rns(shape):
+    """The RNS hardware path reconstructs the integer group dots EXACTLY."""
+    m, k, n = shape
+    x, w = _rand((m, k), 1), _rand((k, n), 2)
+    pf = get_policy("mirage_faithful")
+    pr = get_policy("mirage_rns")
+    of = gemm.mirage_matmul_nograd(x, w, pf)
+    orn = gemm.mirage_matmul_nograd(x, w, pr)
+    np.testing.assert_array_equal(np.asarray(of), np.asarray(orn))
+
+
+@pytest.mark.parametrize("shape", [(5, 37, 9), (3, 128, 17), (2, 16, 4)])
+def test_fast_close_to_faithful(shape):
+    """Folding scales into mantissas == per-group accumulation, up to f32
+    accumulation order (exact when partials are exactly representable)."""
+    m, k, n = shape
+    x, w = _rand((m, k), 3), _rand((k, n), 4)
+    pf = get_policy("mirage_faithful")
+    pq = get_policy("mirage")
+    of = np.asarray(gemm.mirage_matmul_nograd(x, w, pf))
+    oq = np.asarray(gemm.mirage_matmul_nograd(x, w, pq))
+    np.testing.assert_allclose(oq, of, rtol=1e-6, atol=1e-6 * np.abs(of).max())
+
+
+def test_fast_exactly_equals_faithful_small_k():
+    """With one group the accumulation orders coincide -> bitwise equal."""
+    x, w = _rand((4, 16, ), 5), _rand((16, 8), 6)
+    of = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy("mirage_faithful")))
+    oq = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy("mirage")))
+    np.testing.assert_array_equal(oq, of)
+
+
+def test_bf16_compute_dtype_value_identical():
+    """BFP(b_m=4) values are exact in bfloat16 -> same products on the MXU."""
+    x, w = _rand((8, 64), 7), _rand((64, 8), 8)
+    p32 = get_policy("mirage")
+    p16 = get_policy("mirage", compute_dtype="bfloat16")
+    o32 = np.asarray(gemm.mirage_matmul_nograd(x, w, p32))
+    o16 = np.asarray(gemm.mirage_matmul_nograd(x, w, p16))
+    # products are exact in bf16; accumulation is f32 in both paths
+    np.testing.assert_allclose(o16, o32, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["fp32", "bf16", "int8", "mirage_fast"])
+def test_modes_approximate_fp32(mode):
+    x, w = _rand((6, 96), 9, 0.5), _rand((96, 10), 10, 0.5)
+    ref = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy("fp32")))
+    out = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy(mode if mode != "mirage_fast" else "mirage")))
+    rel = np.abs(out - ref).max() / (np.abs(ref).max() + 1e-9)
+    tol = {"fp32": 1e-7, "bf16": 2e-2, "int8": 4e-2, "mirage_fast": 0.12}[mode]
+    assert rel < tol, f"{mode}: rel err {rel}"
+
+
+def test_batched_leading_dims():
+    x = _rand((2, 3, 5, 32), 11)
+    w = _rand((32, 7), 12)
+    p = get_policy("mirage")
+    out = gemm.mirage_matmul_nograd(x, w, p)
+    assert out.shape == (2, 3, 5, 7)
+    ref = gemm.mirage_matmul_nograd(x.reshape(-1, 32), w, p).reshape(2, 3, 5, 7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+def test_custom_vjp_grads_close_to_fp32():
+    x, w = _rand((4, 48), 13, 0.3), _rand((48, 6), 14, 0.3)
+
+    def loss(xx, ww, policy):
+        return jnp.sum(gemm.mirage_matmul(xx, ww, policy) ** 2)
+
+    gx_ref, gw_ref = jax.grad(loss, argnums=(0, 1))(x, w, get_policy("fp32"))
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w, get_policy("mirage"))
+    for got, ref in ((gx, gx_ref), (gw, gw_ref)):
+        rel = np.abs(np.asarray(got) - np.asarray(ref)).max() / (np.abs(np.asarray(ref)).max() + 1e-9)
+        assert rel < 0.15, rel
+
+
+def test_custom_vjp_backward_is_quantized():
+    """The backward GEMMs must themselves be BFP-quantized (not FP32)."""
+    x, w = _rand((4, 48), 15), _rand((48, 6), 16)
+
+    def loss(xx, ww, policy):
+        return jnp.sum(gemm.mirage_matmul(xx, ww, policy))
+
+    # cotangent of ones: dX = 1 @ W^T quantized along N. With N=6 < g=16 the
+    # quantization of the all-ones cotangent is exact, but W columns get BFP'd:
+    gx_m = np.asarray(jax.grad(loss)(x, w, get_policy("mirage")))
+    gx_f = np.asarray(jax.grad(loss)(x, w, get_policy("fp32")))
+    assert not np.array_equal(gx_m, gx_f)  # quantization visibly applied
+    rel = np.abs(gx_m - gx_f).max() / np.abs(gx_f).max()
+    assert rel < 0.1
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    m=st.integers(1, 8), k=st.integers(1, 96), n=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_rns_equals_faithful(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    of = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy("mirage_faithful")))
+    orn = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy("mirage_rns")))
+    np.testing.assert_array_equal(of, orn)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    b_m=st.sampled_from([3, 4, 5]),
+    g=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_quantization_error_shrinks_with_bm(b_m, g, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 4)).astype(np.float32))
+    ref = np.asarray(gemm.mirage_matmul_nograd(x, w, get_policy("fp32")))
+    p = MiragePolicy(mode="mirage_fast", b_m=b_m, g=g, k=max(5, b_m + 2))
+    out = np.asarray(gemm.mirage_matmul_nograd(x, w, p))
+    rel = np.abs(out - ref).max() / (np.abs(ref).max() + 1e-9)
+    assert rel < 0.75 * 2.0 ** (-b_m) * np.sqrt(64) * 4  # loose analytic bound
+
+
+def test_jit_and_grad_compile():
+    x, w = _rand((4, 32), 17), _rand((32, 8), 18)
+    p = get_policy("mirage")
+    f = jax.jit(lambda a, b: gemm.mirage_matmul(a, b, p))
+    out = f(x, w)
+    assert out.shape == (4, 8)
+    g = jax.jit(jax.grad(lambda a, b: jnp.sum(gemm.mirage_matmul(a, b, p) ** 2)))
+    assert g(x, w).shape == x.shape

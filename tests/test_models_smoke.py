@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train-gradient step + one prefill/decode step on CPU,
+asserting output shapes and no NaNs. (Full configs are exercised only via
+the dry-run.)"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.precision import get_policy
+from repro.models import build_model
+from repro.models.lm import LMCallOptions
+
+POLICY = get_policy("mirage")
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch_for(cfg, B=2, L=32):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32),
+    }
+    if cfg.frontend == "vit_stub":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.frontend_dim)), jnp.float32)
+    if cfg.is_encdec:
+        batch = {
+            "frames": jnp.asarray(rng.normal(size=(B, L, cfg.frontend_dim)),
+                                  jnp.float32),
+            "tokens": batch["tokens"],
+            "labels": batch["labels"],
+        }
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Init each reduced model once per module."""
+    cache = {}
+
+    def get(arch_id):
+        if arch_id not in cache:
+            cfg = ARCHS[arch_id].reduced()
+            model = build_model(cfg, POLICY, LMCallOptions(q_chunk=16, kv_chunk=16))
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch_id] = (cfg, model, params)
+        return cache[arch_id]
+
+    return get
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_loss_and_grad_step(arch_id, built):
+    cfg, model, params = built(arch_id)
+    batch = _batch_for(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch_id}: loss={loss}"
+
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves), arch_id
+    # at least the embedding gradient must be nonzero
+    gnorm = sum(float(jnp.sum(l * l)) for l in leaves)
+    assert gnorm > 0, arch_id
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_prefill_then_decode(arch_id, built):
+    cfg, model, params = built(arch_id)
+    B, L, cap = 2, 16, 24
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32)
+
+    if cfg.is_encdec:
+        frames = jnp.asarray(rng.normal(size=(B, L, cfg.frontend_dim)), jnp.float32)
+        logits, cache = model.prefill(params, frames, tokens, cap)
+    elif cfg.frontend == "vit_stub":
+        patches = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_len, cfg.frontend_dim)), jnp.float32)
+        logits, cache = model.prefill(params, tokens, cap, extra_embeds=patches)
+    else:
+        logits, cache = model.prefill(params, tokens, cap)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits))), arch_id
+
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+    logits2, cache = model.decode_step(params, cache, nxt)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2))), arch_id
+    assert int(cache["idx"]) == (L if cfg.is_encdec else
+                                 L + (cfg.frontend_len if cfg.frontend == "vit_stub" else 0)) + 1
+
+
+@pytest.mark.parametrize("arch_id", ["qwen2-0.5b", "mamba2-2.7b", "mixtral-8x7b"])
+def test_decode_matches_forward(arch_id, built):
+    """Teacher-forced decode must agree with the full forward pass."""
+    cfg, model, params = built(arch_id)
+    B, L = 1, 12
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)), jnp.int32)
+    full_logits, _, _ = model.forward(params, tokens)
+
+    prefix = 6
+    logits, cache = model.prefill(params, tokens[:, :prefix], cap=L + 2)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1]), np.asarray(full_logits[:, prefix - 1]),
+        rtol=2e-3, atol=2e-3)
+    for t in range(prefix, L):
+        logits, cache = model.decode_step(params, cache, tokens[:, t:t + 1])
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, t]),
+            rtol=2e-3, atol=2e-3, err_msg=f"{arch_id} step {t}")
+
+
+def test_kv_repeat_is_value_identical():
+    """Repeating KV heads (for TP divisibility) must not change outputs."""
+    cfg = ARCHS["qwen3-14b"].reduced()
+    m1 = build_model(cfg, POLICY, LMCallOptions(kv_repeat=1, q_chunk=16, kv_chunk=16))
+    m2 = build_model(cfg, POLICY, LMCallOptions(kv_repeat=2, q_chunk=16, kv_chunk=16))
+    params = m1.init(jax.random.PRNGKey(3))
+    tokens = jnp.asarray(np.arange(2 * 16).reshape(2, 16) % cfg.vocab_size,
+                         jnp.int32)
+    l1, _, _ = m1.forward(params, tokens)
+    l2, _, _ = m2.forward(params, tokens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_swa_matches_full_attention_for_short_seq():
+    """With seq < window, SWA must equal full attention (mixtral check)."""
+    import dataclasses
+    cfg = ARCHS["mixtral-8x7b"].reduced()
+    cfg_full = dataclasses.replace(cfg, sliding_window=None)
+    m_swa = build_model(cfg, POLICY, LMCallOptions(q_chunk=16, kv_chunk=16))
+    m_full = build_model(cfg_full, POLICY, LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = m_swa.init(jax.random.PRNGKey(4))
+    tokens = jnp.asarray(np.arange(2 * 16).reshape(2, 16) % cfg.vocab_size,
+                         jnp.int32)
+    l1, _, _ = m_swa.forward(params, tokens)   # window=32 > L=16
+    l2, _, _ = m_full.forward(params, tokens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-6)

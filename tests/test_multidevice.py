@@ -1,0 +1,190 @@
+"""Multi-device semantics, via subprocesses with forced host devices (so the
+main pytest process keeps its single-device view).
+
+Covers: sharded-vs-single-device training equivalence, sharding-rule
+divisibility fallbacks, elastic checkpoint restore across meshes, and the
+mesh factory itself.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(py_src: str, n_dev: int = 4, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", py_src], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_training_matches_single_device():
+    """One train step on a 2x2 mesh == the same step on 1 device."""
+    src = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.configs.base import TrainConfig
+        from repro.core.precision import get_policy
+        from repro.models import build_model
+        from repro.models.lm import LMCallOptions
+        from repro.parallel import sharding as sh
+        from repro.runtime.trainer import init_train_state, make_train_step
+        from repro.launch.mesh import make_debug_mesh
+
+        cfg = get_config("qwen2-0.5b").reduced()
+        tc = TrainConfig(policy=get_policy("mirage"), lr=1e-3)
+        model = build_model(cfg, get_policy("mirage"),
+                            LMCallOptions(q_chunk=16, kv_chunk=16))
+        state = init_train_state(model, tc, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                                       jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)),
+                                       jnp.int32)}
+        step = make_train_step(model, tc)
+
+        # single device
+        s1, m1 = jax.jit(step)(state, batch)
+
+        # 2x2 mesh with the production sharding rules
+        mesh = make_debug_mesh(2, 2)
+        state_sh = sh.train_state_shardings(mesh, cfg, state)
+        batch_sh = sh.batch_shardings(mesh, cfg, batch)
+        with mesh:
+            s2, m2 = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None))(state, batch)
+        d = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree_util.tree_leaves(s1["params"]),
+            jax.tree_util.tree_leaves(s2["params"])))
+        loss_diff = abs(float(m1["loss"]) - float(m2["loss"]))
+        print("PARAM_DIFF", d, "LOSS_DIFF", loss_diff)
+        assert d < 5e-5, d
+        assert loss_diff < 1e-5, loss_diff
+    """)
+    out = _run(src, n_dev=4)
+    assert "PARAM_DIFF" in out
+
+
+def test_decode_step_sharded_matches_single():
+    src = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.core.precision import get_policy
+        from repro.models import build_model
+        from repro.models.lm import LMCallOptions
+        from repro.parallel import sharding as sh
+        from repro.launch.mesh import make_debug_mesh
+
+        cfg = get_config("mixtral-8x7b").reduced()
+        model = build_model(cfg, get_policy("mirage"),
+                            LMCallOptions(q_chunk=16, kv_chunk=16))
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 12)), jnp.int32)
+        logits, cache = jax.jit(lambda p, t: model.prefill(p, t, 16))(params, toks)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        l1, _ = jax.jit(model.decode_step)(params, cache, nxt)
+
+        mesh = make_debug_mesh(2, 2)
+        p_sh = sh.param_shardings(mesh, cfg, params)
+        c_sh = sh.batch_shardings(mesh, cfg, cache)
+        with mesh:
+            l2, _ = jax.jit(model.decode_step,
+                            in_shardings=(p_sh, c_sh, None))(params, cache, nxt)
+        diff = float(jnp.abs(l1 - l2).max())
+        print("LOGIT_DIFF", diff)
+        assert diff < 5e-4, diff
+    """)
+    out = _run(src, n_dev=4)
+    assert "LOGIT_DIFF" in out
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Checkpoint written under a 2x2 mesh restores onto 1x4 and 1x1."""
+    src = textwrap.dedent(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.checkpoint.checkpointer import Checkpointer
+        from repro.configs import get_config
+        from repro.configs.base import TrainConfig
+        from repro.core.precision import get_policy
+        from repro.models import build_model
+        from repro.models.lm import LMCallOptions
+        from repro.parallel import sharding as sh
+        from repro.runtime.trainer import init_train_state
+        from repro.launch.mesh import make_debug_mesh
+
+        cfg = get_config("qwen2-0.5b").reduced()
+        tc = TrainConfig(policy=get_policy("mirage"))
+        model = build_model(cfg, get_policy("mirage"),
+                            LMCallOptions(q_chunk=16, kv_chunk=16))
+        state = init_train_state(model, tc, jax.random.PRNGKey(0))
+
+        mesh_a = make_debug_mesh(2, 2)
+        sh_a = sh.train_state_shardings(mesh_a, cfg, state)
+        state_a = jax.tree_util.tree_map(jax.device_put, state, sh_a)
+        ck = Checkpointer({str(tmp_path)!r})
+        ck.save(state_a, step=1)
+
+        mesh_b = make_debug_mesh(1, 4)   # "elastic" new topology
+        sh_b = sh.train_state_shardings(mesh_b, cfg, state)
+        restored, _ = ck.restore(state, shardings=sh_b)
+        d = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree_util.tree_leaves(state["params"]),
+            jax.tree_util.tree_leaves(restored["params"])))
+        print("ELASTIC_DIFF", d)
+        assert d == 0.0
+    """)
+    out = _run(src, n_dev=4)
+    assert "ELASTIC_DIFF 0.0" in out
+
+
+def test_production_mesh_shapes():
+    src = textwrap.dedent("""
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        m2 = make_production_mesh(multi_pod=True)
+        print("SINGLE", m1.shape, "MULTI", m2.shape)
+        assert dict(m1.shape) == {"data": 16, "model": 16}
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        assert m1.size == 256 and m2.size == 512
+    """)
+    out = _run(src, n_dev=512, timeout=300)
+    assert "SINGLE" in out
+
+
+def test_param_spec_divisibility_fallback():
+    """Sharding rules must degrade to replication on non-divisible dims."""
+    src = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config
+        from repro.parallel import sharding as sh
+        from repro.launch.mesh import make_debug_mesh
+
+        mesh = make_debug_mesh(2, 2)
+        cfg = get_config("qwen2-0.5b")
+        # 14 heads * 64 = 896 divisible by 2 -> tp applies on flat dim
+        spec = sh.param_spec(mesh, cfg, "layers/attn/q/w", (24, 896, 896))
+        assert spec == P(None, "data", "model"), spec
+        # odd vocab (92553) must fall back to None on that dim
+        cfg2 = get_config("internvl2-2b")
+        spec2 = sh.param_spec(mesh, cfg2, "lm_head/w", (2048, 92553))
+        assert spec2 == P("data", None), spec2
+        # moduli-style tiny leaves replicate
+        spec3 = sh.param_spec(mesh, cfg, "layers/mamba/A_log", (24, 80))
+        assert spec3 == P(None, None), spec3
+        print("SPECS_OK")
+    """)
+    out = _run(src, n_dev=4)
+    assert "SPECS_OK" in out

@@ -1,0 +1,67 @@
+"""Analog noise + redundant-RNS error correction (paper §VII, beyond-paper)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import noise, rns
+from repro.core.precision import special_moduli
+
+
+def test_no_noise_is_identity():
+    moduli = special_moduli(5)
+    r = jnp.asarray(np.random.default_rng(0).integers(0, 31, (3, 8)), jnp.int32)
+    out = noise.inject_phase_noise(r, moduli, sigma=0.0,
+                                   key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(r))
+
+
+def test_noise_stays_in_range():
+    moduli = special_moduli(5)
+    rng = np.random.default_rng(1)
+    r = jnp.asarray(np.stack([rng.integers(0, m, 64) for m in moduli]),
+                    jnp.int32)
+    out = np.asarray(noise.inject_phase_noise(r, moduli, sigma=2.0,
+                                              key=jax.random.PRNGKey(1)))
+    for i, m in enumerate(moduli):
+        assert out[i].min() >= 0 and out[i].max() < m
+
+
+def test_small_noise_scales_up_through_crt():
+    """Paper §VII: one residue error becomes a LARGE integer error after
+    reconstruction — the motivation for RRNS."""
+    k = 5
+    x = 1234
+    r = np.array([[x % 31], [x % 32], [x % 33]], np.int32)
+    r_bad = r.copy()
+    r_bad[0, 0] = (r_bad[0, 0] + 1) % 31   # single phase-level error
+    good = int(np.asarray(rns.from_rns_special(jnp.asarray(r), k))[0])
+    bad = int(np.asarray(rns.from_rns_special(jnp.asarray(r_bad), k))[0])
+    assert good == x
+    assert abs(bad - x) > 100   # error amplified far beyond one level
+
+
+def test_rrns_corrects_single_residue_error():
+    """With 2 redundant moduli, majority decoding recovers the true value."""
+    base = list(special_moduli(5))          # 31, 32, 33
+    redundant = [29, 37]                    # co-prime extras
+    all_moduli = base + redundant
+    M = np.prod(base)
+    psi = (M - 1) // 2
+    rng = np.random.default_rng(2)
+    xs = rng.integers(-1000, 1000, size=6)
+    residues = np.stack([np.mod(xs, m) for m in all_moduli]).astype(np.int64)
+    # corrupt ONE residue of the first three values
+    residues[1, 0] = (residues[1, 0] + 3) % all_moduli[1]
+    residues[4, 1] = (residues[4, 1] + 1) % all_moduli[4]
+    residues[0, 2] = (residues[0, 2] + 7) % all_moduli[0]
+    decoded, corrected = noise.rrns_decode_np(residues, all_moduli,
+                                              n_required=3, psi=psi)
+    np.testing.assert_array_equal(decoded, xs)
+    assert corrected[0] and corrected[1] and corrected[2]
+    assert not corrected[3] and not corrected[5]
+
+
+def test_snr_requirement_monotonic():
+    assert noise.snr_requirement_db(33) > noise.snr_requirement_db(31)

@@ -1,0 +1,128 @@
+"""RNS arithmetic invariants (unit + hypothesis property tests)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rns
+from repro.core.precision import special_moduli
+
+
+KS = [3, 4, 5, 6, 8, 10]
+
+
+@pytest.mark.parametrize("k", KS)
+def test_special_moduli_coprime(k):
+    import math
+    m = special_moduli(k)
+    assert math.gcd(m[0], m[1]) == 1
+    assert math.gcd(m[1], m[2]) == 1
+    assert math.gcd(m[0], m[2]) == 1
+
+
+@pytest.mark.parametrize("k", KS)
+def test_roundtrip_exhaustive_small(k):
+    """from_rns(to_rns(X)) == X over a dense sweep of the signed range."""
+    M = np.prod(special_moduli(k))
+    psi = (M - 1) // 2
+    xs = np.linspace(-psi, psi, 2048).astype(np.int64)
+    xs = np.unique(np.concatenate([xs, [-psi, -1, 0, 1, psi]]))
+    res = rns.to_rns_special(jnp.asarray(xs, jnp.int32), k)
+    back = rns.from_rns_special(res, k, signed=True)
+    np.testing.assert_array_equal(np.asarray(back), xs)
+
+
+@pytest.mark.parametrize("k", [4, 5])
+def test_special_matches_generic(k):
+    moduli = special_moduli(k)
+    M = int(np.prod(moduli))
+    psi = (M - 1) // 2
+    rng = np.random.default_rng(0)
+    xs = rng.integers(-psi, psi + 1, size=512)
+    fast = np.asarray(rns.to_rns_special(jnp.asarray(xs, jnp.int32), k))
+    generic = np.stack([np.mod(xs, m) for m in moduli]).astype(np.int64)
+    np.testing.assert_array_equal(fast, generic)
+    back = rns.from_rns_generic_np(generic, moduli, signed=True)
+    np.testing.assert_array_equal(back, xs)
+
+
+@settings(deadline=None, max_examples=200)
+@given(
+    k=st.sampled_from([4, 5, 6, 8]),
+    x=st.integers(min_value=-(10**6), max_value=10**6),
+)
+def test_roundtrip_property(k, x):
+    M = int(np.prod(special_moduli(k)))
+    psi = (M - 1) // 2
+    x = x % (2 * psi + 1) - psi  # fold into the representable range
+    res = rns.to_rns_special(jnp.asarray([x], jnp.int32), k)
+    back = int(np.asarray(rns.from_rns_special(res, k))[0])
+    assert back == x
+
+
+@settings(deadline=None, max_examples=100)
+@given(
+    k=st.sampled_from([5, 6]),
+    a=st.integers(min_value=-100, max_value=100),
+    b=st.integers(min_value=-100, max_value=100),
+    c=st.integers(min_value=-500, max_value=500),
+)
+def test_closure_mac(k, a, b, c):
+    """to_rns(a*b + c) == mod-MAC on residues, within range."""
+    moduli = special_moduli(k)
+    M = int(np.prod(moduli))
+    psi = (M - 1) // 2
+    if abs(a * b + c) > psi:
+        return
+    ra = rns.to_rns_special(jnp.asarray([a], jnp.int32), k)
+    rb = rns.to_rns_special(jnp.asarray([b], jnp.int32), k)
+    rc = rns.to_rns_special(jnp.asarray([c], jnp.int32), k)
+    mac = jnp.stack(
+        [rns.mod_mac(ra[i], rb[i], rc[i], m) for i, m in enumerate(moduli)]
+    ).astype(jnp.int32)
+    got = int(np.asarray(rns.from_rns_special(mac, k))[0])
+    assert got == a * b + c
+
+
+@pytest.mark.parametrize("k", [4, 5, 6])
+@pytest.mark.parametrize("shape", [(3, 7, 5), (1, 16, 8), (4, 4, 4)])
+def test_rns_matmul_exact(k, shape):
+    """Residue GEMM + CRT == direct integer GEMM (the paper's core claim)."""
+    m, kk, n = shape
+    qmax = 15  # b_m = 4 mantissas
+    rng = np.random.default_rng(k * 100 + m)
+    x = rng.integers(-qmax, qmax + 1, size=(m, kk)).astype(np.float32)
+    w = rng.integers(-qmax, qmax + 1, size=(kk, n)).astype(np.float32)
+    expect = x @ w
+    psi = (int(np.prod(special_moduli(k))) - 1) // 2
+    if np.abs(expect).max() > psi:
+        pytest.skip("dot exceeds RNS range for this k")
+    got = np.asarray(rns.rns_dot_reconstruct(jnp.asarray(x), jnp.asarray(w), k))
+    np.testing.assert_array_equal(got, expect.astype(np.int64))
+
+
+def test_overflow_bound_adversarial():
+    """Eq. 10: the worst-case +/-qmax group dot stays inside [-psi, psi]."""
+    from repro.core.precision import MiragePolicy
+    p = MiragePolicy()  # b_m=4, g=16, k=5
+    qmax = p.mantissa_max
+    x = np.full((1, p.g), qmax, np.float32)
+    w = np.full((p.g, 1), qmax, np.float32)
+    dot = float((x @ w)[0, 0])
+    assert dot <= p.psi
+    got = np.asarray(rns.rns_dot_reconstruct(jnp.asarray(x), jnp.asarray(w), p.k))
+    assert got[0, 0] == dot
+    # and the negative extreme
+    got2 = np.asarray(rns.rns_dot_reconstruct(jnp.asarray(-x), jnp.asarray(w), p.k))
+    assert got2[0, 0] == -dot
+
+
+def test_mod_matmul_matches_numpy():
+    rng = np.random.default_rng(7)
+    for m in (31, 32, 33):
+        xr = rng.integers(0, m, size=(9, 33)).astype(np.int32)
+        wr = rng.integers(0, m, size=(33, 5)).astype(np.int32)
+        got = np.asarray(rns.mod_matmul(jnp.asarray(xr), jnp.asarray(wr), m))
+        expect = (xr.astype(np.int64) @ wr.astype(np.int64)) % m
+        np.testing.assert_array_equal(got.astype(np.int64), expect)

@@ -1,0 +1,96 @@
+"""Runtime layers: server continuous batching, schedules, straggler monitor,
+preemption-safe loop."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import get_policy
+from repro.models import build_model
+from repro.models.lm import LMCallOptions
+from repro.optim import schedules
+from repro.runtime.elastic import StragglerMitigator
+from repro.runtime.server import LMServer, Request
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg, get_policy("mirage"),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def test_server_completes_all_requests(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=2)
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        server.submit(Request(rid=rid,
+                              prompt=rng.integers(0, cfg.vocab_size, 8
+                                                  ).astype(np.int32),
+                              max_tokens=4))
+    finished = server.run_until_drained()
+    assert len(finished) == 5
+    assert all(len(r.tokens_out) == 4 for r in finished)
+    assert server.metrics["completed"] == 5
+
+
+def test_server_greedy_matches_manual_decode(served):
+    cfg, model, params = served
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+
+    server = LMServer(model, params, cap=24, batch_slots=1)
+    server.submit(Request(rid=0, prompt=prompt, max_tokens=3))
+    [req] = server.run_until_drained()
+
+    logits, cache = model.prefill(params, jnp.asarray(prompt)[None, :], 24)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    for _ in range(2):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert req.tokens_out == toks
+
+
+def test_eos_stops_generation(served):
+    cfg, model, params = served
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    # discover the first emitted token, then use it as EOS
+    s1 = LMServer(model, params, cap=24, batch_slots=1)
+    s1.submit(Request(rid=0, prompt=prompt, max_tokens=4))
+    [r1] = s1.run_until_drained()
+    eos = r1.tokens_out[1] if len(r1.tokens_out) > 1 else r1.tokens_out[0]
+    s2 = LMServer(model, params, cap=24, batch_slots=1)
+    s2.submit(Request(rid=0, prompt=prompt, max_tokens=10, eos_id=eos))
+    [r2] = s2.run_until_drained()
+    assert len(r2.tokens_out) <= 10
+    assert eos in r2.tokens_out
+
+
+def test_schedules():
+    step = schedules.step_decay(0.01, decay_every=20)
+    assert float(step(jnp.asarray(0))) == pytest.approx(0.01)
+    assert float(step(jnp.asarray(20))) == pytest.approx(0.001)
+    assert float(step(jnp.asarray(40))) == pytest.approx(0.0001)
+    wc = schedules.warmup_cosine(1.0, warmup=10, total=110)
+    assert float(wc(jnp.asarray(0))) == 0.0
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(wc(jnp.asarray(110))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_straggler_monitor():
+    events = []
+    sm = StragglerMitigator(factor=2.0, patience=2,
+                            on_straggle=lambda s, dt: events.append((s, dt)))
+    for i in range(10):
+        sm.record(i, 1.0)
+    assert sm.events == 0
+    sm.record(10, 5.0)
+    sm.record(11, 5.0)   # second consecutive slow step -> event
+    assert sm.events == 1 and len(events) == 1
