@@ -9,7 +9,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import gemm
+from repro.core import backends, gemm
 from repro.core.precision import get_policy
 from repro.kernels.bfp_quantize import bfp_fake_quant_pallas
 from repro.kernels.mirage_gemm import mirage_gemm_pallas
@@ -32,13 +32,12 @@ def main(print_fn=print):
     x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
 
-    for mode in ("fp32", "bf16", "int8", "mirage", "mirage_faithful",
-                 "mirage_rns"):
-        p = get_policy(mode if mode != "mirage" else "mirage")
-        if mode == "mirage":
-            p = get_policy("mirage")
-        else:
-            p = get_policy(mode)
+    # every registered backend, discovered from the registry (kernel-routed
+    # variants are exercised separately below / in bench_gemm.py)
+    for mode in backends.available_backends():
+        if mode == "mirage_rns_pallas":
+            continue  # interpret-mode Pallas: covered by the kernel rows
+        p = get_policy(mode)
         f = jax.jit(lambda a, b, pp=p: gemm.mirage_matmul_nograd(a, b, pp))
         us = _time(f, x, w)
         print_fn(f"ops,matmul_{mode}_{M}x{K}x{N},{us:.1f},us_per_call")

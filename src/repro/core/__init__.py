@@ -34,3 +34,11 @@ from repro.core.gemm import (
     mirage_matmul_nograd,
     quantize_operands,
 )
+from repro.core.bfp import bfp_quantize_contract
+from repro.core import backends
+from repro.core.backends import (
+    GemmBackend,
+    available_backends,
+    get_backend,
+    register_fn,
+)

@@ -1,0 +1,40 @@
+"""Pluggable GEMM backend registry.
+
+Importing this package registers every built-in backend; external code adds
+new modes with :func:`register` / :func:`register_fn` and they become
+reachable from ``MiragePolicy(mode=...)`` everywhere (models, trainer,
+launcher, benchmarks) without touching dispatch.
+
+    from repro.core import backends
+
+    @backends.register_fn("mirage_rns_noisy_rrns", supports_noise=True)
+    def _my_backend(x, w, policy, *, key=None):
+        ...
+"""
+
+from repro.core.backends.base import (
+    GemmBackend,
+    available_backends,
+    get_backend,
+    is_registered,
+    register,
+    register_fn,
+    resolve,
+)
+
+# Importing the implementation modules registers the built-in backends.
+from repro.core.backends import baselines   # noqa: F401  (fp32 / bf16 / int8)
+from repro.core.backends import mirage_fast      # noqa: F401
+from repro.core.backends import mirage_faithful  # noqa: F401
+from repro.core.backends import mirage_rns       # noqa: F401
+from repro.core.backends import reference        # noqa: F401
+
+__all__ = [
+    "GemmBackend",
+    "available_backends",
+    "get_backend",
+    "is_registered",
+    "register",
+    "register_fn",
+    "resolve",
+]

@@ -1,0 +1,100 @@
+"""GEMM backend protocol + registry.
+
+Every execution mode of ``mirage_matmul`` (baselines, BFP fast path, the
+hardware-faithful group-dot path, the full RNS path, future noisy/RRNS or
+Pallas-only variants) is a :class:`GemmBackend` registered here by name.
+``core.gemm`` dispatches on ``policy.mode`` through :func:`get_backend`, so
+new modes plug in by registration alone — no dispatch edits anywhere.
+
+A backend's ``fn`` has signature ``fn(x, w, policy, *, key=None)``:
+
+  x: (..., K) activations   w: (K, N) weights   policy: MiragePolicy
+  key: optional PRNG key, required only by stochastic backends (analog
+       noise injection, stochastic rounding). Deterministic backends
+       ignore it.
+
+Capability flags let consumers (trainer, launcher, benchmarks) reason
+about a mode without hard-coding mode-name string comparisons.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmBackend:
+    """A registered GEMM execution strategy.
+
+    Attributes:
+      name: registry key; ``MiragePolicy.mode`` strings resolve to this.
+      fn: forward implementation ``(x, w, policy, *, key=None) -> (..., N)``.
+      description: one-liner for ``--help`` style listings.
+      quantized: operands are quantized (not an exact-f32 baseline).
+      supports_weight_stationary: honours ``policy.assume_quantized_weights``
+        (weight operand already on the BFP grid; skips its own W quantize).
+      supports_noise: honours ``policy.noise_sigma`` via the ``key`` argument.
+      reference: seed/oracle implementation kept for parity testing — not a
+        deployment path.
+    """
+
+    name: str
+    fn: Callable[..., jax.Array]
+    description: str = ""
+    quantized: bool = True
+    supports_weight_stationary: bool = False
+    supports_noise: bool = False
+    reference: bool = False
+
+    def forward(self, x: jax.Array, w: jax.Array, policy,
+                key: Optional[jax.Array] = None) -> jax.Array:
+        return self.fn(x, w, policy, key=key)
+
+
+_REGISTRY: Dict[str, GemmBackend] = {}
+
+
+def register(backend: GemmBackend) -> GemmBackend:
+    """Register (or replace) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def register_fn(name: str, **flags):
+    """Decorator: register a plain forward function as a backend.
+
+    >>> @register_fn("my_mode", description="...")
+    ... def _my_mode(x, w, policy, *, key=None): ...
+    """
+
+    def deco(fn):
+        register(GemmBackend(name=name, fn=fn, **flags))
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> GemmBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no GEMM backend registered under {name!r}; "
+            f"available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def resolve(policy) -> GemmBackend:
+    """Backend for a policy's mode string."""
+    return get_backend(policy.mode)
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def is_registered(name: str) -> bool:
+    return name in _REGISTRY

@@ -1,0 +1,29 @@
+"""mirage_faithful: per-group integer dots + FP32 scale-accumulate,
+executed as group-batched dots instead of the seed's sequential fori_loop.
+
+Paper dataflow steps 2-9 with the RNS conversions elided exactly as the
+paper's own accuracy model does (Section IV-A). The group axis is the batch
+axis of the dot — the photonic core runs the groups in parallel across
+MMVMU rows, so this IS the hardware execution model, and it is what lets
+XLA emit one (or a few block-batched) large contractions instead of G tiny
+ones. Bit-identical to the seed fori_loop backend (see
+``backends.grouped`` for the exactness argument; parity-tested).
+"""
+
+from __future__ import annotations
+
+from repro.core.backends import grouped
+from repro.core.backends.base import register_fn
+
+
+@register_fn("mirage_faithful",
+             description="group-batched integer dots + FP32 scale-accumulate")
+def _matmul_mirage_faithful(x, w, policy, *, key=None):
+    qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
+    # Scales are powers of two and constant per group: folding them into the
+    # mantissas BEFORE the dot keeps every group dot exact (== integer dot
+    # then scale, bitwise) and turns the reduction into a plain stacked sum.
+    xv = qx * sx
+    wv = qw * sw
+    out = grouped.grouped_dot(xv, wv, policy.group_block)
+    return out.reshape(batch + (out.shape[-1],))

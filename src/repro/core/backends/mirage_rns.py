@@ -1,0 +1,123 @@
+"""mirage_rns: the full hardware path, group-batched.
+
+Forward conversion to the special moduli set -> per-modulus modular GEMM
+over all groups at once -> (optional) analog phase noise on the residue
+readout -> CRT reverse conversion -> FP32 scale-accumulate.
+
+The seed looped groups sequentially, converting and CRT-reconstructing
+(M, N) tiles G times; here conversion, the three residue contractions, and
+the CRT each run ONCE over group-major tensors, and the modular reductions
+use :func:`grouped.exact_mod` (mul/floor/select) instead of per-element
+fmod — bit-identical integers, far fewer libm calls.
+
+``policy.use_pallas`` routes the residue contraction through the
+``rns_matmul_pallas`` kernel by flattening the (modulus, group) axes into
+the kernel's modulus-major grid; residues are integers either way, so the
+kernel path matches the pure-jnp path exactly.
+
+``policy.noise_sigma > 0`` injects Gaussian phase noise on the residue
+outputs (paper Section VII) and requires an explicit PRNG ``key``; at
+sigma == 0 the path is a no-op (zero-noise fast path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise, rns
+from repro.core.backends import grouped
+from repro.core.backends.base import register_fn
+
+
+def _rns_blocked(xr, wr, sx, sw, policy, gb):
+    """Scan over gb-group blocks, running the FULL per-block pipeline
+    (residue dots -> CRT -> scale-accumulate) inside the scan body so the
+    per-modulus intermediate is bounded at (gb, M, N) — this is what makes
+    ``policy.group_block`` / the vectorize budget actually cap memory."""
+    nm, G, M, g = xr.shape
+    N = wr.shape[-1]
+    k = policy.k
+    moduli = policy.moduli
+    pad = (-G) % gb
+    if pad:
+        # zero groups: zero residues -> zero CRT value -> zero contribution
+        xr = jnp.pad(xr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        wr = jnp.pad(wr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sx = jnp.pad(sx, ((0, pad), (0, 0), (0, 0)))
+        sw = jnp.pad(sw, ((0, pad), (0, 0), (0, 0)))
+    nb = (G + pad) // gb
+    xs = (jnp.moveaxis(xr, 0, 1).reshape(nb, gb, nm, M, g),
+          jnp.moveaxis(wr, 0, 1).reshape(nb, gb, nm, g, N),
+          sx.reshape(nb, gb, M, 1), sw.reshape(nb, gb, 1, N))
+
+    def body(acc, blk):
+        xrb, wrb, sxb, swb = blk                   # group-blocked slices
+        res = jnp.stack(
+            [grouped.grouped_residue_dot(
+                xrb[:, i].astype(jnp.float32), wrb[:, i].astype(jnp.float32), m)
+             for i, m in enumerate(moduli)],
+            axis=0,
+        ).astype(jnp.int32)                        # (nm, gb, M, N)
+        p = rns.from_rns_special(res, k, signed=True).astype(jnp.float32)
+        return acc + jnp.sum(p * sxb * swb, axis=0), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((M, N), jnp.float32), xs)
+    return acc
+
+
+def _rns_forward(x, w, policy, key):
+    qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
+    k = policy.k
+    moduli = policy.moduli
+    G, M, _ = qx.shape
+    N = qw.shape[-1]
+    xr = rns.to_rns_special(qx, k)                 # (n_mod, G, M, g) int32
+    wr = rns.to_rns_special(qw, k)                 # (n_mod, G, g, N) int32
+    noisy = policy.noise_sigma > 0
+    if noisy and key is None:
+        raise ValueError(
+            "policy.noise_sigma > 0 requires an explicit PRNG key: "
+            "call mirage_matmul_nograd(x, w, policy, key=key) — the "
+            "differentiable mirage_matmul path is deterministic only")
+    gb = policy.group_block
+    if gb == 0:
+        # the vectorized path materializes the residue stack for EVERY
+        # modulus, so the budgeted intermediate is n_mod * (G, M, N)
+        single = (len(moduli) * G * M * N * 4
+                  <= grouped.VECTORIZE_BUDGET_BYTES)
+        gb = -1 if single else grouped.DEFAULT_GROUP_BLOCK
+    # Pallas and noise injection operate on the full residue tensor; the
+    # memory-bounded scan regime applies to the plain jnp path only.
+    if 0 < gb < G and not policy.use_pallas and not noisy:
+        out = _rns_blocked(xr, wr, sx, sw, policy, gb)
+        return out.reshape(batch + (N,))
+    if policy.use_pallas:
+        from repro.kernels import ops as kops
+        res = kops.rns_group_matmul(xr, wr, moduli,
+                                    interpret=policy.interpret)
+    else:
+        res = jnp.stack(
+            [grouped.grouped_residue_dot(
+                xr[i].astype(jnp.float32), wr[i].astype(jnp.float32), m)
+             for i, m in enumerate(moduli)],
+            axis=0,
+        ).astype(jnp.int32)                        # (n_mod, G, M, N)
+    if noisy:
+        res = noise.inject_phase_noise(res, moduli, policy.noise_sigma, key)
+    p = rns.from_rns_special(res, k, signed=True).astype(jnp.float32)
+    return grouped.scale_accumulate(p, sx, sw, batch)
+
+
+@register_fn("mirage_rns",
+             description="group-batched RNS path: residue GEMMs + CRT",
+             supports_noise=True)
+def _matmul_mirage_rns(x, w, policy, *, key=None):
+    return _rns_forward(x, w, policy, key)
+
+
+@register_fn("mirage_rns_pallas",
+             description="mirage_rns forced through the Pallas residue kernel",
+             supports_noise=True)
+def _matmul_mirage_rns_pallas(x, w, policy, *, key=None):
+    return _rns_forward(x, w, policy.replace(use_pallas=True), key)

@@ -1,0 +1,80 @@
+"""Seed fori_loop GEMM implementations, frozen as reference backends.
+
+These are the pre-registry implementations of the faithful and RNS paths,
+kept verbatim (sequential ``jax.lax.fori_loop`` over groups, transposed
+weight quantization, fmod-based modular reduction) as bit-exactness oracles
+for the vectorized backends and as the "seed" side of the
+``benchmarks/bench_gemm.py`` before/after comparison. Not deployment paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp, rns
+from repro.core.backends.base import register_fn
+
+
+def _per_group_operands(x, w, policy):
+    """Seed operand prep: (qx (..., G, g), sx (..., G, 1), qw (G, g, N),
+    sw (G, 1, N)) via quantizing w.T and transposing back."""
+    qxt = bfp.bfp_quantize(x, policy.b_m, policy.g, policy.rounding)
+    qwt = bfp.bfp_quantize(w.T, policy.b_m, policy.g, policy.rounding)
+    qw = qwt.mantissa.transpose(1, 2, 0)  # (N, G, g) -> (G, g, N)
+    sw = qwt.scale.transpose(1, 2, 0)     # (N, G, 1) -> (G, 1, N)
+    return qxt.mantissa, qxt.scale, qw, sw
+
+
+@register_fn("mirage_faithful_ref",
+             description="seed fori_loop faithful path (parity oracle)",
+             reference=True)
+def _matmul_mirage_faithful_ref(x, w, policy, *, key=None):
+    """Seed dataflow: sequential per-group integer dot + FP32 accumulation."""
+    qx, sx, qw, sw = _per_group_operands(x, w, policy)
+    G = qx.shape[-2]
+    N = qw.shape[-1]
+    out_shape = x.shape[:-1] + (N,)
+
+    def body(j, acc):
+        qxj = jax.lax.dynamic_index_in_dim(qx, j, axis=qx.ndim - 2, keepdims=False)
+        sxj = jax.lax.dynamic_index_in_dim(sx, j, axis=sx.ndim - 2, keepdims=False)
+        qwj = jax.lax.dynamic_index_in_dim(qw, j, axis=0, keepdims=False)
+        swj = jax.lax.dynamic_index_in_dim(sw, j, axis=0, keepdims=False)
+        # Exact integer dot product of one g-group (|.| <= g * qmax^2 <= psi).
+        p = jnp.matmul(qxj, qwj, preferred_element_type=jnp.float32)
+        return acc + p * sxj * swj[0]
+
+    acc0 = jnp.zeros(out_shape, jnp.float32)
+    return jax.lax.fori_loop(0, G, body, acc0)
+
+
+@register_fn("mirage_rns_ref",
+             description="seed fori_loop RNS path (parity oracle)",
+             reference=True)
+def _matmul_mirage_rns_ref(x, w, policy, *, key=None):
+    """Seed RNS path: per-group forward conversion -> per-modulus modular
+    GEMM -> CRT reverse conversion -> FP32 scale-accumulate."""
+    qx, sx, qw, sw = _per_group_operands(x, w, policy)
+    G = qx.shape[-2]
+    N = qw.shape[-1]
+    k = policy.k
+    moduli = policy.moduli
+    out_shape = x.shape[:-1] + (N,)
+
+    def body(j, acc):
+        qxj = jax.lax.dynamic_index_in_dim(qx, j, axis=qx.ndim - 2, keepdims=False)
+        sxj = jax.lax.dynamic_index_in_dim(sx, j, axis=sx.ndim - 2, keepdims=False)
+        qwj = jax.lax.dynamic_index_in_dim(qw, j, axis=0, keepdims=False)
+        swj = jax.lax.dynamic_index_in_dim(sw, j, axis=0, keepdims=False)
+        xr = rns.to_rns_special(qxj, k)            # (3, ..., g)
+        wr = rns.to_rns_special(qwj, k)            # (3, g, N)
+        res = jnp.stack(
+            [rns.mod_matmul(xr[i], wr[i], m) for i, m in enumerate(moduli)],
+            axis=0,
+        ).astype(jnp.int32)
+        p = rns.from_rns_special(res, k, signed=True).astype(jnp.float32)
+        return acc + p * sxj * swj[0]
+
+    acc0 = jnp.zeros(out_shape, jnp.float32)
+    return jax.lax.fori_loop(0, G, body, acc0)

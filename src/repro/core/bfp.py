@@ -47,6 +47,20 @@ def _exponent(maxabs: jax.Array) -> jax.Array:
     return jnp.where(maxabs > 0, e, jnp.zeros_like(e))
 
 
+def _exponent_bits(maxabs: jax.Array) -> jax.Array:
+    """floor(log2 |x|) via f32 exponent-field extraction.
+
+    Bit-identical to :func:`_exponent` for non-negative finite inputs
+    (subnormals are clamped to the smallest normal first, matching the
+    frexp path's tiny-clamp), but compiles to integer SIMD instead of a
+    libm frexp call — measurably faster on CPU for large tensors.
+    """
+    m = jnp.maximum(maxabs, jnp.finfo(jnp.float32).tiny)
+    bits = jax.lax.bitcast_convert_type(m.astype(jnp.float32), jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    return jnp.where(maxabs > 0, e, jnp.zeros_like(e))
+
+
 def _exp2_exact(e: jax.Array) -> jax.Array:
     """Exact 2^e for integer e, by constructing the f32 exponent field.
 
@@ -85,7 +99,7 @@ def bfp_quantize(
     x = x.astype(jnp.float32)
     xg, orig_k = _group_reshape(x, g)
     maxabs = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
-    e = _exponent(maxabs)
+    e = _exponent_bits(maxabs)  # == _exponent, minus the libm frexp call
     scale = _exp2_exact(e - (b_m - 1))
     qmax = float(2**b_m - 1)
     q = _round(xg / scale, rounding, key)
@@ -98,6 +112,34 @@ def bfp_dequantize(t: BFPTensor) -> jax.Array:
     xg = t.mantissa * t.scale
     flat = xg.reshape(xg.shape[:-2] + (xg.shape[-2] * xg.shape[-1],))
     return flat[..., : t.orig_k]
+
+
+def bfp_quantize_contract(
+    w: jax.Array,
+    b_m: int,
+    g: int,
+    rounding: str = "nearest",
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Quantize a weight operand ``w: (K, N)`` grouped along K (axis -2).
+
+    Transpose-free equivalent of ``bfp_quantize(w.T, ...)`` followed by
+    transposing mantissa/scale back to contraction-major layout: returns
+    ``(mantissa (G, g, N), scale (G, 1, N))`` with bit-identical values but
+    no (K, N) <-> (N, K) round-trip copies. This is the layout every
+    group-batched GEMM backend consumes directly.
+    """
+    w = w.astype(jnp.float32)
+    K, N = w.shape
+    pad = (-K) % g
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    wg = w.reshape((K + pad) // g, g, N)
+    maxabs = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)     # (G, 1, N)
+    scale = _exp2_exact(_exponent_bits(maxabs) - (b_m - 1))
+    qmax = float(2**b_m - 1)
+    q = jnp.clip(_round(wg / scale, rounding, key), -qmax, qmax)
+    return q, scale
 
 
 def bfp_fake_quant(

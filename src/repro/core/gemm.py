@@ -1,7 +1,8 @@
 """Mirage GEMM: BFP + RNS matrix multiplication with a quantized backward pass.
 
 This is the paper's contribution as a composable JAX op. ``mirage_matmul``
-executes ``x @ w`` under a :class:`MiragePolicy`:
+executes ``x @ w`` under a :class:`MiragePolicy`, dispatching on
+``policy.mode`` through the backend registry (``repro.core.backends``):
 
   fp32 / bf16 / int8       baselines the paper compares against
   mirage_fast              BFP-quantize both operands along the contraction
@@ -9,13 +10,21 @@ executes ``x @ w`` under a :class:`MiragePolicy`:
                            the mantissas, and run ONE MXU matmul. Value-exact
                            w.r.t. the faithful path whenever f32 accumulation
                            is exact (property-tested).
-  mirage_faithful          per-group integer dot products + FP32 partial
+  mirage_faithful          group-batched integer dot products + FP32 partial
                            accumulation (paper dataflow steps 2-9, with the
                            RNS conversions elided exactly as the paper's own
                            accuracy model does, Section IV-A).
   mirage_rns               the full hardware path: forward conversion to the
-                           special moduli set, per-modulus modular GEMM,
-                           CRT reverse conversion, FP32 scale-accumulate.
+                           special moduli set, per-modulus modular GEMM over
+                           all groups at once, CRT reverse conversion, FP32
+                           scale-accumulate. Optional Pallas kernel + analog
+                           noise injection.
+  mirage_rns_pallas        mirage_rns forced through the Pallas residue kernel.
+  *_ref                    the seed fori_loop implementations, frozen as
+                           parity oracles and benchmark baselines.
+
+New modes register themselves (``backends.register_fn``) and are reachable
+from every consumer without touching this module.
 
 Training: ``mirage_matmul`` has a ``custom_vjp`` so BOTH backward GEMMs
 (Eqs. 2-3) run the same quantized path, each BFP-grouped along its own
@@ -30,36 +39,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bfp, rns
+from repro.core import backends, bfp
 from repro.core.precision import MiragePolicy
 
 
 # --------------------------------------------------------------------------
-# Baselines
-# --------------------------------------------------------------------------
-
-def _matmul_fp32(x, w):
-    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32),
-                      preferred_element_type=jnp.float32)
-
-
-def _matmul_bf16(x, w):
-    return jnp.matmul(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
-                      preferred_element_type=jnp.float32)
-
-
-def _matmul_int8(x, w):
-    """Per-tensor symmetric int8 (the paper's INT8 systolic baseline)."""
-    sx = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
-    sw = jnp.maximum(jnp.max(jnp.abs(w)), 1e-30) / 127.0
-    qx = jnp.clip(jnp.round(x / sx), -127, 127)
-    qw = jnp.clip(jnp.round(w / sw), -127, 127)
-    acc = jnp.matmul(qx, qw, preferred_element_type=jnp.float32)
-    return acc * (sx * sw)
-
-
-# --------------------------------------------------------------------------
-# Mirage paths
+# Operand quantization helpers (public API, used by tests and tooling)
 # --------------------------------------------------------------------------
 
 def quantize_operands(
@@ -74,108 +59,13 @@ def quantize_operands(
     return qx, qwt
 
 
-def _fold_scales(q: bfp.BFPTensor) -> jax.Array:
-    """Dequantized values, padding INCLUDED (pad mantissas are zero)."""
-    xg = q.mantissa * q.scale
-    return xg.reshape(xg.shape[:-2] + (xg.shape[-2] * xg.shape[-1],))
+# --------------------------------------------------------------------------
+# Registry dispatch
+# --------------------------------------------------------------------------
 
-
-def _matmul_mirage_fast(x, w, policy: MiragePolicy):
-    if policy.use_pallas:
-        from repro.kernels import ops as kops
-        return kops.mirage_matmul_fused(x, w, policy)
-    dt = jnp.bfloat16 if policy.compute_dtype == "bfloat16" else jnp.float32
-    qx = bfp.bfp_quantize(x, policy.b_m, policy.g, policy.rounding)
-    xq = _fold_scales(qx)                      # (..., Kpad)
-    if policy.assume_quantized_weights:
-        # weight operand already on the BFP grid (weight-stationary quant:
-        # quantized once per step, reused across microbatches/remat/transpose)
-        wq = w
-        if xq.shape[-1] != w.shape[0]:         # padding from x grouping
-            wq = jnp.pad(w, ((0, xq.shape[-1] - w.shape[0]), (0, 0)))
-    else:
-        qwt = bfp.bfp_quantize(w.T, policy.b_m, policy.g, policy.rounding)
-        wq = _fold_scales(qwt).T               # (Kpad, N)
-        if wq.shape[0] != xq.shape[-1]:
-            wq = wq[: xq.shape[-1]]
-    return jnp.matmul(xq.astype(dt), wq.astype(dt),
-                      preferred_element_type=jnp.float32)
-
-
-def _per_group_operands(x, w, policy: MiragePolicy):
-    """Returns (qx, sx, qw, sw): mantissas/scales shaped for group-wise dots.
-
-    qx: (..., G, g)   sx: (..., G, 1)
-    qw: (G, g, N)     sw: (G, 1, N)
-    """
-    qxt, qwt = quantize_operands(x, w, policy)
-    qw = qwt.mantissa.transpose(1, 2, 0)  # (N, G, g) -> (G, g, N)
-    sw = qwt.scale.transpose(1, 2, 0)     # (N, G, 1) -> (G, 1, N)
-    return qxt.mantissa, qxt.scale, qw, sw
-
-
-def _matmul_mirage_faithful(x, w, policy: MiragePolicy):
-    """Paper dataflow: per-group integer dot + FP32 partial accumulation."""
-    qx, sx, qw, sw = _per_group_operands(x, w, policy)
-    G = qx.shape[-2]
-    N = qw.shape[-1]
-    out_shape = x.shape[:-1] + (N,)
-
-    def body(j, acc):
-        qxj = jax.lax.dynamic_index_in_dim(qx, j, axis=qx.ndim - 2, keepdims=False)
-        sxj = jax.lax.dynamic_index_in_dim(sx, j, axis=sx.ndim - 2, keepdims=False)
-        qwj = jax.lax.dynamic_index_in_dim(qw, j, axis=0, keepdims=False)
-        swj = jax.lax.dynamic_index_in_dim(sw, j, axis=0, keepdims=False)
-        # Exact integer dot product of one g-group (|.| <= g * qmax^2 <= psi).
-        p = jnp.matmul(qxj, qwj, preferred_element_type=jnp.float32)
-        return acc + p * sxj * swj[0]
-
-    acc0 = jnp.zeros(out_shape, jnp.float32)
-    return jax.lax.fori_loop(0, G, body, acc0)
-
-
-def _matmul_mirage_rns(x, w, policy: MiragePolicy):
-    """Full RNS hardware path: forward conversion -> per-modulus modular GEMM
-    per g-group -> CRT reverse conversion -> FP32 scale-accumulate."""
-    qx, sx, qw, sw = _per_group_operands(x, w, policy)
-    G = qx.shape[-2]
-    N = qw.shape[-1]
-    k = policy.k
-    moduli = policy.moduli
-    out_shape = x.shape[:-1] + (N,)
-
-    def body(j, acc):
-        qxj = jax.lax.dynamic_index_in_dim(qx, j, axis=qx.ndim - 2, keepdims=False)
-        sxj = jax.lax.dynamic_index_in_dim(sx, j, axis=sx.ndim - 2, keepdims=False)
-        qwj = jax.lax.dynamic_index_in_dim(qw, j, axis=0, keepdims=False)
-        swj = jax.lax.dynamic_index_in_dim(sw, j, axis=0, keepdims=False)
-        xr = rns.to_rns_special(qxj, k)            # (3, ..., g)
-        wr = rns.to_rns_special(qwj, k)            # (3, g, N)
-        res = jnp.stack(
-            [rns.mod_matmul(xr[i], wr[i], m) for i, m in enumerate(moduli)],
-            axis=0,
-        ).astype(jnp.int32)
-        p = rns.from_rns_special(res, k, signed=True).astype(jnp.float32)
-        return acc + p * sxj * swj[0]
-
-    acc0 = jnp.zeros(out_shape, jnp.float32)
-    return jax.lax.fori_loop(0, G, body, acc0)
-
-
-def _forward_impl(x: jax.Array, w: jax.Array, policy: MiragePolicy) -> jax.Array:
-    if policy.mode == "fp32":
-        return _matmul_fp32(x, w)
-    if policy.mode == "bf16":
-        return _matmul_bf16(x, w)
-    if policy.mode == "int8":
-        return _matmul_int8(x, w)
-    if policy.mode == "mirage_fast":
-        return _matmul_mirage_fast(x, w, policy)
-    if policy.mode == "mirage_faithful":
-        return _matmul_mirage_faithful(x, w, policy)
-    if policy.mode == "mirage_rns":
-        return _matmul_mirage_rns(x, w, policy)
-    raise ValueError(f"unknown mode {policy.mode!r}")
+def _forward_impl(x: jax.Array, w: jax.Array, policy: MiragePolicy,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+    return backends.resolve(policy).forward(x, w, policy, key=key)
 
 
 # --------------------------------------------------------------------------
@@ -211,6 +101,11 @@ def _mm_bwd(policy, residuals, gout):
 mirage_matmul.defvjp(_mm_fwd, _mm_bwd)
 
 
-def mirage_matmul_nograd(x, w, policy: MiragePolicy):
-    """Forward-only variant (serving paths); avoids residual bookkeeping."""
-    return _forward_impl(x, w, policy)
+def mirage_matmul_nograd(x, w, policy: MiragePolicy,
+                         key: Optional[jax.Array] = None):
+    """Forward-only variant (serving paths); avoids residual bookkeeping.
+
+    ``key`` seeds stochastic backends (``policy.noise_sigma > 0`` analog
+    noise); deterministic backends ignore it.
+    """
+    return _forward_impl(x, w, policy, key=key)

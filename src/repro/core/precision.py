@@ -18,8 +18,11 @@ GEMM_MODES = (
     "bf16",            # bfloat16 matmul, f32 accumulation (bfloat16 baseline)
     "int8",            # per-tensor symmetric int8 (paper's INT8 baseline)
     "mirage_fast",     # BFP quantize -> fold scales -> one MXU matmul
-    "mirage_faithful", # BFP quantize -> per-group integer dot + FP32 accumulate
-    "mirage_rns",      # full RNS path: residue GEMM per modulus + CRT per group
+    "mirage_faithful", # BFP quantize -> group-batched integer dots + FP32 acc
+    "mirage_rns",      # full RNS path: residue GEMMs per modulus + CRT
+    "mirage_rns_pallas",   # mirage_rns forced through the Pallas residue kernel
+    "mirage_faithful_ref", # seed fori_loop faithful path (parity oracle)
+    "mirage_rns_ref",      # seed fori_loop RNS path (parity oracle)
 )
 
 ROUNDING_MODES = ("nearest", "truncate", "stochastic")
@@ -71,8 +74,16 @@ class MiragePolicy:
         throughput on TPU.
       use_pallas: route the fast path through the fused Pallas kernel.
       interpret: run Pallas kernels in interpret mode (CPU container).
-      noise_sigma: optional analog phase-noise sigma (residue-level), Section VII.
+      noise_sigma: analog phase-noise sigma (residue-level), Section VII.
+        Honoured by backends with ``supports_noise``; requires an explicit
+        PRNG key through ``mirage_matmul_nograd(..., key=...)``.
       redundant_moduli: extra RRNS moduli for error correction (Section VII).
+      group_block: group-batched execution blocking for the faithful/RNS
+        backends. 0 = adaptive (one batched dot while the (G, M, N)
+        intermediate fits the vectorize budget, scan over group blocks
+        beyond); -1 = force the single batched dot; n > 0 = force n-group
+        blocks. The RNS backend's Pallas and noise-injection paths operate
+        on the full residue tensor and ignore blocking.
     """
 
     mode: str = "mirage_fast"
@@ -85,6 +96,7 @@ class MiragePolicy:
     interpret: bool = True
     noise_sigma: float = 0.0
     redundant_moduli: Tuple[int, ...] = ()
+    group_block: int = 0
     # Weight-stationary quantization: the weight operand is ALREADY on the
     # BFP grid (quantized once per step, like the photonic core programs a
     # tile once and keeps it stationary) — the GEMM then skips its weight-
@@ -93,7 +105,13 @@ class MiragePolicy:
 
     def __post_init__(self):
         if self.mode not in GEMM_MODES:
-            raise ValueError(f"mode {self.mode!r} not in {GEMM_MODES}")
+            # lazy import: custom modes registered with backends.register_fn
+            # are valid too (the registry imports this module at load time)
+            from repro.core import backends
+            if not backends.is_registered(self.mode):
+                raise ValueError(
+                    f"mode {self.mode!r} not in {GEMM_MODES} and not a "
+                    f"registered backend ({backends.available_backends()})")
         if self.rounding not in ROUNDING_MODES:
             raise ValueError(f"rounding {self.rounding!r} not in {ROUNDING_MODES}")
         if self.mode.startswith("mirage"):
@@ -139,14 +157,20 @@ FAITHFUL_POLICY = MiragePolicy(mode="mirage_faithful")
 RNS_POLICY = MiragePolicy(mode="mirage_rns")
 
 
+_POLICY_ALIASES = {"mirage": "mirage_fast"}
+
+
 def get_policy(name: str, **overrides) -> MiragePolicy:
+    """Policy for a mode name (any GEMM_MODES entry or registered backend)."""
+    mode = _POLICY_ALIASES.get(name, name)
     base = {
         "fp32": FP32_POLICY,
         "bf16": BF16_POLICY,
         "int8": INT8_POLICY,
-        "mirage": PAPER_POLICY,
         "mirage_fast": PAPER_POLICY,
         "mirage_faithful": FAITHFUL_POLICY,
         "mirage_rns": RNS_POLICY,
-    }[name]
+    }.get(mode)
+    if base is None:
+        base = MiragePolicy(mode=mode)  # validates via GEMM_MODES / registry
     return base.replace(**overrides) if overrides else base

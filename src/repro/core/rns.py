@@ -123,15 +123,32 @@ def from_rns_generic_np(res: np.ndarray, moduli: Sequence[int], signed: bool = T
 def mod_matmul(xr: jax.Array, wr: jax.Array, m: int) -> jax.Array:
     """(xr @ wr) mod m for non-negative residues.
 
-    Accumulates the exact integer dot product first (safe while
-    K * (m-1)^2 < 2^31 for int32, or < 2^24 for exact f32), then reduces once.
-    This equals the per-MAC modular accumulation the optical phase performs
-    (mod is a ring homomorphism). Inputs may be int32 or exact f32.
+    Accumulates exact integer partial dot products in f32 and reduces
+    ``mod m`` per partial. This equals the per-MAC modular accumulation the
+    optical phase performs (mod is a ring homomorphism). Inputs may be int32
+    or exact f32, batched on leading dims.
+
+    Exactness: a K-wide dot of residues is bounded by ``K * (m-1)^2``; f32
+    holds integers exactly only below 2^24, so the contraction dim is
+    chunked to keep every partial inside that window (mirroring the K-block
+    accumulation the Pallas kernel performs). The seed implementation
+    silently returned wrong residues once ``K * (m-1)^2 >= 2^24``.
     """
-    acc = jnp.matmul(
-        xr.astype(jnp.float32), wr.astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+    xf = xr.astype(jnp.float32)
+    wf = wr.astype(jnp.float32)
+    K = xf.shape[-1]
+    cap = max(1, ((1 << 24) - 1) // max(1, (m - 1) ** 2))
+    if K <= cap:
+        acc = jnp.matmul(xf, wf, preferred_element_type=jnp.float32)
+        return jnp.mod(acc, float(m))
+    acc = None
+    for k0 in range(0, K, cap):
+        part = jnp.mod(
+            jnp.matmul(xf[..., k0:k0 + cap], wf[..., k0:k0 + cap, :],
+                       preferred_element_type=jnp.float32),
+            float(m))
+        acc = part if acc is None else acc + part
+    # ceil(K/cap) partials < m each: far below the f32 exact window
     return jnp.mod(acc, float(m))
 
 

@@ -37,3 +37,25 @@ def rns_residue_matmul(x_res: jax.Array, w_res: jax.Array,
                        moduli: Tuple[int, ...],
                        interpret: bool = True) -> jax.Array:
     return rns_matmul_pallas(x_res, w_res, tuple(moduli), interpret=interpret)
+
+
+def rns_group_matmul(x_res: jax.Array, w_res: jax.Array,
+                     moduli: Tuple[int, ...],
+                     interpret: bool = True) -> jax.Array:
+    """Group-batched residue GEMM through the Pallas kernel.
+
+    x_res: (n_mod, G, M, g), w_res: (n_mod, G, g, N) -> (n_mod, G, M, N).
+
+    The kernel's grid is modulus-major with the modulus value streamed in as
+    a (1,)-blocked operand, so one compiled kernel serves any number of
+    "moduli" — flattening the (modulus, group) axes into n_mod * G slots
+    with each modulus repeated G times executes ALL per-group modular GEMMs
+    in a single pallas_call.
+    """
+    nm, G, M, g = x_res.shape
+    N = w_res.shape[-1]
+    xf = x_res.reshape(nm * G, M, g)
+    wf = w_res.reshape(nm * G, g, N)
+    flat_moduli = tuple(m for m in moduli for _ in range(G))
+    res = rns_matmul_pallas(xf, wf, flat_moduli, interpret=interpret)
+    return res.reshape(nm, G, M, N)

@@ -90,10 +90,13 @@ def policy_for(policy_name: str, shape, perf_level: int):
       5: + shard_map expert-parallel MoE dispatch; SSD chunk 64
       6: SSD chunk 32
     """
+    from repro.core import backends
+
     policy = get_policy(policy_name)
-    if perf_level >= 1 and policy.mode == "mirage_fast":
+    ws_capable = backends.resolve(policy).supports_weight_stationary
+    if perf_level >= 1 and ws_capable:
         policy = policy.replace(assume_quantized_weights=(shape.kind == "train"))
-    if perf_level >= 2 and policy.mode == "mirage_fast":
+    if perf_level >= 2 and ws_capable:
         policy = policy.replace(compute_dtype="bfloat16")
     return policy
 

@@ -38,7 +38,6 @@ _INSTR = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
 _CALLED_COMP = re.compile(r"(?:to_apply|body|condition|branch_computations|"
                           r"called_computations)=\{?%?([\w.\-, %]+)\}?")
-_OPERANDS = re.compile(r"\(([^)]*)\)")
 
 
 def _shape_bytes(text: str) -> int:
@@ -110,14 +109,24 @@ def parse_computations(hlo: str) -> Dict[str, Computation]:
         op = mop.group(1) if mop else "unknown"
         shape_part = rhs[:mop.start()] if mop else rhs
         out_bytes = _shape_bytes(shape_part)
-        # operand names within first (...) after op
+        # Operand names within the op's (...) group. Depending on jaxlib the
+        # printer emits bare "%name" or "f32[32,64]{1,0} %name" (and tuple
+        # shapes nest parens), so take the balanced paren group and pull the
+        # %-prefixed references — operand names are always %-prefixed.
         operands: List[str] = []
         if mop:
             after = rhs[mop.end() - 1:]
-            mo = _OPERANDS.match(after)
-            if mo:
-                operands = [t.strip().lstrip("%")
-                            for t in mo.group(1).split(",") if t.strip()]
+            depth = 0
+            end = len(after)
+            for i, ch in enumerate(after):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i + 1
+                        break
+            operands = re.findall(r"%([\w.\-]+)", after[:end])
         cur.instrs.append(Instr(name, op, out_bytes, rhs, operands, is_root))
     return comps
 

@@ -1,5 +1,11 @@
 """Shared functional layers. Every GEMM routes through ``dense`` -> Mirage.
 
+``dense``/``unembed`` execute through ``mirage_matmul``, which resolves
+``policy.mode`` in the GEMM backend registry (``repro.core.backends``) — so
+every model in the zoo picks up new registered backends (Pallas-routed RNS,
+noisy/RRNS variants, ...) from the policy string alone, with the quantized
+custom_vjp backward pass applying to all of them.
+
 Models are pure functions over parameter pytrees (nested dicts of jax arrays)
 so they compose with pjit/shard_map, scan-over-layers, and checkpointing
 without a framework dependency.

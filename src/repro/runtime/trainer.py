@@ -66,11 +66,16 @@ def make_train_step(model, train_cfg: TrainConfig,
     gradients are accumulated with lax.scan (constant memory in the number of
     microbatches; remat inside the model bounds activation memory).
     """
+    from repro.core import backends
+
     _, opt_update = make_optimizer(train_cfg)
     lr_schedule = lr_schedule or constant(train_cfg.lr)
     nmb = train_cfg.microbatches
+    # weight-stationary quantization applies when the GEMM backend declares
+    # it honours pre-quantized weight operands (capability flag, not a
+    # mode-name comparison — new registered backends opt in themselves)
     wsq = (train_cfg.weight_stationary_quant
-           and train_cfg.policy.mode == "mirage_fast")
+           and backends.resolve(train_cfg.policy).supports_weight_stationary)
     qdtype = (jnp.bfloat16 if train_cfg.quant_param_dtype == "bfloat16"
               else jnp.float32)
 

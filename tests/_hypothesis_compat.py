@@ -1,0 +1,44 @@
+"""Degrade hypothesis to per-test skips when it is not installed.
+
+Test modules import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly. With hypothesis present these are the real
+objects; without it, ``@given(...)`` wraps the test in a
+``pytest.importorskip("hypothesis")`` call so only the property tests skip
+(with a clear reason) while the rest of the suite collects and runs.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):  # noqa: D401
+        def deco(fn):
+            def skipper(*a, **k):
+                pytest.importorskip(
+                    "hypothesis",
+                    reason="property test requires hypothesis")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """st.integers(...), st.sampled_from(...), ... at decoration time."""
+
+        def __getattr__(self, name):
+            def strategy(*_a, **_k):
+                return None
+            return strategy
+
+    st = _StrategyStub()

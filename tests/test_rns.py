@@ -3,7 +3,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+# degrades to per-test skips when hypothesis is missing (see module)
+from _hypothesis_compat import given, settings, st
 
 from repro.core import rns
 from repro.core.precision import special_moduli
