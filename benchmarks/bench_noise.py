@@ -1,0 +1,85 @@
+"""Accuracy-vs-SNR campaign: analog channel + RRNS correction (§VII).
+
+  PYTHONPATH=src python -m benchmarks.bench_noise                 # full sweep
+  PYTHONPATH=src python -m benchmarks.bench_noise --quick         # CI smoke
+  PYTHONPATH=src python -m benchmarks.bench_noise --json out.json
+
+Sections (Fig. 10-style, cf. arXiv:2309.10759):
+  noise_gemm   relative GEMM error + corrupted-output fraction vs detector
+               SNR for mirage_rns_noisy (uncorrected) and mirage_rrns
+               (majority-decoded), referenced to noiseless mirage_rns
+  noise_train  small-LM final train loss vs SNR for the same two modes,
+               anchored by noiseless mirage_rns and fp32 runs
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.emit import BenchWriter
+from repro.analog import sweep
+
+
+def noise_gemm(print_fn=print, snr_dbs=sweep.DEFAULT_SNR_DBS,
+               shape=(32, 256, 32)):
+    print_fn("# Fig 10 analog: GEMM error vs detector SNR, +-RRNS correction")
+    rows = sweep.gemm_error_sweep(snr_dbs=snr_dbs, shape=shape)
+    for r in rows:
+        print_fn(f"noise_gemm,{r['mode']}_snr{r['snr_db']:g},"
+                 f"{r['rel_fro_err']:.5f},"
+                 f"corrupt_frac={r['corrupt_frac']:.5f}")
+    return rows
+
+
+def noise_train(print_fn=print, snr_dbs=(40.0, 50.0), steps=12):
+    print_fn("# train-loss vs SNR: RRNS recovers what the noisy path loses")
+    rows = sweep.train_loss_sweep(snr_dbs=snr_dbs, steps=steps)
+    for r in rows:
+        tag = (f"{r['mode']}_snr{r['snr_db']:g}" if r["snr_db"] is not None
+               else r["mode"])
+        print_fn(f"noise_train,{tag},{r['loss']:.4f},steps={steps}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: noise_gemm,noise_train")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as structured JSON")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny sweep (CI smoke): 3 SNR points, 4 train steps")
+    ap.add_argument("--steps", type=int, default=12,
+                    help="training steps per noise_train point")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    writer = BenchWriter()
+    t0 = time.time()
+    if args.quick:
+        gemm_snrs, train_snrs, steps = (40.0, 44.0, 48.0), (45.0,), 4
+        shape = (16, 128, 16)
+    else:
+        gemm_snrs, train_snrs, steps = (sweep.DEFAULT_SNR_DBS, (40.0, 50.0),
+                                        args.steps)
+        shape = (32, 256, 32)
+    # sections print CSV to stdout; the JSON gets the richer native rows
+    if want("noise_gemm"):
+        writer.add_rows(noise_gemm(print, snr_dbs=gemm_snrs, shape=shape))
+    if want("noise_train"):
+        writer.add_rows(noise_train(print, snr_dbs=train_snrs, steps=steps))
+    elapsed = time.time() - t0
+    print(f"# bench_noise done in {elapsed:.1f}s")
+    if args.json:
+        writer.write_json(args.json, argv=list(argv or sys.argv[1:]),
+                          elapsed_s=round(elapsed, 2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,94 @@
+"""Structured benchmark output: tee CSV lines to stdout AND collect JSON.
+
+Every bench section emits ``section,name,value[,extra]`` CSV lines through
+a ``print_fn`` (or plain ``print``). :class:`BenchWriter` is a drop-in
+``print_fn`` that forwards each line to a real stream and, in parallel,
+parses it into a structured row — so ``--json PATH`` works for every
+section without touching the sections themselves. It can also swallow raw
+row dicts (``add_rows``) from sections that are natively structured
+(``bench_noise``).
+
+JSON schema:
+    {"meta": {"argv": [...], "elapsed_s": ..., ...},
+     "rows": [{"section": ..., "name": ..., "value": ..., "extra": ...} |
+              <native row dict>, ...]}
+"""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Optional
+
+
+def _maybe_float(s: str):
+    try:
+        return float(s)
+    except ValueError:
+        return s
+
+
+class BenchWriter:
+    """print_fn-compatible collector of benchmark rows."""
+
+    def __init__(self, stream=None):
+        self.stream = stream if stream is not None else sys.stdout
+        self.rows: List[Dict] = []
+        self.meta: Dict = {}
+
+    def __call__(self, *args) -> None:
+        line = " ".join(str(a) for a in args)
+        print(line, file=self.stream)
+        self.record_line(line)
+
+    def record_line(self, line: str) -> None:
+        line = line.strip()
+        if not line or line.startswith("#"):
+            return
+        parts = line.split(",")
+        if len(parts) < 3:
+            return
+        self.rows.append({
+            "section": parts[0],
+            "name": parts[1],
+            "value": _maybe_float(parts[2]),
+            "extra": ",".join(parts[3:]),
+        })
+
+    def add_rows(self, rows: Iterable[Dict]) -> None:
+        self.rows.extend(rows)
+
+    @contextlib.contextmanager
+    def capture_stdout(self):
+        """Capture sections that print directly to stdout: everything still
+        reaches the terminal, CSV-shaped lines are also recorded."""
+        writer = self
+
+        class _Tee(io.TextIOBase):
+            def __init__(self):
+                self._buf = ""
+
+            def write(self, s):
+                writer.stream.write(s)
+                self._buf += s
+                while "\n" in self._buf:
+                    line, self._buf = self._buf.split("\n", 1)
+                    writer.record_line(line)
+                return len(s)
+
+            def flush(self):
+                writer.stream.flush()
+
+        with contextlib.redirect_stdout(_Tee()):
+            yield self
+
+    def write_json(self, path: str, **meta) -> None:
+        payload = {"meta": {**self.meta, **meta}, "rows": self.rows}
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(self.rows)} rows to {path}", file=self.stream)

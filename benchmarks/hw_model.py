@@ -22,35 +22,37 @@ import math
 from typing import Dict, List, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
-# Device constants (Section IV-B)
+# Device constants (Section IV-B) — canonical copies live in
+# repro.analog.device so the analog channel model (noise injection) and this
+# energy/area model can never drift apart; re-exported here for the bench
+# scripts that address them as hw_model attributes.
 # ---------------------------------------------------------------------------
 
-PHOTONIC_CLOCK_HZ = 10e9          # 10 GHz MVM rate
-DIGITAL_CLOCK_HZ = 1e9            # 1 GHz digital, x10 interleaved
-PS_PROGRAM_NS = 5.0               # phase-shifter settle per tile [3]
-MVM_NS = 0.1                      # one MVM per 0.1 ns
-
-PS_LOSS_DB = 0.04                 # 25um phase shifter loss
-MRR_LOSS_DB = 0.2                 # MRR insertion+propagation when coupled
-BEND_LOSS_DB = 0.01               # 180-degree bend
-COUPLER_LOSS_DB = 0.2             # laser-to-chip coupler
-LASER_EFF = 0.20                  # wall-plug efficiency
-DETECTOR_A_PER_W = 1.1
-TIA_J_PER_BIT = 57e-15
-MRR_TUNE_W = 0.3e-12              # electro-optic MRR switching power
-
-DAC6_W, DAC6_GSPS, DAC6_MM2 = 136e-3, 20e9, 0.072   # [27]
-ADC6_W, ADC6_GSPS, ADC6_MM2 = 23e-3, 24e9, 0.03     # [56]
-RNS_CONV_J = 0.48e-12             # per RNS-BNS conversion [21]
-RNS_CONV_MM2 = 1545.8e-6          # mm^2
-SRAM_BYTES = 3 * 8 * 2**20        # three 8MB arrays
-SRAM_PJ_PER_BYTE = 0.6            # 40nm 32kB-bank read energy estimate
-SRAM_MM2_PER_MB = 0.45            # 40nm SRAM compiler estimate
-
-# device geometry for area
-PS_LEN_UM = 25.0
-MRR_RADIUS_UM = 10.0
-WG_PITCH_UM = 5.0
+from repro.analog.device import (  # noqa: E402,F401
+    PHOTONIC_CLOCK_HZ,
+    DIGITAL_CLOCK_HZ,
+    PS_PROGRAM_NS,
+    MVM_NS,
+    PS_LOSS_DB,
+    MRR_LOSS_DB,
+    BEND_LOSS_DB,
+    COUPLER_LOSS_DB,
+    LASER_EFF,
+    DETECTOR_A_PER_W,
+    TIA_J_PER_BIT,
+    MRR_TUNE_W,
+    DAC6_W, DAC6_GSPS, DAC6_MM2,
+    ADC6_W, ADC6_GSPS, ADC6_MM2,
+    RNS_CONV_J,
+    RNS_CONV_MM2,
+    SRAM_BYTES,
+    SRAM_PJ_PER_BYTE,
+    SRAM_MM2_PER_MB,
+    PS_LEN_UM,
+    MRR_RADIUS_UM,
+    WG_PITCH_UM,
+    P_RX_FLOOR_W,
+)
 
 # Published Table II constants (the paper's own synthesis results)
 SYSTOLIC_FORMATS = {
@@ -185,9 +187,6 @@ class MirageHW:
 
     def peak_macs_per_s(self) -> float:
         return PHOTONIC_CLOCK_HZ * self.n_units * self.rows * self.g
-
-
-P_RX_FLOOR_W = 1e-9   # ~1 nW: shot-noise-limited receiver floor at 10 GHz
 
 
 def calibrate_p_rx(hw: MirageHW = MirageHW()) -> float:

@@ -2,14 +2,18 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only table1,fig8
+  PYTHONPATH=src python -m benchmarks.run --json results/bench.json
 
 Output: ``name,value,derived`` CSV lines per section, plus a Roofline dump
 if results/dryrun_baseline.json exists (produced by repro.launch.dryrun).
+``--json PATH`` additionally writes every CSV row as structured JSON
+(``benchmarks.emit.BenchWriter``) so trajectories are machine-readable.
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import sys
@@ -38,39 +42,61 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,fig5a,fig5b,fig6,fig7,"
-                         "fig8,fig9,table3,ops,roofline")
+                         "fig8,fig9,table3,ops,noise,roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every row as structured JSON")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="training steps for table1/fig5a (CI smoke uses a "
+                         "small value; default: each section's own)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     def want(*names):
         return only is None or bool(only.intersection(names))
 
+    from benchmarks.emit import BenchWriter
+    writer = BenchWriter()
     t0 = time.time()
-    from benchmarks import bench_accuracy, bench_dataflow, bench_gemm, bench_ops
+    from benchmarks import (bench_accuracy, bench_dataflow, bench_gemm,
+                            bench_noise, bench_ops)
 
-    if want("table2"):
-        bench_gemm.table_ii()
-    if want("fig5b"):
-        bench_gemm.fig_5b()
-    if want("fig9"):
-        bench_gemm.fig_9()
-    if want("fig6"):
-        bench_dataflow.fig_6()
-    if want("fig7"):
-        bench_dataflow.fig_7()
-    if want("fig8"):
-        bench_dataflow.fig_8()
-    if want("table3"):
-        bench_dataflow.table_iii()
-    if want("ops"):
-        bench_ops.main()
-    if want("table1"):
-        bench_accuracy.table_i()
-    if want("fig5a"):
-        bench_accuracy.fig_5a()
-    if want("roofline"):
-        roofline_section()
-    print(f"# benchmarks done in {time.time()-t0:.1f}s")
+    # capture stdout too: sections that ignore print_fn still land in JSON
+    with writer.capture_stdout() if args.json else contextlib.nullcontext():
+        if want("table2"):
+            bench_gemm.table_ii()
+        if want("fig5b"):
+            bench_gemm.fig_5b()
+        if want("fig9"):
+            bench_gemm.fig_9()
+        if want("fig6"):
+            bench_dataflow.fig_6()
+        if want("fig7"):
+            bench_dataflow.fig_7()
+        if want("fig8"):
+            bench_dataflow.fig_8()
+        if want("table3"):
+            bench_dataflow.table_iii()
+        if want("ops"):
+            bench_ops.main()
+        if want("table1"):
+            if args.steps:
+                bench_accuracy.table_i(steps=args.steps)
+            else:
+                bench_accuracy.table_i()
+        if want("fig5a"):
+            if args.steps:
+                bench_accuracy.fig_5a(steps=args.steps)
+            else:
+                bench_accuracy.fig_5a()
+        if want("noise"):
+            bench_noise.noise_gemm()
+        if want("roofline"):
+            roofline_section()
+    elapsed = time.time() - t0
+    print(f"# benchmarks done in {elapsed:.1f}s")
+    if args.json:
+        writer.write_json(args.json, argv=list(argv or sys.argv[1:]),
+                          elapsed_s=round(elapsed, 2))
     return 0
 
 

@@ -1,0 +1,43 @@
+"""Analog signal-chain + RRNS fault-tolerance subsystem (paper §IV-B, §VII).
+
+Models the full photonic signal chain as composable, jittable channel
+stages (``repro.analog.channel``) and makes redundant-RNS error correction
+a first-class execution mode (``repro.analog.rrns`` + the ``mirage_rrns``
+GEMM backend in ``repro.core.backends``).
+
+  device.py   §IV-B device constants (shared with benchmarks/hw_model.py)
+              and shot/thermal-noise SNR models
+  channel.py  AnalogChannelConfig + DAC / drift / detector / ADC / crosstalk
+              stages applied to residue tensors
+  rrns.py     vectorized, jit/vmap-safe RRNS encode + majority decode with
+              precomputed CRT subset tables
+  sweep.py    accuracy-vs-SNR campaign helpers (benchmarks/bench_noise.py)
+"""
+
+from repro.analog.channel import (
+    AnalogChannelConfig,
+    apply_program_channel,
+    apply_readout_channel,
+    detector_sigma_levels,
+)
+from repro.analog.rrns import (
+    RRNSTables,
+    build_tables,
+    default_redundant_moduli,
+    get_tables,
+    rrns_decode,
+    rrns_encode,
+)
+
+__all__ = [
+    "AnalogChannelConfig",
+    "apply_program_channel",
+    "apply_readout_channel",
+    "detector_sigma_levels",
+    "RRNSTables",
+    "build_tables",
+    "default_redundant_moduli",
+    "get_tables",
+    "rrns_decode",
+    "rrns_encode",
+]

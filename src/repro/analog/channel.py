@@ -1,0 +1,197 @@
+"""Composable analog channel stages for the photonic signal chain (§IV-B).
+
+Every stage maps a residue tensor ``(n_moduli, ...)`` int32 to a residue
+tensor of the same shape, is pure/jittable, and is driven by one
+:class:`AnalogChannelConfig`. The chain mirrors the physical datapath:
+
+  program side (stationary operand, once per tile)
+    DAC quantization  ->  phase-shifter programming drift
+  readout side (per MVM output)
+    inter-MMU crosstalk  ->  shot/thermal detector noise  ->  ADC
+
+Detector noise is parameterized by an amplitude SNR in dB using the same
+§IV-B device constants as ``benchmarks/hw_model.py`` (``repro.analog.device``):
+a full-scale signal spans the ``m`` phase levels of modulus ``m``, so noise
+with amplitude SNR ``s`` has sigma ``m / 10^(s/20)`` in phase-level units —
+at the paper's requirement ``SNR > m`` (§IV-B1) the sigma is below one level.
+
+The legacy ``MiragePolicy.noise_sigma`` knob is subsumed as the derived
+special case: an otherwise-identity config whose detector stage adds a flat
+per-level sigma on every modulus (see :meth:`AnalogChannelConfig.from_policy`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analog import device
+
+
+def detector_sigma_levels(m: int, snr_db: float) -> float:
+    """Detector noise sigma in phase-level units for modulus m at SNR (dB)."""
+    return m / (10.0 ** (snr_db / 20.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogChannelConfig:
+    """Full analog channel description, one field per physical impairment.
+
+    Attributes:
+      dac_bits: DAC precision programming/streaming residues. ``None`` means
+        exact (a ``ceil(log2 m)``-bit converter per modulus, the paper's
+        design point); fewer bits re-grid residues onto ``2^dac_bits`` levels.
+      adc_bits: ADC precision on readout, same convention as ``dac_bits``.
+      snr_db: amplitude SNR at the detector; per-modulus Gaussian noise with
+        sigma ``m / 10^(snr_db/20)`` phase levels. ``None`` disables.
+      noise_sigma: flat extra sigma in phase-level units on every modulus
+        (the legacy ``MiragePolicy.noise_sigma`` knob), added in quadrature
+        with the SNR-derived sigma.
+      phase_drift_sigma: Gaussian programming drift on the *stationary*
+        operand's phase shifters, in phase-level units (applied once per
+        tile, i.e. once per GEMM here).
+      crosstalk: inter-MMU leakage coefficient: each group output channel
+        leaks ``crosstalk`` of each neighboring group's signal into itself
+        (deterministic mixing along the group axis).
+    """
+
+    dac_bits: Optional[int] = None
+    adc_bits: Optional[int] = None
+    snr_db: Optional[float] = None
+    noise_sigma: float = 0.0
+    phase_drift_sigma: float = 0.0
+    crosstalk: float = 0.0
+
+    @classmethod
+    def from_policy(cls, policy) -> "AnalogChannelConfig":
+        """Channel described by a MiragePolicy's analog fields.
+
+        A policy carrying only the legacy ``noise_sigma`` knob yields the
+        flat-sigma special case; the richer fields map one-to-one."""
+        return cls(
+            dac_bits=policy.dac_bits,
+            adc_bits=policy.adc_bits,
+            snr_db=policy.snr_db,
+            noise_sigma=policy.noise_sigma,
+            phase_drift_sigma=policy.phase_drift_sigma,
+            crosstalk=policy.crosstalk,
+        )
+
+    @property
+    def stochastic(self) -> bool:
+        """True when any stage draws random numbers (needs a PRNG key)."""
+        return (self.snr_db is not None
+                or self.noise_sigma > 0
+                or self.phase_drift_sigma > 0)
+
+    @property
+    def identity(self) -> bool:
+        """True when every stage is a no-op for any moduli set."""
+        return (not self.stochastic and self.crosstalk == 0.0
+                and self.dac_bits is None and self.adc_bits is None)
+
+    def detector_sigmas(self, moduli: Sequence[int]) -> tuple:
+        """Per-modulus readout sigma: SNR-derived ⊕ flat, in level units."""
+        out = []
+        for m in moduli:
+            s2 = self.noise_sigma ** 2
+            if self.snr_db is not None:
+                s2 += detector_sigma_levels(m, self.snr_db) ** 2
+            out.append(math.sqrt(s2))
+        return tuple(out)
+
+    def required_receiver_power_w(self, moduli: Sequence[int]) -> float:
+        """Optical power at the detector for this SNR (§IV-B receiver model);
+        the hw-model hook that prices a sweep point in laser watts."""
+        snr = self.snr_db
+        if snr is None:
+            snr = device.snr_requirement_db(max(moduli))
+        return device.receiver_power_for_snr_w(snr)
+
+
+def _mods_col(moduli: Sequence[int], ndim: int) -> jnp.ndarray:
+    return jnp.asarray(moduli, jnp.float32).reshape((-1,) + (1,) * (ndim - 1))
+
+
+def converter_quantize(residues: jax.Array, moduli: Sequence[int],
+                       bits: Optional[int]) -> jax.Array:
+    """Re-grid residues onto the 2^bits uniform levels of a DAC/ADC.
+
+    Identity whenever ``2^bits >= m`` (the converter resolves every phase
+    level, the paper's ``ceil(log2 m)``-bit design point) or ``bits is
+    None``; otherwise each residue snaps to the nearest representable level
+    of a uniform grid over [0, m-1].
+    """
+    if bits is None:
+        return residues
+    outs = []
+    for i, m in enumerate(moduli):
+        levels = 2 ** bits
+        if levels >= m:
+            outs.append(residues[i])
+            continue
+        step = (m - 1) / (levels - 1)
+        q = jnp.round(jnp.round(residues[i].astype(jnp.float32) / step) * step)
+        outs.append(jnp.clip(q, 0, m - 1).astype(jnp.int32))
+    return jnp.stack(outs, axis=0)
+
+
+def phase_noise(residues: jax.Array, moduli: Sequence[int],
+                sigmas: Sequence[float], key: jax.Array) -> jax.Array:
+    """Per-modulus additive Gaussian phase noise, re-quantized to the nearest
+    level and wrapped mod m (the detector reads phases on a ring)."""
+    if all(s <= 0 for s in sigmas):
+        return residues
+    sig = jnp.asarray(sigmas, jnp.float32).reshape(
+        (-1,) + (1,) * (residues.ndim - 1))
+    noise = jax.random.normal(key, residues.shape) * sig
+    noisy = jnp.round(residues.astype(jnp.float32) + noise)
+    return jnp.mod(noisy, _mods_col(moduli, residues.ndim)).astype(jnp.int32)
+
+
+def crosstalk_mix(residues: jax.Array, moduli: Sequence[int],
+                  eps: float, group_axis: int = 1) -> jax.Array:
+    """Inter-MMU crosstalk: each group channel leaks ``eps`` of each
+    neighboring group into itself (deterministic, wraps around the array
+    edge like the physical waveguide bus). Re-quantized and wrapped mod m.
+
+    With one group (no neighbors) the mix is exactly the identity."""
+    if eps == 0.0 or residues.shape[group_axis] == 1:
+        return residues
+    r = residues.astype(jnp.float32)
+    if residues.shape[group_axis] == 2:
+        # two channels have ONE neighbor each (roll +1 == roll -1)
+        mixed = (1.0 - eps) * r + eps * jnp.roll(r, 1, axis=group_axis)
+    else:
+        mixed = ((1.0 - 2.0 * eps) * r
+                 + eps * jnp.roll(r, 1, axis=group_axis)
+                 + eps * jnp.roll(r, -1, axis=group_axis))
+    return jnp.mod(jnp.round(mixed),
+                   _mods_col(moduli, residues.ndim)).astype(jnp.int32)
+
+
+def apply_program_channel(residues: jax.Array, moduli: Sequence[int],
+                          cfg: AnalogChannelConfig,
+                          key: Optional[jax.Array]) -> jax.Array:
+    """Program-side chain on the stationary operand: DAC -> shifter drift."""
+    out = converter_quantize(residues, moduli, cfg.dac_bits)
+    if cfg.phase_drift_sigma > 0:
+        out = phase_noise(out, moduli,
+                          (cfg.phase_drift_sigma,) * len(moduli), key)
+    return out
+
+
+def apply_readout_channel(residues: jax.Array, moduli: Sequence[int],
+                          cfg: AnalogChannelConfig,
+                          key: Optional[jax.Array],
+                          group_axis: int = 1) -> jax.Array:
+    """Readout-side chain: crosstalk -> detector noise -> ADC re-quantize."""
+    out = crosstalk_mix(residues, moduli, cfg.crosstalk, group_axis)
+    sigmas = cfg.detector_sigmas(moduli)
+    if any(s > 0 for s in sigmas):
+        out = phase_noise(out, moduli, sigmas, key)
+    return converter_quantize(out, moduli, cfg.adc_bits)

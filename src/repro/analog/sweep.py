@@ -1,0 +1,119 @@
+"""Accuracy-vs-SNR sweep campaign (Fig. 10-style, §VII + arXiv:2309.10759).
+
+Library half of ``benchmarks/bench_noise.py``: given a list of detector SNR
+points, measure (a) GEMM relative error and (b) small-LM training loss for
+the uncorrected analog path (``mirage_rns_noisy``) and the RRNS-corrected
+path (``mirage_rrns``), against the noiseless ``mirage_rns`` / FP32
+references. Every function returns machine-readable row dicts; the bench
+harness turns them into CSV lines + JSON.
+
+Interpretation guide: with amplitude SNR ``s`` the per-modulus noise sigma
+is ``m / 10^(s/20)`` phase levels, so residue flips become likely below
+~45 dB for the paper's k=5 moduli; RRNS with two redundant moduli repairs
+every single-residue flip, pushing the usable SNR floor down by several dB
+(exactly the paper's §VII argument and the Blueprint paper's Fig. 10).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.precision import get_policy
+
+# the residue-flip transition for the k=5 moduli lives between ~38 and
+# ~50 dB (sigma of 1 level sits at the §IV-B1 requirement, ~30 dB; flips
+# become rare once sigma < ~0.15 level); sample that shoulder densely
+DEFAULT_SNR_DBS = (38.0, 40.0, 42.0, 44.0, 46.0, 48.0, 50.0, 55.0)
+NOISY_MODES = ("mirage_rns_noisy", "mirage_rrns")
+
+
+def gemm_error_sweep(snr_dbs: Sequence[float] = DEFAULT_SNR_DBS,
+                     modes: Sequence[str] = NOISY_MODES,
+                     shape=(32, 256, 32), seed: int = 0,
+                     policy_overrides: Optional[Dict] = None,
+                     ) -> List[Dict]:
+    """Relative GEMM error vs SNR for each analog mode.
+
+    The reference is the NOISELESS ``mirage_rns`` output, so the metric
+    isolates channel corruption from BFP quantization error. Error is the
+    relative Frobenius norm (mean-field, Fig. 10-style) plus the fraction
+    of corrupted output elements — the latter shows the correction effect
+    even when a rare multi-residue error dominates the norm.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import gemm
+
+    m, k, n = shape
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    overrides = dict(policy_overrides or {})
+    ref = np.asarray(gemm.mirage_matmul_nograd(
+        x, w, get_policy("mirage_rns", **overrides)))
+    ref_norm = float(np.linalg.norm(ref)) or 1.0
+    tol = 1e-6 * float(np.abs(ref).max() or 1.0)
+    rows: List[Dict] = []
+    for snr in snr_dbs:
+        for mode in modes:
+            policy = get_policy(mode, snr_db=float(snr), **overrides)
+            out = np.asarray(gemm.mirage_matmul_nograd(
+                x, w, policy, key=jax.random.PRNGKey(seed)))
+            err = out - ref
+            rows.append({
+                "section": "noise_gemm",
+                "mode": mode,
+                "snr_db": float(snr),
+                "rel_fro_err": float(np.linalg.norm(err) / ref_norm),
+                "corrupt_frac": float(np.mean(np.abs(err) > tol)),
+                "shape": list(shape),
+            })
+    return rows
+
+
+def train_loss_sweep(snr_dbs: Sequence[float] = (40.0, 50.0),
+                     modes: Sequence[str] = NOISY_MODES,
+                     steps: int = 12, seed: int = 0) -> List[Dict]:
+    """Final small-LM train loss vs SNR, with the noiseless ``mirage_rns``
+    and ``fp32`` runs as anchors. Channel noise reaches the jitted train
+    step through ``policy.noise_seed`` (static per-GEMM error patterns)."""
+    rows: List[Dict] = []
+    anchors = {"fp32": get_policy("fp32"),
+               "mirage_rns": get_policy("mirage_rns")}
+    for name, policy in anchors.items():
+        rows.append({"section": "noise_train", "mode": name,
+                     "snr_db": None, "loss": _train_small_lm(policy, steps, seed)})
+    for snr in snr_dbs:
+        for mode in modes:
+            policy = get_policy(mode, snr_db=float(snr), noise_seed=seed)
+            rows.append({"section": "noise_train", "mode": mode,
+                         "snr_db": float(snr),
+                         "loss": _train_small_lm(policy, steps, seed)})
+    return rows
+
+
+def _train_small_lm(policy, steps: int, seed: int) -> float:
+    """Same recipe as benchmarks/bench_accuracy: reduced LM, synthetic
+    bigram data, adamw — the loss after ``steps`` steps."""
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import TrainConfig
+    from repro.data.pipeline import SyntheticLM, SyntheticLMConfig
+    from repro.models import build_model
+    from repro.models.lm import LMCallOptions
+    from repro.runtime.trainer import init_train_state, make_train_step
+
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg, policy, LMCallOptions(q_chunk=16, kv_chunk=16))
+    tc = TrainConfig(policy=policy, optimizer="adamw", lr=1e-3)
+    state = init_train_state(model, tc, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(model, tc))
+    data = SyntheticLM(SyntheticLMConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, batch_size=4, seed=seed))
+    metrics = {}
+    for _ in range(steps):
+        state, metrics = step(state, next(data))
+    jax.block_until_ready(metrics["loss"])
+    return float(metrics["loss"])

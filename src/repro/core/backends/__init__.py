@@ -27,6 +27,7 @@ from repro.core.backends import baselines   # noqa: F401  (fp32 / bf16 / int8)
 from repro.core.backends import mirage_fast      # noqa: F401
 from repro.core.backends import mirage_faithful  # noqa: F401
 from repro.core.backends import mirage_rns       # noqa: F401
+from repro.core.backends import mirage_rrns      # noqa: F401  (analog channel)
 from repro.core.backends import reference        # noqa: F401
 
 __all__ = [

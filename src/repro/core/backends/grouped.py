@@ -39,6 +39,7 @@ budget only matters for the CPU container.
 
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -46,12 +47,28 @@ import jax.numpy as jnp
 
 from repro.core import bfp
 
-# (G, M, N) f32 intermediates up to this size run as ONE group-batched dot;
-# beyond it the scan-over-blocks regime keeps the working set bounded.
-VECTORIZE_BUDGET_BYTES = 32 * 1024 * 1024
 
-# Group-block size for the scan regime.
-DEFAULT_GROUP_BLOCK = 8
+def _env_int(name: str, default: int) -> int:
+    """Integer env override; malformed values fall back to the default."""
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        return int(raw)
+    except ValueError:
+        return default
+
+
+# (G, M, N) f32 intermediates up to this size run as ONE group-batched dot;
+# beyond it the scan-over-blocks regime keeps the working set bounded. The
+# defaults are tuned for the 2-core CPU container; on TPU (where the MXU
+# batches natively and the single-dot regime should always win) raise the
+# budget via MIRAGE_VECTORIZE_BUDGET_BYTES without touching code.
+VECTORIZE_BUDGET_BYTES = _env_int("MIRAGE_VECTORIZE_BUDGET_BYTES",
+                                  32 * 1024 * 1024)
+
+# Group-block size for the scan regime (MIRAGE_SCAN_BLOCK overrides).
+DEFAULT_GROUP_BLOCK = _env_int("MIRAGE_SCAN_BLOCK", 8)
 
 # f32 holds integers exactly up to 2^24: cap on any integer partial dot.
 F32_EXACT_WINDOW = 1 << 24

@@ -1,0 +1,118 @@
+"""mirage_rns_noisy / mirage_rrns: the RNS path through the analog channel.
+
+Both backends run the group-batched residue pipeline of ``mirage_rns`` but
+route every operand and readout through the composable analog channel model
+(``repro.analog.channel``): DAC quantization and phase-shifter programming
+drift on the stationary operand, DAC quantization on the streamed operand,
+then inter-MMU crosstalk, SNR-parameterized shot/thermal detector noise and
+ADC re-quantization on the residue readout.
+
+  mirage_rns_noisy  base moduli only; corrupted residues go straight into
+                    CRT, so single phase-level errors explode (§VII) — the
+                    uncorrected baseline of the noise story.
+  mirage_rrns       residues carried over base + redundant moduli; the
+                    readout is majority-decoded with the jittable RRNS
+                    tables (``repro.analog.rrns``), correcting any single
+                    residue error with the default 2 redundant moduli.
+
+Everything is pure jnp — no host callbacks — so both modes run fully
+jitted from the trainer, the serve launcher, and the benchmarks via
+``policy.mode`` alone. Stochastic stages need randomness: pass an explicit
+``key`` (``mirage_matmul_nograd``), or set ``policy.noise_seed`` for keyless
+call sites (jitted training) — the per-GEMM key is then the seed folded
+with the operand shapes, i.e. a static error pattern per GEMM site.
+
+Redundant residue contractions use the same ``grouped_residue_dot`` as the
+base moduli (any modulus within the f32-exact window works), so the r extra
+moduli cost exactly r more group-batched contractions — mirroring the r
+extra modular MMVMU columns the hardware would add.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analog import channel, rrns
+from repro.core import rns
+from repro.core.backends import grouped
+from repro.core.backends.base import register_fn
+
+
+def _effective_rrns_moduli(policy) -> Tuple[int, ...]:
+    extra = tuple(policy.redundant_moduli)
+    if not extra:
+        extra = rrns.default_redundant_moduli(policy.k)
+    return tuple(policy.moduli) + extra
+
+
+def _channel_key(policy, key: Optional[jax.Array],
+                 shapes) -> jax.Array:
+    if key is not None:
+        return key
+    if policy.noise_seed is not None:
+        base = jax.random.PRNGKey(policy.noise_seed)
+        # fold in the operand shapes so forward / dX / dW GEMMs of one layer
+        # draw distinct (but step-static) error patterns
+        tag = hash(tuple(shapes)) & 0x7FFFFFFF
+        return jax.random.fold_in(base, tag)
+    raise ValueError(
+        "the analog channel has stochastic stages (snr_db / noise_sigma / "
+        "phase_drift_sigma) but no randomness source: pass an explicit PRNG "
+        "key via mirage_matmul_nograd(x, w, policy, key=key), or set "
+        "policy.noise_seed for keyless jitted call sites (trainer/serving)")
+
+
+def _analog_forward(x, w, policy, key, correct: bool):
+    if policy.use_pallas:
+        raise NotImplementedError(
+            "the analog-channel backends (mirage_rns_noisy / mirage_rrns) "
+            "run pure jnp; use_pallas does not compose with channel stages "
+            "yet (ROADMAP follow-up) — unset it rather than silently "
+            "benchmarking the same path twice")
+    qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
+    cfg = channel.AnalogChannelConfig.from_policy(policy)
+    moduli = (_effective_rrns_moduli(policy) if correct
+              else tuple(policy.moduli))
+    if cfg.stochastic:
+        k_prog, k_det = jax.random.split(
+            _channel_key(policy, key, (x.shape, w.shape)))
+    else:
+        k_prog = k_det = None
+    xr = rns.to_rns(qx, moduli)                    # (n_mod, G, M, g) int32
+    wr = rns.to_rns(qw, moduli)                    # (n_mod, G, g, N) int32
+    xr = channel.converter_quantize(xr, moduli, cfg.dac_bits)
+    wr = channel.apply_program_channel(wr, moduli, cfg, k_prog)
+    res = jnp.stack(
+        [grouped.grouped_residue_dot(
+            xr[i].astype(jnp.float32), wr[i].astype(jnp.float32), m)
+         for i, m in enumerate(moduli)],
+        axis=0,
+    ).astype(jnp.int32)                            # (n_mod, G, M, N)
+    res = channel.apply_readout_channel(res, moduli, cfg, k_det)
+    if correct:
+        tables = rrns.get_tables(moduli, n_required=len(policy.moduli),
+                                 psi=policy.psi)
+        decoded, _ = rrns.rrns_decode(res, tables)
+        p = decoded.astype(jnp.float32)
+    else:
+        p = rns.from_rns_special(res, policy.k, signed=True).astype(jnp.float32)
+    return grouped.scale_accumulate(p, sx, sw, batch)
+
+
+@register_fn("mirage_rns_noisy",
+             description="RNS path through the full analog channel model "
+                         "(DAC/drift/crosstalk/detector-SNR/ADC), uncorrected",
+             supports_noise=True)
+def _matmul_mirage_rns_noisy(x, w, policy, *, key=None):
+    return _analog_forward(x, w, policy, key, correct=False)
+
+
+@register_fn("mirage_rrns",
+             description="redundant-RNS path: analog channel + jittable "
+                         "majority decode over CRT subset tables",
+             supports_noise=True)
+def _matmul_mirage_rrns(x, w, policy, *, key=None):
+    return _analog_forward(x, w, policy, key, correct=True)

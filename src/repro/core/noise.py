@@ -10,7 +10,6 @@ this; we implement it as a beyond-paper feature so the noise story is testable.
 from __future__ import annotations
 
 import itertools
-import math
 from typing import Sequence, Tuple
 
 import jax
@@ -26,14 +25,12 @@ def inject_phase_noise(
     """Additive Gaussian phase noise on residue readout, re-quantized to the
     nearest phase level and wrapped mod m (the detector reads phases on a ring).
 
-    residues: (n, ...) int32, sigma in units of one phase level.
+    residues: (n, ...) int32, sigma in units of one phase level. The flat
+    special case of :func:`repro.analog.channel.phase_noise` (same draws,
+    bit-identical outputs).
     """
-    if sigma <= 0:
-        return residues
-    noise = jax.random.normal(key, residues.shape) * sigma
-    noisy = jnp.round(residues.astype(jnp.float32) + noise)
-    mods = jnp.asarray(moduli, jnp.float32).reshape((-1,) + (1,) * (residues.ndim - 1))
-    return jnp.mod(noisy, mods).astype(jnp.int32)
+    from repro.analog import channel
+    return channel.phase_noise(residues, moduli, (sigma,) * len(moduli), key)
 
 
 def rrns_decode_np(
@@ -72,5 +69,8 @@ def rrns_decode_np(
 
 
 def snr_requirement_db(m: int) -> float:
-    """Paper §IV-B1: to distinguish m phase levels the core needs SNR > m."""
-    return 20.0 * math.log10(m)
+    """Paper §IV-B1: to distinguish m phase levels the core needs SNR > m.
+
+    Canonical copy lives with the §IV-B device constants."""
+    from repro.analog import device
+    return device.snr_requirement_db(m)

@@ -21,6 +21,8 @@ GEMM_MODES = (
     "mirage_faithful", # BFP quantize -> group-batched integer dots + FP32 acc
     "mirage_rns",      # full RNS path: residue GEMMs per modulus + CRT
     "mirage_rns_pallas",   # mirage_rns forced through the Pallas residue kernel
+    "mirage_rns_noisy",    # RNS path through the full analog channel model
+    "mirage_rrns",         # redundant-RNS path: analog channel + majority decode
     "mirage_faithful_ref", # seed fori_loop faithful path (parity oracle)
     "mirage_rns_ref",      # seed fori_loop RNS path (parity oracle)
 )
@@ -76,8 +78,29 @@ class MiragePolicy:
       interpret: run Pallas kernels in interpret mode (CPU container).
       noise_sigma: analog phase-noise sigma (residue-level), Section VII.
         Honoured by backends with ``supports_noise``; requires an explicit
-        PRNG key through ``mirage_matmul_nograd(..., key=...)``.
-      redundant_moduli: extra RRNS moduli for error correction (Section VII).
+        PRNG key through ``mirage_matmul_nograd(..., key=...)`` or a
+        ``noise_seed``. For the analog-channel backends this is the flat
+        detector sigma added in quadrature with the SNR-derived one.
+      snr_db: amplitude SNR at the detector (analog-channel backends):
+        per-modulus noise sigma is ``m / 10^(snr_db/20)`` phase levels, so
+        the paper's "SNR > m" requirement (§IV-B1) is ``snr_db >
+        20*log10(m)``. ``None`` disables SNR-derived noise.
+      phase_drift_sigma: Gaussian programming drift on the stationary
+        operand's phase shifters, in phase-level units (once per GEMM).
+      dac_bits / adc_bits: converter precision for the analog channel.
+        ``None`` = exact ``ceil(log2 m)``-bit converters (paper design
+        point); fewer bits re-grid residues onto ``2^bits`` levels.
+      crosstalk: inter-MMU leakage coefficient; each group output channel
+        deterministically absorbs ``crosstalk`` of each neighbor group.
+      noise_seed: implicit PRNG seed for stochastic channel stages when no
+        explicit key is passed (the only way noise reaches jitted
+        trainer/serving paths, where ``mirage_matmul`` takes no key). The
+        per-GEMM key is the seed folded with the operand shapes: a STATIC
+        error pattern per GEMM site, like fixed programming/fabrication
+        error — redraws do not vary across steps.
+      redundant_moduli: extra RRNS moduli for error correction (Section
+        VII). ``()`` lets the ``mirage_rrns`` backend pick the default set
+        (first two primes above 2^k + 1 — single-error correcting).
       group_block: group-batched execution blocking for the faithful/RNS
         backends. 0 = adaptive (one batched dot while the (G, M, N)
         intermediate fits the vectorize budget, scan over group blocks
@@ -95,6 +118,12 @@ class MiragePolicy:
     use_pallas: bool = False
     interpret: bool = True
     noise_sigma: float = 0.0
+    snr_db: Optional[float] = None
+    phase_drift_sigma: float = 0.0
+    dac_bits: Optional[int] = None
+    adc_bits: Optional[int] = None
+    crosstalk: float = 0.0
+    noise_seed: Optional[int] = None
     redundant_moduli: Tuple[int, ...] = ()
     group_block: int = 0
     # Weight-stationary quantization: the weight operand is ALREADY on the
