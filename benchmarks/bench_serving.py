@@ -1,0 +1,191 @@
+"""Serving benchmark: throughput / TTFT / TPOT vs offered load and slots.
+
+Sections (all CSV rows through ``benchmarks.emit``-compatible print_fn,
+so ``--json`` makes them machine-readable):
+
+  * ``serving_slots``  — decode throughput of the batched continuous-
+    batching engine as slot count grows, against the retained per-slot
+    oracle loop at the same occupancy. The ``speedup_slots{n}`` rows are
+    the measured batched/oracle ratio (the acceptance gate requires > 1 at
+    slots >= 4).
+  * ``serving_load``   — open-loop offered load sweep: requests arrive at
+    a fixed rate; rows report achieved tok/s, mean TTFT, mean TPOT and
+    queue time per offered rate.
+
+  PYTHONPATH=src python -m benchmarks.bench_serving --json out.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional
+
+import numpy as np
+
+
+def _build(arch: str, policy_name: str, prompt_len: int, max_tokens: int):
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.precision import get_policy
+    from repro.models import build_model
+    from repro.models.lm import LMCallOptions
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, get_policy(policy_name),
+                        LMCallOptions(q_chunk=32, kv_chunk=32))
+    params = model.init(jax.random.PRNGKey(0))
+    cap = prompt_len + max_tokens + 4
+    return cfg, model, params, cap
+
+
+def _requests(cfg, n: int, prompt_len: int, max_tokens: int):
+    from repro.runtime.server import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        prompt_len).astype(np.int32),
+                    max_tokens=max_tokens)
+            for i in range(n)]
+
+
+def _drain(server, reqs):
+    """Serve ``reqs`` to completion; returns (tokens, seconds, finished)."""
+    for r in reqs:
+        server.submit(r)
+    t0 = time.perf_counter()
+    finished = server.run_until_drained()
+    dt = time.perf_counter() - t0
+    return sum(len(r.tokens_out) for r in finished), dt, finished
+
+
+def slots_sweep(print_fn=print, arch: str = "qwen2-0.5b",
+                policy: str = "mirage", slot_counts=(1, 2, 4),
+                requests_per_slot: int = 3, prompt_len: int = 12,
+                max_tokens: int = 16):
+    """Batched engine vs per-slot oracle at growing occupancy."""
+    from repro.runtime.server import LMServer, PerSlotLMServer
+
+    cfg, model, params, cap = _build(arch, policy, prompt_len, max_tokens)
+    print_fn(f"# serving: {arch} policy={policy} prompt={prompt_len} "
+             f"max_tokens={max_tokens}")
+    speedups = {}
+    for slots in slot_counts:
+        n_req = slots * requests_per_slot
+        results = {}
+        for name, cls in (("batched", LMServer), ("oracle", PerSlotLMServer)):
+            server = cls(model, params, cap=cap, batch_slots=slots)
+            # warm THIS instance's jit caches (each server owns its jitted
+            # step functions), then time a steady-state drain
+            _drain(server, _requests(cfg, slots, prompt_len, max_tokens))
+            toks, dt, _ = _drain(server,
+                                 _requests(cfg, n_req, prompt_len, max_tokens))
+            results[name] = toks / dt
+            print_fn(f"serving_slots,{name}_slots{slots},{toks / dt:.2f},"
+                     f"tok_per_s;requests={n_req}")
+        speedups[slots] = results["batched"] / results["oracle"]
+        print_fn(f"serving_slots,speedup_slots{slots},"
+                 f"{speedups[slots]:.3f},batched_over_oracle")
+    return speedups
+
+
+def load_sweep(print_fn=print, arch: str = "qwen2-0.5b",
+               policy: str = "mirage", slots: int = 4,
+               rates=(4.0, 16.0, 64.0), n_requests: int = 12,
+               prompt_len: int = 12, max_tokens: int = 16):
+    """Open-loop arrival sweep: submit at a fixed offered rate (req/s) and
+    measure achieved throughput and latency percentiles."""
+    from repro.runtime.server import LMServer
+
+    from repro.runtime.server import Scheduler
+
+    cfg, model, params, cap = _build(arch, policy, prompt_len, max_tokens)
+    # one engine across rates; warm every pow2 admission-batch size so the
+    # measured TTFT is serving latency, not prefill compiles
+    server = LMServer(model, params, cap=cap, batch_slots=slots)
+    bp = 1
+    while bp <= slots:
+        _drain(server, _requests(cfg, bp, prompt_len, max_tokens))
+        bp *= 2
+
+    for rate in rates:
+        server.scheduler = Scheduler()      # fresh per-rate metrics
+        reqs = _requests(cfg, n_requests, prompt_len, max_tokens)
+        t0 = time.perf_counter()
+        pending = list(reqs)
+        finished = []
+        tick_guard = 0
+        while (pending or server.scheduler.waiting or
+               any(r is not None for r in server.slot_req)):
+            now = time.perf_counter() - t0
+            while pending and len(reqs) - len(pending) < now * rate:
+                server.submit(pending.pop(0))
+            if server.scheduler.waiting or \
+                    any(r is not None for r in server.slot_req):
+                finished.extend(server.tick())
+            elif pending:
+                time.sleep(0.001)           # idle: next arrival not due yet
+            tick_guard += 1
+            if tick_guard > 100_000:
+                break
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens_out) for r in finished)
+        lat = server.scheduler.latency_summary()
+        print_fn(f"serving_load,rate{rate:g}_tok_s,{toks / dt:.2f},"
+                 f"slots={slots}")
+        print_fn(f"serving_load,rate{rate:g}_ttft_ms,"
+                 f"{lat['ttft_mean_s'] * 1e3:.2f},mean")
+        print_fn(f"serving_load,rate{rate:g}_tpot_ms,"
+                 f"{lat['tpot_mean_s'] * 1e3:.2f},mean")
+        print_fn(f"serving_load,rate{rate:g}_queue_ms,"
+                 f"{lat['queue_mean_s'] * 1e3:.2f},mean")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--policy", default="mirage")
+    ap.add_argument("--slots", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--rates", type=float, nargs="+", default=[4.0, 64.0])
+    ap.add_argument("--requests-per-slot", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-tokens", type=int, default=16)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: tiny sweep")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.slots = [1, 4]
+        args.rates = [64.0]
+        args.requests_per_slot = 2
+        args.max_tokens = 8
+
+    from benchmarks.emit import BenchWriter
+
+    writer = BenchWriter()
+    t0 = time.time()
+    speedups = slots_sweep(
+        writer, arch=args.arch, policy=args.policy,
+        slot_counts=tuple(args.slots),
+        requests_per_slot=args.requests_per_slot,
+        prompt_len=args.prompt_len, max_tokens=args.max_tokens)
+    load_sweep(writer, arch=args.arch, policy=args.policy,
+               slots=max(args.slots), rates=tuple(args.rates),
+               n_requests=max(args.slots) * args.requests_per_slot,
+               prompt_len=args.prompt_len, max_tokens=args.max_tokens)
+    if args.json:
+        writer.write_json(args.json, argv=list(argv or sys.argv[1:]),
+                          elapsed_s=round(time.time() - t0, 2))
+    big = [s for s in speedups if s >= 4]
+    if big:
+        print(f"# decode speedup at slots={big[0]}: "
+              f"{speedups[big[0]]:.2f}x over per-slot oracle")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

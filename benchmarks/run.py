@@ -42,7 +42,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,fig5a,fig5b,fig6,fig7,"
-                         "fig8,fig9,table3,ops,noise,roofline")
+                         "fig8,fig9,table3,ops,noise,serving,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every row as structured JSON")
     ap.add_argument("--steps", type=int, default=None,
@@ -90,6 +90,10 @@ def main(argv=None):
                 bench_accuracy.fig_5a()
         if want("noise"):
             bench_noise.noise_gemm()
+        if want("serving"):
+            from benchmarks import bench_serving
+            bench_serving.slots_sweep(slot_counts=(1, 4),
+                                      requests_per_slot=2, max_tokens=8)
         if want("roofline"):
             roofline_section()
     elapsed = time.time() - t0

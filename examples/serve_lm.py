@@ -1,7 +1,7 @@
-"""Batched serving demo: continuous batching over prefill + decode with
-KV/SSM caches. Works for every architecture family in the zoo — try
---arch mamba2-2.7b (SSM state cache) or --arch mixtral-8x7b (MoE + SWA
-ring cache).
+"""Batched serving demo: the continuous-batching engine (one jitted decode
+over a stacked slot cache) with streaming token callbacks. Works for every
+architecture family in the zoo — try --arch mamba2-2.7b (SSM state cache)
+or --arch mixtral-8x7b (MoE + SWA ring cache).
 
   PYTHONPATH=src python examples/serve_lm.py --arch qwen2-0.5b
 """
@@ -26,15 +26,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-tokens", type=int, default=10)
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--policy", default="mirage")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are emitted")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
-    policy = get_policy("mirage")
+    policy = get_policy(args.policy)
     model = build_model(cfg, policy, LMCallOptions(q_chunk=32, kv_chunk=32))
     params = model.init(jax.random.PRNGKey(0))
+    on_token = (lambda req, tok: print(f"  [req {req.rid}] -> {tok}")) \
+        if args.stream else None
     server = LMServer(model, params,
                       cap=args.prompt_len + args.max_tokens + 4,
-                      batch_slots=args.slots)
+                      batch_slots=args.slots, on_token=on_token)
 
     rng = np.random.default_rng(7)
     t0 = time.perf_counter()
@@ -47,8 +52,11 @@ def main():
     finished = server.run_until_drained()
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens_out) for r in finished)
+    lat = server.scheduler.latency_summary()
     print(f"{args.arch}: {len(finished)} requests, {toks} tokens, "
-          f"{toks/dt:.1f} tok/s, {server.metrics['ticks']} decode ticks")
+          f"{toks/dt:.1f} tok/s, {server.metrics['ticks']} decode ticks, "
+          f"TTFT {lat['ttft_mean_s']*1e3:.1f}ms, "
+          f"TPOT {lat['tpot_mean_s']*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -33,7 +33,9 @@ contraction dimension, while the caller keeps FP32 master weights (Eq. 4).
 
 from __future__ import annotations
 
+import contextlib
 import functools
+import threading
 from typing import Optional, Tuple
 
 import jax
@@ -41,6 +43,70 @@ import jax.numpy as jnp
 
 from repro.core import backends, bfp
 from repro.core.precision import MiragePolicy
+
+
+# --------------------------------------------------------------------------
+# Ambient noise keys (serving: fresh analog noise per decode tick)
+# --------------------------------------------------------------------------
+#
+# ``policy.noise_seed`` alone gives a STATIC error pattern per GEMM site
+# (the key is the seed folded with operand shapes) — right for programming/
+# fabrication error, wrong for shot/thermal noise which redraws every shot.
+# The policy is a hashable static argument of every jitted step, so varying
+# the seed per tick would recompile per tick. Instead a caller *inside* a
+# jitted function opens :func:`noise_key_scope` with a traced key (a plain
+# input of that jit); every ``mirage_matmul`` / ``mirage_matmul_nograd``
+# traced under the scope whose backend ``supports_noise`` and got no
+# explicit ``key`` derives a per-call subkey (scope key folded with a call
+# counter, so each GEMM site draws independently). Deterministic backends
+# never consult the scope, and nothing changes when no scope is open —
+# training and the keyless static-seed path are untouched.
+
+_AMBIENT = threading.local()
+
+
+@contextlib.contextmanager
+def noise_key_scope(key: jax.Array):
+    """Make ``key`` the ambient randomness source for stochastic GEMMs
+    traced inside the ``with`` block. Re-entrant (inner scopes shadow).
+
+    Forward-only by design (serving): backward GEMMs (``_mm_bwd``) run
+    outside the caller's scope and keep the existing key-or-seed
+    requirement — training under noise still goes through
+    ``policy.noise_seed``."""
+    stack = getattr(_AMBIENT, "stack", None)
+    if stack is None:
+        stack = _AMBIENT.stack = []
+    stack.append([key, 0])
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def fold_noise_scope(tag):
+    """Nested scope whose key is the enclosing scope's key folded with
+    ``tag`` — no-op when no scope is open. ``tag`` may be TRACED (a scan
+    layer index): the per-call counter alone is a trace-time constant, so
+    without this every iteration of a ``lax.scan`` over layers would reuse
+    the same subkey per GEMM site. The model's layer scans open one of
+    these per iteration so each layer draws independent noise."""
+    stack = getattr(_AMBIENT, "stack", None)
+    if not stack:
+        yield
+        return
+    with noise_key_scope(jax.random.fold_in(stack[-1][0], tag)):
+        yield
+
+
+def _ambient_subkey() -> Optional[jax.Array]:
+    stack = getattr(_AMBIENT, "stack", None)
+    if not stack:
+        return None
+    top = stack[-1]
+    top[1] += 1
+    return jax.random.fold_in(top[0], top[1])
 
 
 # --------------------------------------------------------------------------
@@ -65,7 +131,10 @@ def quantize_operands(
 
 def _forward_impl(x: jax.Array, w: jax.Array, policy: MiragePolicy,
                   key: Optional[jax.Array] = None) -> jax.Array:
-    return backends.resolve(policy).forward(x, w, policy, key=key)
+    backend = backends.resolve(policy)
+    if key is None and backend.supports_noise:
+        key = _ambient_subkey()
+    return backend.forward(x, w, policy, key=key)
 
 
 # --------------------------------------------------------------------------
@@ -106,6 +175,8 @@ def mirage_matmul_nograd(x, w, policy: MiragePolicy,
     """Forward-only variant (serving paths); avoids residual bookkeeping.
 
     ``key`` seeds stochastic backends (``policy.noise_sigma > 0`` analog
-    noise); deterministic backends ignore it.
+    noise); deterministic backends ignore it. When no key is passed and an
+    enclosing :func:`noise_key_scope` is open (the serving engine opens one
+    per decode tick), stochastic backends draw a per-call subkey from it.
     """
     return _forward_impl(x, w, policy, key=key)

@@ -93,11 +93,13 @@ class MiragePolicy:
       crosstalk: inter-MMU leakage coefficient; each group output channel
         deterministically absorbs ``crosstalk`` of each neighbor group.
       noise_seed: implicit PRNG seed for stochastic channel stages when no
-        explicit key is passed (the only way noise reaches jitted
-        trainer/serving paths, where ``mirage_matmul`` takes no key). The
-        per-GEMM key is the seed folded with the operand shapes: a STATIC
-        error pattern per GEMM site, like fixed programming/fabrication
-        error — redraws do not vary across steps.
+        explicit key is passed. Keyless jitted call sites (training) fold
+        the seed with the operand shapes: a STATIC error pattern per GEMM
+        site, like fixed programming/fabrication error — redraws do not
+        vary across steps. The serving engine instead opens a
+        ``gemm.noise_key_scope`` per decode tick with the seed folded with
+        the tick counter, so served noise is FRESH per step (shot/thermal
+        behaviour) yet deterministic per seed.
       redundant_moduli: extra RRNS moduli for error correction (Section
         VII). ``()`` lets the ``mirage_rrns`` backend pick the default set
         (first two primes above 2^k + 1 — single-error correcting).

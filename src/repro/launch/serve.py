@@ -1,6 +1,12 @@
-"""Serving launcher: batched prefill + continuous decode on a reduced config.
+"""Serving launcher: the continuous-batching engine on a reduced config.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --requests 8
+
+Knobs: ``--engine batched`` (one jitted decode over the stacked slot cache;
+default) vs ``--engine oracle`` (the retained per-slot parity loop);
+``--policy mirage_rns_noisy --snr-db 30 --noise-seed 7`` serves under the
+analog channel with fresh noise per tick; ``--sample`` switches greedy
+argmax to device-side categorical sampling.
 """
 
 from __future__ import annotations
@@ -15,7 +21,7 @@ from repro.configs import get_config
 from repro.core.precision import get_policy
 from repro.models import build_model
 from repro.models.lm import LMCallOptions
-from repro.runtime.server import LMServer, Request
+from repro.runtime.server import LMServer, PerSlotLMServer, Request
 
 
 def main(argv=None):
@@ -26,15 +32,35 @@ def main(argv=None):
     ap.add_argument("--max-tokens", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--policy", default="mirage")
+    ap.add_argument("--engine", choices=("batched", "oracle"),
+                    default="batched")
+    ap.add_argument("--snr-db", type=float, default=None,
+                    help="serve through the analog channel at this SNR "
+                         "(use with --policy mirage_rns_noisy/mirage_rrns)")
+    ap.add_argument("--noise-seed", type=int, default=0,
+                    help="base seed for per-tick analog noise")
+    ap.add_argument("--sample", action="store_true",
+                    help="categorical sampling instead of greedy argmax")
     args = ap.parse_args(argv)
+    if args.engine == "oracle" and args.sample:
+        ap.error("--sample needs the batched engine (the per-slot oracle "
+                 "is greedy-only)")
 
     cfg = get_config(args.arch).reduced()
-    policy = get_policy(args.policy)
+    overrides = {}
+    if args.snr_db is not None:
+        overrides.update(snr_db=args.snr_db, noise_seed=args.noise_seed)
+    policy = get_policy(args.policy, **overrides)
     model = build_model(cfg, policy, LMCallOptions(q_chunk=32, kv_chunk=32))
     params = model.init(jax.random.PRNGKey(0))
 
     cap = args.prompt_len + args.max_tokens + 4
-    server = LMServer(model, params, cap=cap, batch_slots=args.slots)
+    if args.engine == "batched":
+        server = LMServer(model, params, cap=cap, batch_slots=args.slots,
+                          greedy=not args.sample)
+    else:
+        server = PerSlotLMServer(model, params, cap=cap,
+                                 batch_slots=args.slots)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for rid in range(args.requests):
@@ -47,8 +73,10 @@ def main(argv=None):
     dt = time.perf_counter() - t0
     tot_toks = sum(len(r.tokens_out) for r in finished)
     ttfts = [r.t_first_token - r.t_enqueue for r in finished]
-    print(f"served {len(finished)} requests, {tot_toks} tokens in {dt:.2f}s "
-          f"({tot_toks / dt:.1f} tok/s); mean TTFT {np.mean(ttfts)*1e3:.1f}ms")
+    print(f"[{args.engine}] served {len(finished)} requests, {tot_toks} "
+          f"tokens in {dt:.2f}s ({tot_toks / dt:.1f} tok/s); "
+          f"mean TTFT {np.mean(ttfts)*1e3:.1f}ms; "
+          f"{server.metrics['ticks']} decode ticks")
     for r in finished[:3]:
         print(f"  req {r.rid}: {r.tokens_out[:8]}...")
     return 0

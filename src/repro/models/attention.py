@@ -212,7 +212,10 @@ def attn_decode_step(
     use_rope: bool = True, cross: bool = False,
 ):
     """One decode step. x: (B, 1, d). cache_k/v: (B, S_cap, Kv_eff, D) holding
-    keys ALREADY rope'd at their absolute positions. ``idx``: current length.
+    keys ALREADY rope'd at their absolute positions. ``idx``: current length —
+    a scalar (whole batch at one position: the per-slot oracle loop) or a
+    ``(B,)`` vector (continuous-batching engine: every slot decodes at its own
+    position; write slots and validity masks are computed per row).
 
     Sliding windows use modular slot addressing: position p lives at slot
     p % S_cap, so the cache capacity for SWA archs is min(seq, window).
@@ -220,11 +223,13 @@ def attn_decode_step(
     """
     B = x.shape[0]
     S_cap = cache_k.shape[1]
+    per_slot = jnp.ndim(idx) == 1
     q = common.dense(p["q"], x, policy).reshape(B, 1, n_heads, head_dim)
     if qk_norm:
         q = common.head_rmsnorm(p["q_norm"], q)
+    rope_pos = jnp.reshape(idx, (B, 1)) if per_slot else jnp.reshape(idx, (1,))
     if use_rope:
-        q = common.apply_rope(q, jnp.reshape(idx, (1,)), rope_theta)
+        q = common.apply_rope(q, rope_pos, rope_theta)
 
     if not cross:
         knew = common.dense(p["k"], x, policy).reshape(B, 1, n_kv_heads, head_dim)
@@ -232,16 +237,22 @@ def attn_decode_step(
         if qk_norm:
             knew = common.head_rmsnorm(p["k_norm"], knew)
         if use_rope:
-            knew = common.apply_rope(knew, jnp.reshape(idx, (1,)), rope_theta)
+            knew = common.apply_rope(knew, rope_pos, rope_theta)
         knew = _repeat_kv(knew, kv_repeat)
         vnew = _repeat_kv(vnew, kv_repeat)
         slot = jnp.mod(idx, S_cap)
-        cache_k = jax.lax.dynamic_update_slice(cache_k, knew, (0, slot, 0, 0))
-        cache_v = jax.lax.dynamic_update_slice(cache_v, vnew, (0, slot, 0, 0))
-        # absolute position held by each slot (after this write)
+        if per_slot:
+            cache_k = cache_k.at[jnp.arange(B), slot].set(knew[:, 0])
+            cache_v = cache_v.at[jnp.arange(B), slot].set(vnew[:, 0])
+        else:
+            cache_k = jax.lax.dynamic_update_slice(cache_k, knew, (0, slot, 0, 0))
+            cache_v = jax.lax.dynamic_update_slice(cache_v, vnew, (0, slot, 0, 0))
+        # absolute position held by each slot (after this write); per-row when
+        # idx is a vector -> kpos/valid broadcast to (B, S_cap)
         slots = jnp.arange(S_cap)
-        kpos = idx - jnp.mod(idx - slots, S_cap)
-        valid = (kpos >= 0) & (kpos >= (idx - (window - 1) if window else 0))
+        idx_b = idx[:, None] if per_slot else idx
+        kpos = idx_b - jnp.mod(idx_b - slots, S_cap)
+        valid = (kpos >= 0) & (kpos >= (idx_b - (window - 1) if window else 0))
     else:
         slots = jnp.arange(S_cap)
         kpos = slots
@@ -253,7 +264,9 @@ def attn_decode_step(
     q5 = q.reshape(B, 1, Kv_eff, rep, head_dim)
     s = jnp.einsum("bqkrd,bskd->bqkrs", q5, cache_k,
                    preferred_element_type=jnp.float32) * sm
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    vmask = (valid[:, None, None, None, :] if valid.ndim == 2
+             else valid[None, None, None, None, :])
+    s = jnp.where(vmask, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bqkrs,bskd->bqkrd", w, cache_v,
                      preferred_element_type=jnp.float32)

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import gemm
 from repro.core.precision import MiragePolicy
 from repro.models import attention, common, mamba2, moe
 
@@ -61,6 +62,20 @@ class LMCallOptions:
                 n *= sizes.get(a, 1)
             return n
         return sizes.get(ax, 1)
+
+
+def _layer_noise_scoped(body):
+    """Wrap a layer-scan body so stochastic GEMMs under an ambient
+    ``gemm.noise_key_scope`` fold the TRACED layer index (the last element
+    of ``xs``) into their keys. The scan body is traced once, so the
+    scope's per-call-site counter alone would hand every layer the same
+    noise realization per GEMM site; folding the index restores per-layer
+    independent draws. No-op when no scope is open (training, deterministic
+    serving)."""
+    def wrapped(carry, xs):
+        with gemm.fold_noise_scope(xs[-1]):
+            return body(carry, xs)
+    return wrapped
 
 
 def chunked_ce(h: jax.Array, labels: jax.Array, head_fn, chunk: int):
@@ -286,6 +301,7 @@ class LM:
                 hh, aux = self._attn_mlp_block(lp, hh, positions, aux)
             return (hh.astype(self.opt.carry), aux), None
 
+        body = _layer_noise_scoped(body)
         if self.opt.remat:
             body = jax.checkpoint(body, prevent_cse=False)
         (h, aux), _ = jax.lax.scan(
@@ -322,12 +338,18 @@ class LM:
     # serving: prefill + single-token decode with caches
     # ------------------------------------------------------------------
 
-    def cache_spec(self, batch: int, cap: int) -> Dict[str, Any]:
-        """Abstract cache shapes (used by init_cache and the dry-run specs)."""
+    def cache_spec(self, batch: int, cap: int,
+                   per_slot_idx: bool = False) -> Dict[str, Any]:
+        """Abstract cache shapes (used by init_cache and the dry-run specs).
+
+        ``per_slot_idx=True`` is the continuous-batching layout: ``idx`` is a
+        ``(batch,)`` vector (each serving slot decodes at its own position)
+        instead of one scalar shared by the whole batch."""
         cfg = self.cfg
         hd = cfg.resolved_head_dim
         nl = cfg.n_layers
-        spec: Dict[str, Any] = {"idx": ((), jnp.int32)}
+        spec: Dict[str, Any] = {
+            "idx": (((batch,) if per_slot_idx else ()), jnp.int32)}
         if self.kind == "mamba":
             H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
             conv_dim = cfg.d_inner + 2 * N
@@ -346,15 +368,36 @@ class LM:
             spec["v"] = ((nl, batch, cache_len, kv_eff, hd), jnp.float32)
         return spec
 
-    def init_cache(self, batch: int, cap: int) -> Dict[str, Any]:
-        return {k: (jnp.zeros(s, d) if k != "idx" else jnp.zeros((), jnp.int32))
-                for k, (s, d) in self.cache_spec(batch, cap).items()}
+    def init_cache(self, batch: int, cap: int,
+                   per_slot_idx: bool = False) -> Dict[str, Any]:
+        return {k: jnp.zeros(s, d)
+                for k, (s, d) in self.cache_spec(batch, cap,
+                                                 per_slot_idx).items()}
 
-    def prefill(self, params, tokens, cap: int, extra_embeds=None):
-        """Run the prompt, build the cache, return last-position logits."""
+    def prefill(self, params, tokens, cap: int, extra_embeds=None, lens=None):
+        """Run the prompt, build the cache, return last-position logits.
+
+        ``lens``: optional ``(B,)`` true prompt lengths for right-padded
+        batched prefill (continuous-batching buckets). When given, the
+        returned logits are gathered at each row's last REAL token, and the
+        cache carries a per-slot ``(B,)`` ``idx`` = ``lens`` — decode then
+        overwrites the padded garbage positions one token at a time while the
+        attention validity mask (slots at positions >= idx) hides them.
+        Requires the padded length to fit the cache (no ring wrap during
+        prefill). Right-padding is exact for attention families (causal mask:
+        real positions never read padded ones); SSM/hybrid recurrences carry
+        state *through* padded steps, so callers there must pad to the exact
+        length (``lens == L``) — the server's bucketer does exactly that.
+        """
         cfg = self.cfg
         h, n_prefix = self._embed_inputs(params, tokens, extra_embeds)
         B, L = h.shape[0], h.shape[1]
+        if lens is not None:
+            cache_len_chk = min(cap, cfg.sliding_window or cap)
+            if L > cache_len_chk:
+                raise ValueError(
+                    f"padded prefill length {L} exceeds cache capacity "
+                    f"{cache_len_chk}; raise cap or shrink the bucket")
         positions = jnp.arange(L)
         emb0 = h
         cache = self.init_cache(B, cap)
@@ -414,7 +457,7 @@ class LM:
             shk = cache.get("shared_k", jnp.zeros((1,), jnp.float32))
             shv = cache.get("shared_v", jnp.zeros((1,), jnp.float32))
             (h, aux, shk, shv), (ssm, conv) = jax.lax.scan(
-                body, (h, aux0, shk, shv),
+                _layer_noise_scoped(body), (h, aux0, shk, shv),
                 (params["layers"], jnp.arange(cfg.n_layers)))
             cache["ssm"], cache["conv"] = ssm, conv
             if cfg.attn_every:
@@ -461,11 +504,19 @@ class LM:
                 return (hh, aux), (kk, vv)
 
             (h, aux), (ks, vs) = jax.lax.scan(
-                body, (h, aux0), (params["layers"], jnp.arange(cfg.n_layers)))
+                _layer_noise_scoped(body), (h, aux0),
+                (params["layers"], jnp.arange(cfg.n_layers)))
             cache["k"], cache["v"] = ks, vs
 
-        cache["idx"] = jnp.asarray(L, jnp.int32)
-        logits = self._head(params, h[:, -1:, :])
+        if lens is None:
+            cache["idx"] = jnp.asarray(L, jnp.int32)
+            h_last = h[:, -1:, :]
+        else:
+            lens = jnp.asarray(lens, jnp.int32)
+            cache["idx"] = lens
+            h_last = jnp.take_along_axis(
+                h, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)
+        logits = self._head(params, h_last)
         return logits, cache
 
     def decode_step(self, params, cache, tokens):
@@ -520,7 +571,7 @@ class LM:
             shk = cache.get("shared_k", jnp.zeros((1,), jnp.float32))
             shv = cache.get("shared_v", jnp.zeros((1,), jnp.float32))
             (h, shk, shv), (ssm, conv) = jax.lax.scan(
-                body, (h, shk, shv),
+                _layer_noise_scoped(body), (h, shk, shv),
                 (params["layers"], cache["ssm"], cache["conv"],
                  jnp.arange(cfg.n_layers)))
             cache = dict(cache, ssm=ssm, conv=conv)
@@ -528,7 +579,7 @@ class LM:
                 cache["shared_k"], cache["shared_v"] = shk, shv
         else:
             def body(hh, xs):
-                lp, ck, cv = xs
+                lp, ck, cv, _li = xs
                 hd = cfg.resolved_head_dim
                 n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
                 a, ck, cv = attention.attn_decode_step(
@@ -554,9 +605,56 @@ class LM:
                 return hh, (ck, cv)
 
             h, (ks, vs) = jax.lax.scan(
-                body, h, (params["layers"], cache["k"], cache["v"]))
+                _layer_noise_scoped(body), h,
+                (params["layers"], cache["k"], cache["v"],
+                 jnp.arange(cfg.n_layers)))
             cache = dict(cache, k=ks, v=vs)
 
         cache["idx"] = idx + 1
         logits = self._head(params, h)
         return logits, cache
+
+
+# --------------------------------------------------------------------------
+# Stacked-cache helpers (continuous-batching serving; runtime/server.py and
+# runtime/elastic.py). A "stacked" cache is a normal cache pytree whose batch
+# dimension is the slot dimension and whose "idx" is a per-slot vector
+# (``cache_spec(..., per_slot_idx=True)``).
+# --------------------------------------------------------------------------
+
+def cache_slot_axis(name: str) -> int:
+    """Axis of the serving-slot dimension for a cache leaf. Every leaf is
+    layer-stacked with batch at axis 1, except the per-slot ``idx`` vector."""
+    return 0 if name == "idx" else 1
+
+
+def cache_slot_count(cache: Dict[str, Any]) -> int:
+    return cache["idx"].shape[0]
+
+
+def cache_insert(live: Dict[str, Any], new: Dict[str, Any],
+                 slots: jax.Array) -> Dict[str, Any]:
+    """Scatter a (batched) prefill cache into the live stacked cache.
+
+    ``new`` leaves carry ``B_new`` slots' worth of state; ``slots`` is the
+    ``(B_new,)`` destination slot index per row. Jit-safe (one scatter per
+    leaf, no per-slot Python); rows whose slot is out of bounds (the
+    ``>= n_slots`` sentinel used to pad admission groups to a fixed batch)
+    are dropped on device.
+    """
+    out = {}
+    for k, v in live.items():
+        src = new[k]
+        if cache_slot_axis(k) == 0:
+            out[k] = v.at[slots].set(src, mode="drop")
+        else:
+            out[k] = v.at[:, slots].set(src, mode="drop")
+    return out
+
+
+def cache_extract(cache: Dict[str, Any], slots) -> Dict[str, Any]:
+    """Gather the given slots out of a stacked cache (elastic resize /
+    debugging). ``slots`` may be any integer index array."""
+    slots = jnp.asarray(slots, jnp.int32)
+    return {k: (v[slots] if cache_slot_axis(k) == 0 else v[:, slots])
+            for k, v in cache.items()}

@@ -190,7 +190,11 @@ def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
     """
     dp = dp_axes(mesh)
     leaf = name.split("/")[-1]
-    if leaf == "idx" or not shape:
+    if leaf == "idx":
+        # scalar (uniform batch) or a per-slot vector (continuous-batching
+        # stacked layout) — the vector shards over dp like the slot dim
+        return P() if not shape else _fit(mesh, shape, (dp,))
+    if not shape:
         return P()
     if leaf in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
                 "shared_k", "shared_v"):
@@ -209,6 +213,27 @@ def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
         b_ax = dp if B % _axsize(mesh, dp) == 0 else None
         return _fit(mesh, shape, (None, b_ax, None, "model"))
     return P(*([None] * len(shape)))
+
+
+def serve_state_shardings(mesh: Mesh, cfg: ModelConfig, abstract_state):
+    """Shardings for the continuous-batching engine state
+    (``runtime.server.LMServer.state``): cache leaves follow
+    :func:`cache_spec` with the slot dim as the batch dim, and the per-slot
+    control vectors (last_tok/active/emitted/eos/max_tok) shard over dp
+    alongside it — one serving replica per dp shard of slots."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = tuple(leaf.shape)
+        if name.startswith("cache/"):
+            return NamedSharding(mesh, cache_spec(mesh, cfg,
+                                                  name[len("cache/"):], shape))
+        if not shape:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, _fit(mesh, shape, (dp,) + (None,) * (len(shape) - 1)))
+    return jax.tree_util.tree_map_with_path(one, abstract_state)
 
 
 def train_state_shardings(mesh: Mesh, cfg: ModelConfig, abstract_state):

@@ -51,6 +51,43 @@ def current_world() -> int:
     return jax.device_count()
 
 
+def resize_serving_state(model, state, cap: int, new_slots: int,
+                         keep: Optional[list] = None):
+    """Rebuild a continuous-batching serving state with a different slot
+    count (elastic up/down scale with offered load).
+
+    ``state`` is the :class:`repro.runtime.server.LMServer` device pytree
+    ({"cache": stacked cache, per-slot vectors...}). Slots listed in
+    ``keep`` are compacted to the front of the new state via the stacked-
+    cache gather/scatter helpers in ``models.lm``; everything else starts
+    empty (inactive). The caller remaps its host-side slot bookkeeping to
+    ``range(len(keep))``.
+    """
+    import jax.numpy as jnp
+
+    from repro.models import lm as lm_helpers
+
+    keep = list(keep or [])
+    if len(keep) > new_slots:
+        raise ValueError(f"{len(keep)} live slots do not fit in {new_slots}")
+    new_cache = model.init_cache(new_slots, cap, per_slot_idx=True)
+    new_state = {"cache": new_cache}
+    for k, v in state.items():
+        if k == "cache":
+            continue
+        new_state[k] = jnp.zeros((new_slots,) + v.shape[1:], v.dtype)
+    if keep:
+        dst = jnp.arange(len(keep), dtype=jnp.int32)
+        src = jnp.asarray(keep, jnp.int32)
+        new_state["cache"] = lm_helpers.cache_insert(
+            new_cache, lm_helpers.cache_extract(state["cache"], src), dst)
+        for k, v in state.items():
+            if k == "cache":
+                continue
+            new_state[k] = new_state[k].at[dst].set(v[src])
+    return new_state
+
+
 def elastic_restore(ckpt: Checkpointer, abstract_state, shardings,
                     step: Optional[int] = None):
     """Restore the latest checkpoint onto the CURRENT mesh. Because leaves are

@@ -1,25 +1,49 @@
-"""Serving runtime: continuous-batching decode loop over prefill/decode steps.
+"""Serving runtime: a continuous-batching engine over a stacked slot cache.
 
-Serving flow (paper Section V-D applies Mirage to inference — forward-only):
-  * requests enter a waiting queue;
-  * ``prefill`` runs per request (or batched per bucket) and parks the KV/SSM
-    cache in the batch slot;
-  * ``decode_step`` advances every active slot one token per tick;
-  * finished slots (EOS or max_tokens) retire and free capacity.
+The paper applies Mirage to forward-only inference (Section V-D); the
+production question is how to serve it. The engine here is built around
+three invariants:
 
-On real hardware the jitted step functions carry the same in/out shardings
-the dry-run proves; the loop itself is host-side Python.
+  * **one jitted decode step per tick** over a stacked ``(slots, ...)``
+    cache pytree with a per-slot position vector (``cache["idx"]``) and an
+    active-slot mask — occupancy raises throughput instead of multiplying
+    per-slot dispatches;
+  * **device-side selection and retirement**: greedy/sampled next tokens,
+    EOS and max-token masks are all computed on device; exactly ONE
+    device→host transfer per tick (a packed ``(slots, 2)`` token/done
+    array);
+  * **bucketed batched prefill**: prompts are right-padded to a small set
+    of length buckets (admission groups padded to power-of-two batch
+    sizes), so the number of prefill compilations is bounded by
+    ``len(buckets) * log2(slots)``; the resulting cache is inserted into
+    the live stacked cache with a jitted scatter (``models.lm.cache_insert``),
+    never through per-slot Python lists.
+
+Noisy / RRNS serving is first-class: every tick (and every prefill batch)
+opens a :func:`repro.core.gemm.noise_key_scope` with a key folded from
+``policy.noise_seed`` and the tick counter, so analog-channel backends
+(``mirage_rns_noisy`` / ``mirage_rrns``) draw FRESH shot/thermal noise per
+decode step while staying fully jitted (the key is a traced input, not a
+static policy field — no recompiles).
+
+:class:`PerSlotLMServer` is the seed's slot-at-a-time loop, retained only
+as the parity oracle (token-exact vs the batched engine under greedy
+decode) and as the benchmark baseline.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import gemm
+from repro.models import lm as lm_helpers
 
 
 @dataclasses.dataclass
@@ -30,12 +54,365 @@ class Request:
     eos_id: Optional[int] = None
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     t_enqueue: float = 0.0
+    t_admit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
 
+    @property
+    def queue_time(self) -> float:
+        return self.t_admit - self.t_enqueue
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_enqueue
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first."""
+        n = len(self.tokens_out)
+        if n <= 1:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (n - 1)
+
+
+def default_buckets(cache_len: int, min_bucket: int = 8) -> Tuple[int, ...]:
+    """Power-of-two prompt-length buckets up to the cache capacity."""
+    out, b = [], min_bucket
+    while b < cache_len:
+        out.append(b)
+        b *= 2
+    out.append(cache_len)
+    return tuple(out)
+
+
+def pick_bucket(length: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+class Scheduler:
+    """FCFS admission + retirement bookkeeping + per-request latency metrics.
+
+    The scheduler owns the waiting deque and the host-visible request
+    lifecycle (enqueue → admit → stream tokens → retire); the engine owns
+    the device state. ``on_token`` is the streaming hook: called once per
+    materialized token, in emission order.
+    """
+
+    def __init__(self, on_token: Optional[Callable[[Request, int], None]] = None):
+        self.waiting: collections.deque[Request] = collections.deque()
+        self.finished: List[Request] = []
+        self.on_token = on_token
+        self.metrics: Dict[str, Any] = {
+            "completed": 0, "tokens": 0, "ticks": 0,
+            "admitted": 0, "prefill_batches": 0,
+        }
+
+    def submit(self, req: Request) -> None:
+        req.t_enqueue = time.perf_counter()
+        self.waiting.append(req)
+
+    def take(self, n: int) -> List[Request]:
+        """Pop up to ``n`` requests in FCFS order for admission."""
+        out = []
+        while self.waiting and len(out) < n:
+            out.append(self.waiting.popleft())
+        return out
+
+    def record_admit(self, reqs: Sequence[Request]) -> None:
+        t = time.perf_counter()
+        for r in reqs:
+            r.t_admit = t
+        self.metrics["admitted"] += len(reqs)
+        self.metrics["prefill_batches"] += 1
+
+    def emit(self, req: Request, tok: int) -> None:
+        req.tokens_out.append(tok)
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
+    def retire(self, req: Request) -> Request:
+        req.t_done = time.perf_counter()
+        self.metrics["completed"] += 1
+        self.metrics["tokens"] += len(req.tokens_out)
+        self.finished.append(req)
+        return req
+
+    def latency_summary(self) -> Dict[str, float]:
+        done = self.finished
+        if not done:
+            return {"ttft_mean_s": 0.0, "tpot_mean_s": 0.0,
+                    "queue_mean_s": 0.0}
+        return {
+            "ttft_mean_s": float(np.mean([r.ttft for r in done])),
+            "tpot_mean_s": float(np.mean([r.tpot for r in done])),
+            "queue_mean_s": float(np.mean([r.queue_time for r in done])),
+        }
+
 
 class LMServer:
-    """Single-sequence-slot batched decoder (batch = len(slots))."""
+    """Continuous-batching serving engine (the deployment path).
+
+    Device state is one pytree::
+
+        {"cache":   stacked cache, per-slot ``idx`` (see lm.cache_spec),
+         "last_tok": (S,) int32   last emitted token per slot,
+         "active":   (S,) bool    slot occupancy mask,
+         "emitted":  (S,) int32   tokens emitted per slot,
+         "eos":      (S,) int32   per-slot EOS id (-1 = none),
+         "max_tok":  (S,) int32   per-slot token budget}
+
+    ``tick()`` = admit (bucketed batched prefill + jitted scatter insert)
+    then one jitted decode step for every slot at once.
+    """
+
+    def __init__(self, model, params, cap: int, batch_slots: int = 8,
+                 greedy: bool = True,
+                 buckets: Optional[Sequence[int]] = None,
+                 on_token: Optional[Callable[[Request, int], None]] = None,
+                 scheduler: Optional[Scheduler] = None,
+                 sample_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.cap = cap
+        self.greedy = greedy
+        self.n_slots = batch_slots
+        cfg = model.cfg
+        self.cache_len = min(cap, cfg.sliding_window or cap)
+        # SSM/hybrid recurrences carry state through padded steps, so those
+        # families bucket by EXACT prompt length (still batched across
+        # same-length prompts); attention families right-pad to buckets.
+        self.pad_prefill = model.kind != "mamba"
+        self.buckets = tuple(sorted(buckets)) if buckets else \
+            default_buckets(self.cache_len)
+        if self.buckets[-1] > self.cache_len:
+            raise ValueError(f"bucket {self.buckets[-1]} exceeds cache "
+                             f"capacity {self.cache_len}")
+        self.scheduler = scheduler or Scheduler(on_token=on_token)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+
+        seed = model.policy.noise_seed if model.policy.noise_seed is not None \
+            else 0
+        # distinct streams: fold(base, 0) -> decode ticks, fold(base, 1) ->
+        # prefill batches; each then folds its own counter per event
+        self._noise_base = jax.random.PRNGKey(seed)
+        self._sample_base = jax.random.PRNGKey(sample_seed)
+        self._tick_count = 0
+        self._prefill_count = 0
+
+        self.state = self._init_state(batch_slots)
+        self._decode_tick = jax.jit(self._make_tick_fn())
+        self._prefill_insert = jax.jit(self._make_prefill_fn())
+
+    # ------------------------------------------------------------------
+    # device-side step functions
+    # ------------------------------------------------------------------
+
+    def _init_state(self, n_slots: int) -> Dict[str, Any]:
+        return {
+            "cache": self.model.init_cache(n_slots, self.cap,
+                                           per_slot_idx=True),
+            "last_tok": jnp.zeros((n_slots,), jnp.int32),
+            "active": jnp.zeros((n_slots,), bool),
+            "emitted": jnp.zeros((n_slots,), jnp.int32),
+            "eos": jnp.full((n_slots,), -1, jnp.int32),
+            "max_tok": jnp.zeros((n_slots,), jnp.int32),
+        }
+
+    def _make_tick_fn(self):
+        model, greedy = self.model, self.greedy
+
+        def tick(params, state, noise_key, sample_key):
+            cache = state["cache"]
+            idx0 = cache["idx"]
+            with gemm.noise_key_scope(noise_key):
+                logits, cache = model.decode_step(
+                    params, cache, state["last_tok"][:, None])
+            logits = logits[:, -1, :]
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                tok = jax.random.categorical(sample_key, logits
+                                             ).astype(jnp.int32)
+            active = state["active"]
+            emitted = state["emitted"] + active.astype(jnp.int32)
+            hit_eos = (state["eos"] >= 0) & (tok == state["eos"])
+            done = active & (hit_eos | (emitted >= state["max_tok"]))
+            # inactive slots don't advance their position (their k/v writes
+            # land on a frozen slot and are fully overwritten on reuse)
+            new_state = dict(
+                state,
+                cache=dict(cache, idx=jnp.where(active, cache["idx"], idx0)),
+                last_tok=jnp.where(active, tok, state["last_tok"]),
+                active=active & ~done,
+                emitted=emitted,
+            )
+            # the tick's single device->host payload: (S, 2) [token|-1, done]
+            payload = jnp.stack(
+                [jnp.where(active, tok, -1), done.astype(jnp.int32)], axis=-1)
+            return new_state, payload
+
+        return tick
+
+    def _make_prefill_fn(self):
+        model, cap, greedy = self.model, self.cap, self.greedy
+
+        def prefill_insert(params, state, tokens, lens, slots, eos, max_tok,
+                           noise_key, sample_key):
+            with gemm.noise_key_scope(noise_key):
+                logits, new_cache = model.prefill(params, tokens, cap,
+                                                  lens=lens)
+            logits = logits[:, -1, :]
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                tok = jax.random.categorical(sample_key, logits
+                                             ).astype(jnp.int32)
+            # instant retirement: the prefill token already hit EOS or the
+            # whole budget was one token — never occupy a slot
+            done0 = ((eos >= 0) & (tok == eos)) | (max_tok <= 1)
+            state = dict(
+                state,
+                cache=lm_helpers.cache_insert(state["cache"], new_cache,
+                                              slots),
+                last_tok=state["last_tok"].at[slots].set(tok, mode="drop"),
+                active=state["active"].at[slots].set(~done0, mode="drop"),
+                emitted=state["emitted"].at[slots].set(1, mode="drop"),
+                eos=state["eos"].at[slots].set(eos, mode="drop"),
+                max_tok=state["max_tok"].at[slots].set(max_tok, mode="drop"),
+            )
+            payload = jnp.stack([tok, done0.astype(jnp.int32)], axis=-1)
+            return state, payload
+
+        return prefill_insert
+
+    def _next_keys(self, stream: int, count: int):
+        noise = jax.random.fold_in(
+            jax.random.fold_in(self._noise_base, stream), count)
+        sample = jax.random.fold_in(
+            jax.random.fold_in(self._sample_base, stream), count)
+        return noise, sample
+
+    # ------------------------------------------------------------------
+    # host-side loop
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.buckets[-1]:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
+                f"largest bucket {self.buckets[-1]}")
+        self.scheduler.submit(req)
+
+    def _bucket(self, length: int) -> int:
+        return pick_bucket(length, self.buckets) if self.pad_prefill \
+            else length
+
+    def _admit(self) -> List[Request]:
+        """Admit waiting requests into free slots (bucketed batched
+        prefill). Returns requests retired AT admission (prefill token was
+        EOS / one-token budget) — their slots are immediately reusable, so
+        the loop keeps admitting while slots free up and work waits."""
+        retired: List[Request] = []
+        while True:
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            if not free or not self.scheduler.waiting:
+                return retired
+            reqs = self.scheduler.take(len(free))
+            groups: Dict[int, List[Request]] = {}
+            for r in reqs:
+                groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
+            for Lb, group in sorted(groups.items()):
+                B = len(group)
+                Bp = 1 << (B - 1).bit_length()      # pad batch to a pow2
+                tokens = np.zeros((Bp, Lb), np.int32)
+                lens = np.ones((Bp,), np.int32)
+                slots = np.full((Bp,), self.n_slots, np.int32)  # OOB = drop
+                eos = np.full((Bp,), -1, np.int32)
+                max_tok = np.ones((Bp,), np.int32)
+                my_slots = []
+                for j, r in enumerate(group):
+                    tokens[j, :len(r.prompt)] = r.prompt
+                    lens[j] = len(r.prompt)
+                    slots[j] = free.pop(0)
+                    my_slots.append(int(slots[j]))
+                    eos[j] = -1 if r.eos_id is None else r.eos_id
+                    max_tok[j] = r.max_tokens
+                self.scheduler.record_admit(group)
+                nk, sk = self._next_keys(1, self._prefill_count)
+                self._prefill_count += 1
+                self.state, payload = self._prefill_insert(
+                    self.params, self.state, jnp.asarray(tokens),
+                    jnp.asarray(lens), jnp.asarray(slots), jnp.asarray(eos),
+                    jnp.asarray(max_tok), nk, sk)
+                # TTFT is stamped only once the token bytes are on host
+                payload = np.asarray(jax.device_get(payload))
+                t_host = time.perf_counter()
+                for j, r in enumerate(group):
+                    r.t_first_token = t_host
+                    self.scheduler.emit(r, int(payload[j, 0]))
+                    if payload[j, 1]:
+                        retired.append(self.scheduler.retire(r))
+                    else:
+                        self.slot_req[my_slots[j]] = r
+
+    def tick(self) -> List[Request]:
+        """Admit waiting requests, then decode one token for EVERY active
+        slot in a single jitted call."""
+        done: List[Request] = list(self._admit())
+        if any(r is not None for r in self.slot_req):
+            nk, sk = self._next_keys(0, self._tick_count)
+            self._tick_count += 1
+            self.state, payload = self._decode_tick(
+                self.params, self.state, nk, sk)
+            payload = np.asarray(jax.device_get(payload))  # the ONE transfer
+            for i, (tok, is_done) in enumerate(payload):
+                req = self.slot_req[i]
+                if req is None or tok < 0:
+                    continue
+                self.scheduler.emit(req, int(tok))
+                if is_done:
+                    self.slot_req[i] = None
+                    done.append(self.scheduler.retire(req))
+        self.scheduler.metrics["ticks"] += 1
+        return done
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_ticks):
+            if not self.scheduler.waiting and \
+                    all(r is None for r in self.slot_req):
+                break
+            finished.extend(self.tick())
+        return finished
+
+    def resize_slots(self, new_slots: int) -> None:
+        """Elastic slot-count change mid-flight (scale with offered load).
+        Active slots are compacted to the front of the new stacked cache."""
+        from repro.runtime.elastic import resize_serving_state
+        keep = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if len(keep) > new_slots:
+            raise ValueError(
+                f"cannot shrink to {new_slots} slots with {len(keep)} active")
+        self.state = resize_serving_state(self.model, self.state, self.cap,
+                                          new_slots, keep)
+        self.slot_req = [self.slot_req[i] for i in keep] + \
+            [None] * (new_slots - len(keep))
+        self.n_slots = new_slots
+
+    @property
+    def metrics(self) -> Dict[str, Any]:
+        return self.scheduler.metrics
+
+
+class PerSlotLMServer:
+    """The seed's slot-at-a-time decode loop — kept ONLY as the parity
+    oracle for the batched engine (token-exact under greedy decode) and as
+    the baseline of ``benchmarks/bench_serving.py``. Each tick runs one
+    batch-1 jitted decode + one host sync per active slot."""
 
     def __init__(self, model, params, cap: int, batch_slots: int = 8,
                  greedy: bool = True):
@@ -44,7 +421,7 @@ class LMServer:
         self.cap = cap
         self.greedy = greedy
         self.slots: List[Optional[Request]] = [None] * batch_slots
-        self.waiting: List[Request] = []
+        self.waiting: collections.deque[Request] = collections.deque()
         self._prefill = jax.jit(
             lambda p, toks: model.prefill(p, toks, cap))
         self._decode = jax.jit(model.decode_step)
@@ -56,16 +433,27 @@ class LMServer:
         self.waiting.append(req)
 
     def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.waiting:
-                req = self.waiting.pop(0)
+        done = []
+        for i in range(len(self.slots)):
+            while self.slots[i] is None and self.waiting:
+                req = self.waiting.popleft()
+                req.t_admit = time.perf_counter()
                 logits, cache = self._prefill(
                     self.params, jnp.asarray(req.prompt)[None, :])
-                tok = int(jnp.argmax(logits[0, -1]))
-                req.tokens_out.append(tok)
+                tok = int(jnp.argmax(logits[0, -1]))   # materializes on host
                 req.t_first_token = time.perf_counter()
+                req.tokens_out.append(tok)
+                if (req.eos_id is not None and tok == req.eos_id) or \
+                        req.max_tokens <= 1:
+                    # retired at admission; the slot stays free
+                    req.t_done = time.perf_counter()
+                    self.metrics["completed"] += 1
+                    self.metrics["tokens"] += len(req.tokens_out)
+                    done.append(req)
+                    continue
                 self.slots[i] = req
                 self._caches[i] = cache
+        return done
 
     def _retire(self, i: int):
         req = self.slots[i]
@@ -78,8 +466,7 @@ class LMServer:
 
     def tick(self) -> List[Request]:
         """Admit waiting requests, decode one token for each active slot."""
-        self._admit()
-        done = []
+        done = list(self._admit())
         for i, req in enumerate(self.slots):
             if req is None:
                 continue

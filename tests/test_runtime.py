@@ -12,7 +12,7 @@ from repro.models import build_model
 from repro.models.lm import LMCallOptions
 from repro.optim import schedules
 from repro.runtime.elastic import StragglerMitigator
-from repro.runtime.server import LMServer, Request
+from repro.runtime.server import LMServer, PerSlotLMServer, Request
 
 
 @pytest.fixture(scope="module")
@@ -24,9 +24,10 @@ def served():
     return cfg, model, params
 
 
-def test_server_completes_all_requests(served):
+@pytest.mark.parametrize("engine", [LMServer, PerSlotLMServer])
+def test_server_completes_all_requests(served, engine):
     cfg, model, params = served
-    server = LMServer(model, params, cap=24, batch_slots=2)
+    server = engine(model, params, cap=24, batch_slots=2)
     rng = np.random.default_rng(0)
     for rid in range(5):
         server.submit(Request(rid=rid,
@@ -39,12 +40,13 @@ def test_server_completes_all_requests(served):
     assert server.metrics["completed"] == 5
 
 
-def test_server_greedy_matches_manual_decode(served):
+@pytest.mark.parametrize("engine", [LMServer, PerSlotLMServer])
+def test_server_greedy_matches_manual_decode(served, engine):
     cfg, model, params = served
     rng = np.random.default_rng(1)
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
 
-    server = LMServer(model, params, cap=24, batch_slots=1)
+    server = engine(model, params, cap=24, batch_slots=1)
     server.submit(Request(rid=0, prompt=prompt, max_tokens=3))
     [req] = server.run_until_drained()
 

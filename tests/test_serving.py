@@ -1,0 +1,369 @@
+"""Continuous-batching serving engine: scheduler semantics (FCFS admission,
+EOS vs max-token retirement, slot reuse), token-exact parity of the batched
+engine vs the retained per-slot oracle, stacked-cache helpers, per-tick
+noise-key plumbing, elastic slot resize, and stacked-layout shardings."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import gemm
+from repro.core.precision import get_policy
+from repro.models import build_model
+from repro.models import lm as lm_helpers
+from repro.models.lm import LMCallOptions
+from repro.runtime.server import (LMServer, PerSlotLMServer, Request,
+                                  Scheduler, default_buckets, pick_bucket)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg, get_policy("mirage"),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_requests(cfg, n, lens, max_tokens=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        lens[i % len(lens)]).astype(np.int32),
+                    max_tokens=max_tokens)
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# parity: batched engine vs per-slot oracle
+# --------------------------------------------------------------------------
+
+def test_batched_engine_token_exact_vs_oracle(served):
+    """The acceptance gate: greedy decode through the stacked-cache engine
+    (mixed prompt lengths -> mixed buckets, slot reuse) must emit exactly
+    the oracle's tokens for every request."""
+    cfg, model, params = served
+    batched = LMServer(model, params, cap=24, batch_slots=3)
+    oracle = PerSlotLMServer(model, params, cap=24, batch_slots=3)
+    for server, seed in ((batched, 0), (oracle, 0)):
+        for r in _mk_requests(cfg, 7, lens=[8, 11, 6], max_tokens=5,
+                              seed=seed):
+            server.submit(r)
+    fa = {r.rid: r.tokens_out for r in batched.run_until_drained()}
+    fb = {r.rid: r.tokens_out for r in oracle.run_until_drained()}
+    assert set(fa) == set(fb) == set(range(7))
+    assert fa == fb
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "mamba2-2.7b",
+                                  "zamba2-2.7b"])
+def test_parity_across_families(arch):
+    """SWA ring masks (mixtral), exact-length SSM bucketing (mamba2) and
+    the vector-idx hybrid shared-attention decode (zamba2) all stay
+    token-identical to the oracle."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, get_policy("mirage"),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    batched = LMServer(model, params, cap=20, batch_slots=2)
+    oracle = PerSlotLMServer(model, params, cap=20, batch_slots=2)
+    for server in (batched, oracle):
+        for r in _mk_requests(cfg, 3, lens=[6, 9], max_tokens=3, seed=2):
+            server.submit(r)
+    fa = {r.rid: r.tokens_out for r in batched.run_until_drained()}
+    fb = {r.rid: r.tokens_out for r in oracle.run_until_drained()}
+    assert fa == fb and len(fa) == 3
+
+
+def test_batched_engine_fewer_ticks_than_oracle(served):
+    """Occupancy batches into ONE decode per tick: serving n requests on n
+    slots takes ~max_tokens ticks, not n * max_tokens."""
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=3)
+    for r in _mk_requests(cfg, 3, lens=[8], max_tokens=6):
+        server.submit(r)
+    server.run_until_drained()
+    assert server.metrics["completed"] == 3
+    # 3 requests x 6 tokens = 18 tokens; 1 prefill + 5 decode ticks
+    assert server.metrics["ticks"] <= 7
+
+
+# --------------------------------------------------------------------------
+# scheduler semantics
+# --------------------------------------------------------------------------
+
+def test_admission_order_is_fcfs(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=1)
+    reqs = _mk_requests(cfg, 4, lens=[8], max_tokens=3)
+    for r in reqs:
+        server.submit(r)
+    finished = server.run_until_drained()
+    # single slot: strict FCFS completion order, monotone admission stamps
+    assert [r.rid for r in finished] == [0, 1, 2, 3]
+    admits = [r.t_admit for r in finished]
+    assert admits == sorted(admits)
+    assert all(r.t_admit >= r.t_enqueue for r in finished)
+
+
+def test_eos_vs_max_token_retirement(served):
+    cfg, model, params = served
+    [probe] = _mk_requests(cfg, 1, lens=[8], max_tokens=6, seed=3)
+    s0 = LMServer(model, params, cap=24, batch_slots=1)
+    s0.submit(probe)
+    [r0] = s0.run_until_drained()
+    eos = r0.tokens_out[2]          # a token the model WILL emit at step 2
+
+    s1 = LMServer(model, params, cap=24, batch_slots=2)
+    [req_eos] = _mk_requests(cfg, 1, lens=[8], max_tokens=20, seed=3)
+    req_eos.eos_id = eos
+    [req_max] = _mk_requests(cfg, 1, lens=[8], max_tokens=4, seed=4)
+    req_max.rid = 1
+    s1.submit(req_eos)
+    s1.submit(req_max)
+    done = {r.rid: r for r in s1.run_until_drained()}
+    # EOS retirement: stops at the eos token, well before max_tokens
+    assert done[0].tokens_out[-1] == eos
+    assert len(done[0].tokens_out) < 20
+    # max-token retirement: exactly the budget
+    assert len(done[1].tokens_out) == 4
+
+
+@pytest.mark.parametrize("engine", [LMServer, PerSlotLMServer])
+def test_retire_at_admission(served, engine):
+    """A request whose prefill token is already EOS, or whose budget is one
+    token, retires at admission with exactly one emitted token — it never
+    occupies a decode slot."""
+    cfg, model, params = served
+    [probe] = _mk_requests(cfg, 1, lens=[8], max_tokens=2, seed=11)
+    s0 = LMServer(model, params, cap=24, batch_slots=1)
+    s0.submit(probe)
+    [r0] = s0.run_until_drained()
+    first = r0.tokens_out[0]
+
+    server = engine(model, params, cap=24, batch_slots=1)
+    [req_eos] = _mk_requests(cfg, 1, lens=[8], max_tokens=20, seed=11)
+    req_eos.eos_id = first
+    [req_one] = _mk_requests(cfg, 1, lens=[8], max_tokens=1, seed=12)
+    req_one.rid = 1
+    server.submit(req_eos)
+    server.submit(req_one)
+    done = {r.rid: r for r in server.run_until_drained()}
+    assert done[0].tokens_out == [first]
+    assert len(done[1].tokens_out) == 1
+    assert server.metrics["completed"] == 2
+
+
+def test_slot_reuse_after_retire(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=2)
+    admitted_slots = []
+    orig_admit = server._admit
+
+    def spy_admit():
+        before = list(server.slot_req)
+        retired = orig_admit()
+        for i, (a, b) in enumerate(zip(before, server.slot_req)):
+            if a is None and b is not None:
+                admitted_slots.append((b.rid, i))
+        return retired
+    server._admit = spy_admit
+    for r in _mk_requests(cfg, 5, lens=[8], max_tokens=3):
+        server.submit(r)
+    finished = server.run_until_drained()
+    assert len(finished) == 5
+    assert server.metrics["completed"] == 5
+    assert all(r is None for r in server.slot_req)
+    # with 5 requests over 2 slots, some slot served >= 2 requests
+    slots_used = [s for _, s in admitted_slots]
+    assert max(np.bincount(slots_used)) >= 2
+
+
+def test_streaming_callback_and_latency_metrics(served):
+    cfg, model, params = served
+    streamed = []
+    server = LMServer(model, params, cap=24, batch_slots=2,
+                      on_token=lambda req, tok: streamed.append((req.rid, tok)))
+    for r in _mk_requests(cfg, 3, lens=[8], max_tokens=4):
+        server.submit(r)
+    finished = server.run_until_drained()
+    per_rid = {r.rid: [t for rid, t in streamed if rid == r.rid]
+               for r in finished}
+    for r in finished:
+        assert per_rid[r.rid] == r.tokens_out
+        assert r.t_enqueue <= r.t_admit <= r.t_first_token <= r.t_done
+        assert r.ttft >= 0 and r.tpot >= 0 and r.queue_time >= 0
+    lat = server.scheduler.latency_summary()
+    assert lat["ttft_mean_s"] > 0
+
+
+def test_scheduler_component_is_deque_fcfs():
+    sched = Scheduler()
+    import collections
+    assert isinstance(sched.waiting, collections.deque)
+    for i in range(5):
+        sched.submit(Request(rid=i, prompt=np.zeros(4, np.int32)))
+    taken = sched.take(3)
+    assert [r.rid for r in taken] == [0, 1, 2]
+    assert [r.rid for r in sched.waiting] == [3, 4]
+
+
+def test_bucketing():
+    assert default_buckets(64, min_bucket=8) == (8, 16, 32, 64)
+    assert pick_bucket(5, (8, 16)) == 8
+    assert pick_bucket(9, (8, 16)) == 16
+    with pytest.raises(ValueError):
+        pick_bucket(17, (8, 16))
+
+
+def test_overlong_prompt_rejected(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=1)
+    with pytest.raises(ValueError):
+        server.submit(Request(rid=0, prompt=np.zeros(100, np.int32)))
+
+
+# --------------------------------------------------------------------------
+# stacked-cache helpers + elastic resize
+# --------------------------------------------------------------------------
+
+def test_cache_insert_extract_roundtrip(served):
+    cfg, model, params = served
+    rng = np.random.default_rng(0)
+    live = model.init_cache(4, 24, per_slot_idx=True)
+    new = {k: jnp.asarray(rng.normal(size=v.shape).astype(np.float32))
+           if k != "idx" else jnp.asarray([3, 7], jnp.int32)
+           for k, v in model.init_cache(2, 24, per_slot_idx=True).items()}
+    inserted = lm_helpers.cache_insert(live, new, jnp.asarray([2, 0]))
+    back = lm_helpers.cache_extract(inserted, [2, 0])
+    for k in new:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(new[k]), err_msg=k)
+    # untouched slots stay zero
+    assert float(jnp.abs(inserted["k"][:, 1]).sum()) == 0.0
+    # out-of-bounds sentinel rows are dropped, not wrapped
+    dropped = lm_helpers.cache_insert(live, new, jnp.asarray([4, 1]))
+    np.testing.assert_array_equal(np.asarray(dropped["k"][:, 1]),
+                                  np.asarray(new["k"][:, 1]))
+    assert float(jnp.abs(dropped["k"][:, [0, 2, 3]]).sum()) == 0.0
+
+
+def test_resize_slots_preserves_tokens(served):
+    cfg, model, params = served
+    reqs = lambda: _mk_requests(cfg, 5, lens=[8], max_tokens=5, seed=9)
+    grown = LMServer(model, params, cap=24, batch_slots=2)
+    for r in reqs():
+        grown.submit(r)
+    grown.tick()
+    grown.tick()
+    grown.resize_slots(3)
+    fa = {r.rid: r.tokens_out for r in grown.run_until_drained()}
+    fixed = LMServer(model, params, cap=24, batch_slots=3)
+    for r in reqs():
+        fixed.submit(r)
+    fb = {r.rid: r.tokens_out for r in fixed.run_until_drained()}
+    assert len(fa) == 5
+    # greedy decode is deterministic: the in-flight slots carried across the
+    # resize must keep emitting exactly their original continuations
+    assert fa == fb
+
+
+# --------------------------------------------------------------------------
+# per-tick noise keys (noisy / RRNS serving)
+# --------------------------------------------------------------------------
+
+def test_noise_key_scope_feeds_stochastic_backends():
+    from repro.core.gemm import mirage_matmul_nograd
+
+    policy = get_policy("mirage_rns_noisy", snr_db=20.0)
+    x = np.asarray(np.random.default_rng(0).normal(size=(4, 32)), np.float32)
+    w = np.asarray(np.random.default_rng(1).normal(size=(32, 8)), np.float32)
+    key = jax.random.PRNGKey(0)
+    with gemm.noise_key_scope(key):
+        a1 = mirage_matmul_nograd(x, w, policy)
+        a2 = mirage_matmul_nograd(x, w, policy)
+    # consecutive calls under one scope draw DIFFERENT subkeys
+    assert not np.allclose(np.asarray(a1), np.asarray(a2))
+    # reopening the same scope replays the same subkey sequence
+    with gemm.noise_key_scope(key):
+        b1 = mirage_matmul_nograd(x, w, policy)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(b1))
+    # no scope + no seed -> the existing loud error
+    with pytest.raises(ValueError, match="randomness"):
+        mirage_matmul_nograd(x, w, policy)
+
+
+def test_layer_noise_independent_inside_scan():
+    """The per-call-site counter is a trace-time constant: without
+    fold_noise_scope every iteration of a layer scan would reuse one noise
+    draw per GEMM site. The model's layer scans fold the traced index."""
+    from repro.core.gemm import mirage_matmul_nograd
+
+    policy = get_policy("mirage_rns_noisy", snr_db=20.0)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 32)),
+                    jnp.float32)
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)),
+                    jnp.float32)
+
+    @jax.jit
+    def scanned(key):
+        with gemm.noise_key_scope(key):
+            def body(c, i):
+                with gemm.fold_noise_scope(i):
+                    return c, mirage_matmul_nograd(x, w, policy)
+            _, ys = jax.lax.scan(body, 0, jnp.arange(3))
+        return ys
+
+    ys = np.asarray(scanned(jax.random.PRNGKey(0)))
+    assert not np.allclose(ys[0], ys[1])
+    assert not np.allclose(ys[1], ys[2])
+
+
+def test_tick_keys_are_fresh_per_tick(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=2)
+    k0, s0 = server._next_keys(0, 0)
+    k1, s1 = server._next_keys(0, 1)
+    kp, sp = server._next_keys(1, 0)   # prefill stream is distinct
+    assert not np.array_equal(np.asarray(k0), np.asarray(k1))
+    assert not np.array_equal(np.asarray(k0), np.asarray(kp))
+    assert not np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+def test_noisy_serving_deterministic_per_seed():
+    """Same policy.noise_seed => identical served tokens (fresh noise per
+    tick is folded from the seed + tick counter, not wall-clock state)."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    policy = get_policy("mirage_rns_noisy", snr_db=28.0, noise_seed=7)
+    model = build_model(cfg, policy, LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+
+    def serve_once():
+        server = LMServer(model, params, cap=20, batch_slots=2)
+        for r in _mk_requests(cfg, 2, lens=[6], max_tokens=3, seed=5):
+            server.submit(r)
+        return {r.rid: tuple(r.tokens_out)
+                for r in server.run_until_drained()}
+
+    assert serve_once() == serve_once()
+
+
+# --------------------------------------------------------------------------
+# stacked-layout shardings
+# --------------------------------------------------------------------------
+
+def test_serve_state_shardings_cover_engine_state(served):
+    from jax.sharding import Mesh, NamedSharding
+
+    from repro.parallel.sharding import serve_state_shardings
+
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=2)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    shardings = serve_state_shardings(mesh, cfg, server.state)
+    flat, _ = jax.tree_util.tree_flatten(shardings)
+    assert flat and all(isinstance(s, NamedSharding) for s in flat)
+    # per-slot idx vector gets a (replicated-or-dp) rank-1-compatible spec
+    jax.device_put(server.state, shardings)
