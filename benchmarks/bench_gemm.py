@@ -80,6 +80,41 @@ def _bench_pair(f_ref, f_new, x, w, iters=9):
     return np.median(t_ref) * 1e3, np.median(t_new) * 1e3
 
 
+def _assert_decode_matches_oracle():
+    """Bit-parity of the fused RRNS decode vs the frozen numpy oracle on a
+    randomized corruption sample — gate before any rrns timing is reported."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.analog import rrns
+    from repro.core import noise
+    from repro.core.precision import special_moduli
+
+    base = list(special_moduli(5))
+    allm = base + list(rrns.default_redundant_moduli(5))
+    psi = (int(np.prod(base)) - 1) // 2
+    tables = rrns.build_tables(allm, 3, psi)
+    rng = np.random.default_rng(7)
+    xs = rng.integers(-psi, psi + 1, size=2048)
+    res = np.stack([np.mod(xs, m) for m in allm]).astype(np.int32)
+    for j in range(res.shape[1]):
+        if j % 3 == 0:
+            continue
+        p = rng.integers(0, len(allm))
+        res[p, j] = rng.integers(0, allm[p])
+        if j % 5 == 0:
+            q = (p + 1) % len(allm)
+            res[q, j] = rng.integers(0, allm[q])
+    dec, cor = jax.jit(lambda r: rrns.rrns_decode(r, tables))(jnp.asarray(res))
+    dec_np, cor_np = noise.rrns_decode_np(res.astype(np.int64), allm, 3, psi)
+    if not (np.array_equal(np.asarray(dec), dec_np)
+            and np.array_equal(np.asarray(cor), cor_np)):
+        raise AssertionError(
+            "fused rrns_decode is not bit-identical to the rrns_decode_np "
+            "oracle — refusing to benchmark a decode that computes "
+            "different answers")
+
+
 def gemm_walltime(print_fn=print, iters=9):
     """Vectorized group-batched backends vs the seed fori_loop references.
 
@@ -87,11 +122,18 @@ def gemm_walltime(print_fn=print, iters=9):
     decode regime (M=1, where the seed's G sequential dispatches dominate),
     a wide-MLP prefill slice, and a square training GEMM. Outputs are
     asserted bit-identical before timing.
+
+    The ``rrns`` rows compare the error-corrected path before/after this
+    PR's fast-path work: ``mirage_rrns_ref`` (per-call weight encode +
+    subset-loop decode, frozen) vs ``mirage_rrns`` executing against
+    admission-time stationary residues with the fused single-pass decode.
+    The fused decode is bit-checked against the frozen ``rrns_decode_np``
+    oracle and both backends' outputs asserted identical before timing.
     """
     import jax
     import numpy as np
     import jax.numpy as jnp
-    from repro.core import gemm as gemm_mod
+    from repro.core import gemm as gemm_mod, stationary
     from repro.core.precision import get_policy
 
     print_fn("# gemm wall-clock: group-batched backends vs seed fori_loop")
@@ -125,6 +167,29 @@ def gemm_walltime(print_fn=print, iters=9):
             results[(sname, pname)] = speedup
             print_fn(f"gemm,{pname}_{sname},{ms_ref:.2f}->{ms_new:.2f}ms,"
                      f"{speedup:.1f}x,bitexact={same}")
+
+    # error-corrected path, large-N serving-decode regime (this is where
+    # the pre-PR per-call weight encode + O(S^2) vote dominated walltime)
+    _assert_decode_matches_oracle()
+    sname, (M, K, N) = "rrns_decode_8x2048x2048", (8, 2048, 2048)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    p_ref, p_new = get_policy("mirage_rrns_ref"), get_policy("mirage_rrns")
+    sw = stationary.encode_stationary(w, p_new)        # once per admission
+    f_ref = jax.jit(lambda a, b, pp=p_ref: gemm_mod.mirage_matmul_nograd(a, b, pp))
+    f_new = jax.jit(lambda a, b, pp=p_new: gemm_mod.mirage_matmul_nograd(a, b, pp))
+    same = np.array_equal(np.asarray(f_ref(x, w)), np.asarray(f_new(x, sw)))
+    if not same:
+        raise AssertionError(
+            "mirage_rrns (fused decode + stationary residues) is not "
+            "bit-identical to mirage_rrns_ref — refusing to report a "
+            "speedup for a backend that computes different answers")
+    ms_ref, ms_new = _bench_pair(f_ref, lambda a, b: f_new(a, sw), x, w,
+                                 iters=max(3, iters // 2))
+    speedup = ms_ref / ms_new
+    results[(sname, "rrns")] = speedup
+    print_fn(f"gemm,rrns_{sname},{ms_ref:.2f}->{ms_new:.2f}ms,"
+             f"{speedup:.1f}x,bitexact={same}")
     return results
 
 

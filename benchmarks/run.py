@@ -42,7 +42,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,fig5a,fig5b,fig6,fig7,"
-                         "fig8,fig9,table3,ops,noise,serving,roofline")
+                         "fig8,fig9,table3,gemm,ops,noise,serving,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every row as structured JSON")
     ap.add_argument("--steps", type=int, default=None,
@@ -68,6 +68,8 @@ def main(argv=None):
             bench_gemm.fig_5b()
         if want("fig9"):
             bench_gemm.fig_9()
+        if want("gemm"):
+            bench_gemm.gemm_walltime()
         if want("fig6"):
             bench_dataflow.fig_6()
         if want("fig7"):

@@ -10,10 +10,31 @@ RRNS result; Demirkiran et al., arXiv:2309.10759).
 ``repro.core.noise.rrns_decode_np`` is the frozen host-side parity oracle
 (python-int CRT, dict voting). This module is the deployable counterpart:
 all ``C(n+r, n)`` CRT reconstructions are precomputed as static weight
-tables (:func:`build_tables`), so a decode is one batched modular
-contraction plus vectorized vote counting — no host callbacks, safe under
-``jax.jit`` / ``jax.vmap``, and bit-matching the oracle (vote counts and
-first-max tie-breaking included).
+tables (:func:`build_tables`) and :func:`rrns_decode` is a **single-pass
+fused decode**: one reconstruction and one vote count per subset, no
+pairwise value-comparison tensor at all. The quadratic compare is avoided
+with a counting identity: a subset ``t`` reconstructs the same value as
+``s`` iff every modulus of ``t`` is consistent with ``X_s`` (uniqueness of
+CRT inside the subset range, which :func:`build_tables` guarantees covers
+the legal interval), so the oracle's vote count for ``X_s`` is exactly
+
+    votes[s] = C(n_required + extra_s, n_required)
+
+where ``extra_s`` counts the *complement* moduli consistent with ``X_s``
+(the ``n_required`` members of ``s`` are consistent by construction). That
+replaces the ``O(S^2)`` equality cube of the seed decode with ``O(S *
+(n_total - n_required))`` cheap congruence checks, and the winner is
+tracked with a running first-max select instead of an argmax + gather pass.
+
+At the paper operating point every quantity fits the f32 exact-integer
+window, so the whole decode runs as fused f32 FMA/select chains (one
+round-based modular fold per subset, one 4-op divisibility test per
+consistency check) — no integer division anywhere. Moduli sets too large
+for the f32 window fall back to an int32 per-term modular accumulation
+(same voting identity, still single-pass). ``rrns_decode_reference`` keeps
+the pre-fusion subset-loop decode, frozen as a parity oracle and benchmark
+baseline; ``repro.kernels.rrns_decode`` is the Pallas kernel counterpart
+(subset-major grid) reachable through ``policy.use_pallas``.
 
 int32 safety: every per-term product ``res_i * c_i`` is bounded by
 ``(m_max - 1) * (M_subset - 1)`` and every vote sum by the subset count;
@@ -57,6 +78,11 @@ class RRNSTables:
     of modulus i in subset s (0 when i is not in s), so the subset-s value
     is ``(sum_i res_i * weights[s, i]) mod subset_M[s]``, sign-folded at
     ``subset_psi[s]``. A legal decode satisfies ``|X| <= psi``.
+
+    The fused decode additionally uses the member/complement index tables
+    (``members``/``comp``), the vote lookup ``binom[e] = C(n_required + e,
+    n_required)`` and, when ``f32_exact`` (every accumulation bound inside
+    the f32 exact-integer window 2^24), runs entirely in f32.
     """
 
     moduli: Tuple[int, ...]
@@ -66,10 +92,19 @@ class RRNSTables:
     weights: np.ndarray       # (S, n_total) int32
     subset_M: np.ndarray      # (S,) int32
     subset_psi: np.ndarray    # (S,) int32
+    members: np.ndarray       # (S, n_required) int32 member positions
+    comp: np.ndarray          # (S, n_total - n_required) int32 complement
+    binom: Tuple[int, ...]    # vote count per consistent-complement count
+    f32_exact: bool           # every decode bound fits the f32 window
 
     @property
     def n_subsets(self) -> int:
         return len(self.subsets)
+
+
+# f32 holds integers exactly up to 2^24; every fused-decode accumulation
+# (subset reconstruction sum, quotient * modulus product) must stay inside.
+_F32_WINDOW = 1 << 24
 
 
 def build_tables(moduli: Sequence[int], n_required: int,
@@ -88,6 +123,7 @@ def build_tables(moduli: Sequence[int], n_required: int,
     m_max = max(moduli)
     weights = np.zeros((len(subsets), n_total), np.int64)
     subset_M = np.zeros(len(subsets), np.int64)
+    f32_exact = True
     for s, sub in enumerate(subsets):
         sub_moduli = [moduli[i] for i in sub]
         M_s, consts = rns.crt_constants(sub_moduli)
@@ -106,12 +142,26 @@ def build_tables(moduli: Sequence[int], n_required: int,
                 f"legal interval [-{psi}, {psi}] — redundant moduli must be "
                 f">= every base modulus (classic RRNS requirement), else "
                 f"clean values alias to wrong legal decodes")
+        # fused f32 path: the whole reconstruction sum (n_required terms,
+        # no intermediate reduction) plus one fold step must stay exact
+        if n_required * (m_max - 1) * (M_s - 1) + M_s >= _F32_WINDOW:
+            f32_exact = False
+    members = np.asarray(subsets, np.int64).reshape(len(subsets), n_required)
+    comp = np.asarray(
+        [[i for i in range(n_total) if i not in sub] for sub in subsets],
+        np.int64).reshape(len(subsets), n_total - n_required)
+    binom = tuple(math.comb(n_required + e, n_required)
+                  for e in range(n_total - n_required + 1))
     return RRNSTables(
         moduli=moduli, n_required=n_required, psi=int(psi),
         subsets=subsets,
         weights=weights.astype(np.int32),
         subset_M=subset_M.astype(np.int32),
         subset_psi=((subset_M - 1) // 2).astype(np.int32),
+        members=members.astype(np.int32),
+        comp=comp.astype(np.int32),
+        binom=binom,
+        f32_exact=bool(f32_exact),
     )
 
 
@@ -122,29 +172,146 @@ def get_tables(moduli: Tuple[int, ...], n_required: int,
     return build_tables(moduli, n_required, psi)
 
 
+def rrns_moduli(policy) -> Tuple[int, ...]:
+    """Base + redundant moduli a policy's error-corrected mode executes
+    over (explicit ``policy.redundant_moduli``, else the default primes).
+    Single source of truth shared by the ``mirage_rrns`` backend and the
+    stationary-weight encoder — a weight programmed over any other set
+    fails the backend's static check."""
+    extra = tuple(policy.redundant_moduli)
+    if not extra:
+        extra = default_redundant_moduli(policy.k)
+    return tuple(policy.moduli) + extra
+
+
 def rrns_encode(x: jax.Array, moduli: Sequence[int]) -> jax.Array:
     """Residues of x over the full (base + redundant) moduli set, stacked on
     a new leading axis — plain forward conversion, redundancy is free."""
     return rns.to_rns(x, moduli)
 
 
+# --------------------------------------------------------------------------
+# Fused single-pass decode
+# --------------------------------------------------------------------------
+
+def _fold_signed_f32(acc: jax.Array, M_s: int, psi_s: int) -> jax.Array:
+    """Signed representative of ``acc mod M_s`` in the subset window
+    ``[psi_s + 1 - M_s, psi_s]`` via one round-based fold.
+
+    ``floor(acc/M + 1/2)`` lands the remainder (an exact f32 integer) in
+    roughly the right window already; two selects absorb both the half-up
+    boundary and the reciprocal's possible off-by-one — bit-identical to
+    the reference's "reduce to [0, M) then sign-fold" for every integer
+    ``acc`` inside the f32 exact window (property-tested vs the oracle).
+    """
+    Mf, lo = float(M_s), float(psi_s + 1 - M_s)
+    q = jnp.floor(acc * (1.0 / Mf) + 0.5)
+    X = acc - q * Mf
+    X = jnp.where(X > float(psi_s), X - Mf, X)
+    return jnp.where(X < lo, X + Mf, X)
+
+
+def _is_multiple_f32(d: jax.Array, m: int) -> jax.Array:
+    """Exact ``d ≡ 0 (mod m)`` for integer-valued f32 ``d`` (|d| < 2^24).
+
+    ``d - round(d/m) * m`` is exactly zero iff m divides d: when it does,
+    the rounded quotient is exact (|d/m| ≪ 2^23 keeps the reciprocal error
+    below 1/2); when it does not, no integer quotient can cancel d.
+    """
+    k = jnp.round(d * (1.0 / float(m)))
+    return d - k * float(m) == 0.0
+
+
 def rrns_decode(residues: jax.Array,
                 tables: RRNSTables) -> Tuple[jax.Array, jax.Array]:
-    """Majority-vote RRNS decode, fully vectorized (jit/vmap-safe).
+    """Fused majority-vote RRNS decode (jit/vmap-safe, single pass).
 
     residues: (n_total, ...) int32 over ``tables.moduli``.
     Returns ``(decoded, corrected)``: int32 values (0 where no subset lands
     in the legal range) and a bool mask marking positions where at least one
     subset disagreed (i.e. an error was detected/corrected) — identical
-    semantics to the :func:`repro.core.noise.rrns_decode_np` oracle.
+    semantics (bit-identical outputs) to the
+    :func:`repro.core.noise.rrns_decode_np` oracle.
+
+    One pass over the subsets: each subset contributes one reconstruction,
+    ``n_total - n_required`` congruence checks (its vote count is the
+    binomial of its consistency count — see the module docstring), and one
+    first-max running select. No ``(S, ...)`` stack, no pairwise compares,
+    no argmax/gather epilogue.
     """
+    S = tables.n_subsets
+    n_comp = tables.comp.shape[1]
+    moduli = tables.moduli
+    fast = tables.f32_exact
+    # f32 fast path: every value is an exact f32 integer (|X| <= psi_s <
+    # 2^24, checked at build time). General fallback keeps X/best in int32
+    # (subset ranges can exceed the f32 window there).
+    res = residues.astype(jnp.float32 if fast else jnp.int32)
+    best_votes = jnp.full(res.shape[1:], -2.0, jnp.float32)
+    best_val = jnp.zeros(res.shape[1:], jnp.float32 if fast else jnp.int32)
+    for s in range(S):
+        M_s = int(tables.subset_M[s])
+        psi_s = int(tables.subset_psi[s])
+        if fast:
+            # whole reconstruction sum is exact in f32 (checked at build)
+            acc = None
+            for j in tables.members[s]:
+                term = res[int(j)] * float(int(tables.weights[s, int(j)]))
+                acc = term if acc is None else acc + term
+            X = _fold_signed_f32(acc, M_s, psi_s)
+        else:
+            # general moduli: int32 per-term modular accumulation
+            acc = jnp.zeros(res.shape[1:], jnp.int32)
+            for j in tables.members[s]:
+                c = int(tables.weights[s, int(j)])
+                acc = jnp.mod(acc + res[int(j)] * c, M_s)
+            X = jnp.where(acc > psi_s, acc - M_s, acc)
+        # consistency count over the complement moduli; the n_required
+        # members are congruent by construction (exact CRT), so the vote
+        # count is binom[extra] = C(n_required + extra, n_required)
+        extra = None
+        for i in tables.comp[s]:
+            m_i = moduli[int(i)]
+            if fast:
+                ok = _is_multiple_f32(X - res[int(i)], m_i)
+            else:
+                ok = jnp.mod(X - res[int(i)], m_i) == 0
+            ok = ok.astype(jnp.float32)
+            extra = ok if extra is None else extra + ok
+        votes = jnp.full(res.shape[1:], float(tables.binom[0]))
+        if extra is not None:                  # n_required < n_total
+            for e in range(1, n_comp + 1):
+                votes = jnp.where(extra == float(e), float(tables.binom[e]),
+                                  votes)
+        legal = (jnp.abs(X) <= float(tables.psi) if fast
+                 else jnp.abs(X) <= tables.psi)
+        votes = jnp.where(legal, votes, -1.0)
+        # strict > keeps the FIRST max: subset order == the oracle's dict
+        # insertion order, so ties resolve to the first-inserted value
+        better = votes > best_votes
+        best_votes = jnp.where(better, votes, best_votes)
+        best_val = jnp.where(better, X, best_val)
+    any_legal = best_votes >= 0.0
+    zero = jnp.zeros((), best_val.dtype)
+    decoded = jnp.where(any_legal, best_val, zero).astype(jnp.int32)
+    corrected = jnp.where(any_legal, best_votes < float(S), True)
+    return decoded, corrected
+
+
+# --------------------------------------------------------------------------
+# Pre-fusion reference decode (frozen: parity oracle + benchmark baseline)
+# --------------------------------------------------------------------------
+
+def rrns_decode_reference(residues: jax.Array,
+                          tables: RRNSTables) -> Tuple[jax.Array, jax.Array]:
+    """The pre-fusion decode: python loop over subsets + ``O(S^2)`` vote
+    materialization. Kept verbatim as the walltime baseline of
+    ``benchmarks/bench_gemm.py`` and as a second parity oracle for the
+    fused decode — do not optimize."""
     S = tables.n_subsets
     res = residues.astype(jnp.int32)
     # reconstruct each subset with a static accumulation over its n_required
-    # members, reducing mod M_s per term so everything stays int32; the
-    # subset/member loops are python (static, small) so peak memory is
-    # O(output) rather than the O(S * n_total * output) of a fully batched
-    # contraction — decisive for GEMM-sized residue tensors
+    # members, reducing mod M_s per term so everything stays int32
     Xs = []
     for s, sub in enumerate(tables.subsets):
         M_s = int(tables.subset_M[s])
@@ -156,9 +323,7 @@ def rrns_decode(residues: jax.Array,
         Xs.append(jnp.where(acc > psi_s, acc - M_s, acc))    # sign fold
     X = jnp.stack(Xs, axis=0)                                # (S, ...)
     legal = jnp.abs(X) <= tables.psi
-    # votes[s] = #subsets t with a LEGAL value equal to X[s]; a python loop
-    # over the (static, small) subset axis keeps memory at O(S * out) rather
-    # than the O(S^2 * out) of a fully materialized equality cube
+    # votes[s] = #subsets t with a LEGAL value equal to X[s]
     votes = jnp.stack(
         [jnp.sum((X == X[s][None]) & legal, axis=0) for s in range(S)], axis=0)
     votes = jnp.where(legal, votes, -1)

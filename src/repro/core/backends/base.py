@@ -36,7 +36,17 @@ class GemmBackend:
       quantized: operands are quantized (not an exact-f32 baseline).
       supports_weight_stationary: honours ``policy.assume_quantized_weights``
         (weight operand already on the BFP grid; skips its own W quantize).
+      weight_stationary_aligned_only: the weight-stationary skip is exact
+        ONLY when the operand was quantized along the SAME contraction
+        grouping (true for the group-dot/RNS backends, whose mantissas must
+        be integers). ``gemm._mm_bwd`` re-quantizes the transposed dX read
+        for such backends instead of propagating the skip.
       supports_noise: honours ``policy.noise_sigma`` via the ``key`` argument.
+      supports_stationary_residues: accepts a
+        :class:`repro.core.stationary.StationaryResidues` container in the
+        ``w`` slot (pre-encoded, channel-programmed residues; the
+        program-once MMVMU dataflow) and skips the whole weight-side
+        quantize/encode/program pipeline.
       reference: seed/oracle implementation kept for parity testing — not a
         deployment path.
     """
@@ -46,7 +56,9 @@ class GemmBackend:
     description: str = ""
     quantized: bool = True
     supports_weight_stationary: bool = False
+    weight_stationary_aligned_only: bool = False
     supports_noise: bool = False
+    supports_stationary_residues: bool = False
     reference: bool = False
 
     def forward(self, x: jax.Array, w: jax.Array, policy,

@@ -74,6 +74,27 @@ DEFAULT_GROUP_BLOCK = _env_int("MIRAGE_SCAN_BLOCK", 8)
 F32_EXACT_WINDOW = 1 << 24
 
 
+def prepare_activations(
+    x: jax.Array, policy,
+) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """BFP-quantize the activation operand into group-major layout.
+
+    Returns ``(qx, sx, batch)``; the weight-side counterpart lives in
+    :func:`prepare_operands`. Split out so backends running against a
+    pre-encoded stationary weight (``repro.core.stationary``) can skip the
+    weight side entirely.
+    """
+    batch = x.shape[:-1]
+    t = bfp.bfp_quantize(x, policy.b_m, policy.g, policy.rounding)
+    G, g = t.mantissa.shape[-2], t.mantissa.shape[-1]
+    M = 1
+    for d in batch:
+        M *= d
+    qx = jnp.moveaxis(t.mantissa.reshape((M, G, g)), 1, 0)        # (G, M, g)
+    sx = jnp.moveaxis(t.scale.reshape((M, G, 1)), 1, 0)           # (G, M, 1)
+    return qx, sx, batch
+
+
 def prepare_operands(
     x: jax.Array, w: jax.Array, policy,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, Tuple[int, ...]]:
@@ -84,17 +105,18 @@ def prepare_operands(
     bit-identical to the seed's ``gemm.quantize_operands`` (property-tested),
     but the weight side is grouped in place along K — no (K, N) <-> (N, K)
     transpose round-trip.
+
+    Under ``policy.assume_quantized_weights`` (weight-stationary contract:
+    ``w`` is already on the BFP grid along this K-grouping) the weight side
+    uses the round/clip-free exact decomposition — bit-identical results,
+    less work per call.
     """
-    batch = x.shape[:-1]
-    t = bfp.bfp_quantize(x, policy.b_m, policy.g, policy.rounding)
-    G, g = t.mantissa.shape[-2], t.mantissa.shape[-1]
-    M = 1
-    for d in batch:
-        M *= d
-    qx = jnp.moveaxis(t.mantissa.reshape((M, G, g)), 1, 0)        # (G, M, g)
-    sx = jnp.moveaxis(t.scale.reshape((M, G, 1)), 1, 0)           # (G, M, 1)
-    qw, sw = bfp.bfp_quantize_contract(w, policy.b_m, policy.g,
-                                       policy.rounding)           # (G, g, N)
+    qx, sx, batch = prepare_activations(x, policy)
+    if policy.assume_quantized_weights:
+        qw, sw = bfp.bfp_decompose_contract(w, policy.b_m, policy.g)
+    else:
+        qw, sw = bfp.bfp_quantize_contract(w, policy.b_m, policy.g,
+                                           policy.rounding)       # (G, g, N)
     return qx, sx, qw, sw, batch
 
 

@@ -17,7 +17,9 @@ from repro.core.backends.base import register_fn
 
 
 @register_fn("mirage_faithful",
-             description="group-batched integer dots + FP32 scale-accumulate")
+             description="group-batched integer dots + FP32 scale-accumulate",
+             supports_weight_stationary=True,
+             weight_stationary_aligned_only=True)
 def _matmul_mirage_faithful(x, w, policy, *, key=None):
     qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
     # Scales are powers of two and constant per group: folding them into the

@@ -25,7 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import noise, rns
+from repro.core import noise, rns, stationary
 from repro.core.backends import grouped
 from repro.core.backends.base import register_fn
 
@@ -67,13 +67,20 @@ def _rns_blocked(xr, wr, sx, sw, policy, gb):
 
 
 def _rns_forward(x, w, policy, key):
-    qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
     k = policy.k
     moduli = policy.moduli
+    if isinstance(w, stationary.StationaryResidues):
+        # program-once dataflow: the weight side was quantized, converted
+        # and programmed at admission — only the streamed operand converts
+        w.check_matches(policy, moduli, x.shape[-1])
+        qx, sx, batch = grouped.prepare_activations(x, policy)
+        wr, sw = w.residues, w.scale
+    else:
+        qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
+        wr = rns.to_rns_special(qw, k)             # (n_mod, G, g, N) int32
     G, M, _ = qx.shape
-    N = qw.shape[-1]
+    N = wr.shape[-1]
     xr = rns.to_rns_special(qx, k)                 # (n_mod, G, M, g) int32
-    wr = rns.to_rns_special(qw, k)                 # (n_mod, G, g, N) int32
     noisy = policy.noise_sigma > 0
     if noisy and key is None:
         raise ValueError(
@@ -111,13 +118,19 @@ def _rns_forward(x, w, policy, key):
 
 @register_fn("mirage_rns",
              description="group-batched RNS path: residue GEMMs + CRT",
-             supports_noise=True)
+             supports_noise=True,
+             supports_stationary_residues=True,
+             supports_weight_stationary=True,
+             weight_stationary_aligned_only=True)
 def _matmul_mirage_rns(x, w, policy, *, key=None):
     return _rns_forward(x, w, policy, key)
 
 
 @register_fn("mirage_rns_pallas",
              description="mirage_rns forced through the Pallas residue kernel",
-             supports_noise=True)
+             supports_noise=True,
+             supports_stationary_residues=True,
+             supports_weight_stationary=True,
+             weight_stationary_aligned_only=True)
 def _matmul_mirage_rns_pallas(x, w, policy, *, key=None):
     return _rns_forward(x, w, policy.replace(use_pallas=True), key)

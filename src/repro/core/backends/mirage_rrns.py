@@ -4,48 +4,74 @@ Both backends run the group-batched residue pipeline of ``mirage_rns`` but
 route every operand and readout through the composable analog channel model
 (``repro.analog.channel``): DAC quantization and phase-shifter programming
 drift on the stationary operand, DAC quantization on the streamed operand,
-then inter-MMU crosstalk, SNR-parameterized shot/thermal detector noise and
-ADC re-quantization on the residue readout.
+then inter-MMU crosstalk, SNR-parameterized shot/thermal detector noise,
+ADC re-quantization and (optionally) correlated burst errors on the
+residue readout.
 
   mirage_rns_noisy  base moduli only; corrupted residues go straight into
                     CRT, so single phase-level errors explode (§VII) — the
                     uncorrected baseline of the noise story.
   mirage_rrns       residues carried over base + redundant moduli; the
-                    readout is majority-decoded with the jittable RRNS
-                    tables (``repro.analog.rrns``), correcting any single
-                    residue error with the default 2 redundant moduli.
+                    readout is majority-decoded with the fused single-pass
+                    RRNS decode (``repro.analog.rrns``), correcting any
+                    single residue error with the default 2 redundant
+                    moduli.
+  mirage_rrns_ref   the pre-fusion pipeline (per-call weight encode +
+                    subset-loop ``rrns_decode_reference``), frozen as the
+                    walltime baseline and a parity oracle.
+
+Fast-path machinery (this PR's tentpole):
+
+* **Stationary residues** — when the ``w`` slot carries a
+  :class:`repro.core.stationary.StationaryResidues` container (the serving
+  engine programs one per GEMM weight at admission), the whole weight-side
+  BFP-quantize → residue-encode → DAC/drift-program pipeline is skipped;
+  only the streamed activations are converted per call, mirroring the
+  paper's program-once MMVMU dataflow. Clean-channel outputs are
+  bit-identical to the per-call path.
+* **Pallas composition** — ``policy.use_pallas`` routes the residue
+  contraction through the ``rns_matmul`` Pallas kernel WITH the readout
+  channel fused into its epilogue at residue granularity (detector noise +
+  ADC on the VMEM-resident block; noise pre-sampled outside from the same
+  key the jnp path uses, so both paths are bit-identical at crosstalk=0).
+  Nonzero crosstalk needs neighbor-group outputs, so that config runs the
+  kernel clean and the readout chain in jnp — the channel always composes.
+* **Fused decode** — the RRNS majority vote runs as the single-pass
+  consistency-count decode (``rrns.rrns_decode``), or its subset-major
+  Pallas kernel (``kernels.rrns_decode``) under ``use_pallas``.
 
 Everything is pure jnp — no host callbacks — so both modes run fully
 jitted from the trainer, the serve launcher, and the benchmarks via
 ``policy.mode`` alone. Stochastic stages need randomness: pass an explicit
 ``key`` (``mirage_matmul_nograd``), or set ``policy.noise_seed`` for keyless
 call sites (jitted training) — the per-GEMM key is then the seed folded
-with the operand shapes, i.e. a static error pattern per GEMM site.
-
-Redundant residue contractions use the same ``grouped_residue_dot`` as the
-base moduli (any modulus within the f32-exact window works), so the r extra
-moduli cost exactly r more group-batched contractions — mirroring the r
-extra modular MMVMU columns the hardware would add.
+with a deterministic mix of the operand dims (no CPython ``hash``), i.e. a
+static, reproducible-everywhere error pattern per GEMM site.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.analog import channel, rrns
-from repro.core import rns
+from repro.core import rns, stationary
 from repro.core.backends import grouped
 from repro.core.backends.base import register_fn
 
 
-def _effective_rrns_moduli(policy) -> Tuple[int, ...]:
-    extra = tuple(policy.redundant_moduli)
-    if not extra:
-        extra = rrns.default_redundant_moduli(policy.k)
-    return tuple(policy.moduli) + extra
+def _dims_tag(shapes) -> int:
+    """Deterministic fold of operand dims into a 31-bit tag. Unlike
+    ``hash(tuple(shapes))`` this is implementation-independent, so a given
+    ``noise_seed`` reproduces the same static error pattern on every
+    CPython/platform."""
+    t = 0
+    for shape in shapes:
+        for d in shape:
+            t = (t * 1000003 + int(d) + 0x9E3779B1) % 0x7FFFFFFF
+    return t
 
 
 def _channel_key(policy, key: Optional[jax.Array],
@@ -54,48 +80,96 @@ def _channel_key(policy, key: Optional[jax.Array],
         return key
     if policy.noise_seed is not None:
         base = jax.random.PRNGKey(policy.noise_seed)
-        # fold in the operand shapes so forward / dX / dW GEMMs of one layer
+        # fold in the operand dims so forward / dX / dW GEMMs of one layer
         # draw distinct (but step-static) error patterns
-        tag = hash(tuple(shapes)) & 0x7FFFFFFF
-        return jax.random.fold_in(base, tag)
+        return jax.random.fold_in(base, _dims_tag(shapes))
     raise ValueError(
         "the analog channel has stochastic stages (snr_db / noise_sigma / "
-        "phase_drift_sigma) but no randomness source: pass an explicit PRNG "
-        "key via mirage_matmul_nograd(x, w, policy, key=key), or set "
-        "policy.noise_seed for keyless jitted call sites (trainer/serving)")
+        "phase_drift_sigma / burst_rate) but no randomness source: pass an "
+        "explicit PRNG key via mirage_matmul_nograd(x, w, policy, key=key), "
+        "or set policy.noise_seed for keyless jitted call sites "
+        "(trainer/serving)")
 
 
-def _analog_forward(x, w, policy, key, correct: bool):
-    if policy.use_pallas:
-        raise NotImplementedError(
-            "the analog-channel backends (mirage_rns_noisy / mirage_rrns) "
-            "run pure jnp; use_pallas does not compose with channel stages "
-            "yet (ROADMAP follow-up) — unset it rather than silently "
-            "benchmarking the same path twice")
-    qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
-    cfg = channel.AnalogChannelConfig.from_policy(policy)
-    moduli = (_effective_rrns_moduli(policy) if correct
-              else tuple(policy.moduli))
-    if cfg.stochastic:
-        k_prog, k_det = jax.random.split(
-            _channel_key(policy, key, (x.shape, w.shape)))
+def _prepare(x, w, policy, moduli, cfg, k_prog, allow_stationary):
+    """Residue-encode both operands; the stationary container skips the
+    whole weight-side pipeline (already programmed at admission)."""
+    if isinstance(w, stationary.StationaryResidues):
+        if not allow_stationary:
+            raise ValueError(
+                "the reference backend freezes the pre-fusion per-call "
+                "pipeline and does not accept stationary residues")
+        w.check_matches(policy, moduli, x.shape[-1])
+        qx, sx, batch = grouped.prepare_activations(x, policy)
+        wr, sw = w.residues, w.scale
     else:
-        k_prog = k_det = None
+        qx, sx, qw, sw, batch = grouped.prepare_operands(x, w, policy)
+        wr = rns.to_rns(qw, moduli)                # (n_mod, G, g, N) int32
+        wr = channel.apply_program_channel(wr, moduli, cfg, k_prog)
     xr = rns.to_rns(qx, moduli)                    # (n_mod, G, M, g) int32
-    wr = rns.to_rns(qw, moduli)                    # (n_mod, G, g, N) int32
     xr = channel.converter_quantize(xr, moduli, cfg.dac_bits)
-    wr = channel.apply_program_channel(wr, moduli, cfg, k_prog)
-    res = jnp.stack(
+    return xr, wr, sx, sw, batch
+
+
+def _residue_dots_jnp(xr, wr, moduli):
+    return jnp.stack(
         [grouped.grouped_residue_dot(
             xr[i].astype(jnp.float32), wr[i].astype(jnp.float32), m)
          for i, m in enumerate(moduli)],
         axis=0,
     ).astype(jnp.int32)                            # (n_mod, G, M, N)
-    res = channel.apply_readout_channel(res, moduli, cfg, k_det)
+
+
+def _analog_forward(x, w, policy, key, correct: bool, reference: bool = False):
+    cfg = channel.AnalogChannelConfig.from_policy(policy)
+    moduli = (rrns.rrns_moduli(policy) if correct
+              else tuple(policy.moduli))
+    if cfg.stochastic:
+        k_shape = (w.orig_k, w.residues.shape[-1]) \
+            if isinstance(w, stationary.StationaryResidues) else w.shape
+        k_prog, k_det, k_burst = jax.random.split(
+            _channel_key(policy, key, (x.shape, k_shape)), 3)
+    else:
+        k_prog = k_det = k_burst = None
+    xr, wr, sx, sw, batch = _prepare(x, w, policy, moduli, cfg, k_prog,
+                                     allow_stationary=not reference)
+    use_pallas = policy.use_pallas and not reference
+    if use_pallas:
+        from repro.kernels import ops as kops
+        sig = cfg.detector_sigmas(moduli)
+        if cfg.crosstalk or not any(s > 0 for s in sig):
+            # crosstalk mixes NEIGHBOR group outputs — outside one kernel
+            # block's reach — and a noiseless readout has nothing to fuse:
+            # both run the plain kernel + the (cheap) jnp readout chain
+            res = kops.rns_group_matmul(xr, wr, moduli,
+                                        interpret=policy.interpret)
+            res = channel.apply_readout_channel(res, moduli, cfg, k_det)
+        else:
+            G, M = xr.shape[1], xr.shape[2]
+            N = wr.shape[-1]
+            sig_col = jnp.asarray(sig, jnp.float32).reshape(-1, 1, 1, 1)
+            noise = jax.random.normal(
+                k_det, (len(moduli), G, M, N)) * sig_col
+            res = kops.rns_group_matmul_channel(
+                xr, wr, moduli, noise, adc_bits=cfg.adc_bits,
+                interpret=policy.interpret)
+    else:
+        res = _residue_dots_jnp(xr, wr, moduli)
+        res = channel.apply_readout_channel(res, moduli, cfg, k_det)
+    if cfg.burst_rate > 0:
+        res = channel.burst_errors(res, moduli, cfg.burst_rate,
+                                   cfg.burst_width, k_burst)
     if correct:
         tables = rrns.get_tables(moduli, n_required=len(policy.moduli),
                                  psi=policy.psi)
-        decoded, _ = rrns.rrns_decode(res, tables)
+        if reference:
+            decoded, _ = rrns.rrns_decode_reference(res, tables)
+        elif use_pallas:
+            from repro.kernels.rrns_decode import rrns_decode_pallas
+            decoded, _ = rrns_decode_pallas(res, tables,
+                                            interpret=policy.interpret)
+        else:
+            decoded, _ = rrns.rrns_decode(res, tables)
         p = decoded.astype(jnp.float32)
     else:
         p = rns.from_rns_special(res, policy.k, signed=True).astype(jnp.float32)
@@ -104,15 +178,31 @@ def _analog_forward(x, w, policy, key, correct: bool):
 
 @register_fn("mirage_rns_noisy",
              description="RNS path through the full analog channel model "
-                         "(DAC/drift/crosstalk/detector-SNR/ADC), uncorrected",
-             supports_noise=True)
+                         "(DAC/drift/crosstalk/detector-SNR/ADC/burst), "
+                         "uncorrected",
+             supports_noise=True,
+             supports_stationary_residues=True,
+             supports_weight_stationary=True,
+             weight_stationary_aligned_only=True)
 def _matmul_mirage_rns_noisy(x, w, policy, *, key=None):
     return _analog_forward(x, w, policy, key, correct=False)
 
 
 @register_fn("mirage_rrns",
-             description="redundant-RNS path: analog channel + jittable "
-                         "majority decode over CRT subset tables",
-             supports_noise=True)
+             description="redundant-RNS path: analog channel + fused "
+                         "single-pass majority decode over CRT subset tables",
+             supports_noise=True,
+             supports_stationary_residues=True,
+             supports_weight_stationary=True,
+             weight_stationary_aligned_only=True)
 def _matmul_mirage_rrns(x, w, policy, *, key=None):
     return _analog_forward(x, w, policy, key, correct=True)
+
+
+@register_fn("mirage_rrns_ref",
+             description="pre-fusion RRNS pipeline (per-call weight encode, "
+                         "subset-loop decode) — walltime baseline / oracle",
+             supports_noise=True,
+             reference=True)
+def _matmul_mirage_rrns_ref(x, w, policy, *, key=None):
+    return _analog_forward(x, w, policy, key, correct=True, reference=True)

@@ -142,6 +142,33 @@ def bfp_quantize_contract(
     return q, scale
 
 
+def bfp_decompose_contract(
+    w: jax.Array,
+    b_m: int,
+    g: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact (mantissa, scale) decomposition of an ALREADY-on-grid weight.
+
+    The weight-stationary contract (``policy.assume_quantized_weights``):
+    ``w`` was produced by ``bfp_fake_quant`` with the SAME (b_m, g) grouping
+    along its contraction dim, so every group max re-derives the original
+    exponent (the quantizer keeps ``max|q| in [2^(b_m-1), 2^b_m - 1]``) and
+    ``w / scale`` recovers the integer mantissas exactly — no round, no
+    clip. Bit-identical to :func:`bfp_quantize_contract` for on-grid
+    inputs (property-tested); garbage-in for off-grid inputs, exactly like
+    the fast path's folded reuse of a pre-quantized operand.
+    """
+    w = w.astype(jnp.float32)
+    K, N = w.shape
+    pad = (-K) % g
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    wg = w.reshape((K + pad) // g, g, N)
+    maxabs = jnp.max(jnp.abs(wg), axis=-2, keepdims=True)     # (G, 1, N)
+    scale = _exp2_exact(_exponent_bits(maxabs) - (b_m - 1))
+    return wg * (1.0 / scale), scale
+
+
 def bfp_fake_quant(
     x: jax.Array,
     b_m: int,

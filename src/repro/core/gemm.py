@@ -41,7 +41,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import backends, bfp
+from repro.core import backends, bfp, stationary
 from repro.core.precision import MiragePolicy
 
 
@@ -132,6 +132,13 @@ def quantize_operands(
 def _forward_impl(x: jax.Array, w: jax.Array, policy: MiragePolicy,
                   key: Optional[jax.Array] = None) -> jax.Array:
     backend = backends.resolve(policy)
+    if (isinstance(w, stationary.StationaryResidues)
+            and not backend.supports_stationary_residues):
+        raise TypeError(
+            f"backend {backend.name!r} cannot execute a pre-encoded "
+            f"StationaryResidues weight (capability flag "
+            f"supports_stationary_residues is unset) — pass the raw FP32 "
+            f"weight, or run an RNS-family mode")
     if key is None and backend.supports_noise:
         key = _ambient_subkey()
     return backend.forward(x, w, policy, key=key)
@@ -156,7 +163,14 @@ def _mm_bwd(policy, residuals, gout):
     gout = gout.astype(jnp.float32)
     # dX = dO @ W^T (contraction over N). Under weight-stationary quant the
     # transposed read reuses the SAME stored grid values (hardware-faithful).
-    dx = _forward_impl(gout, w.T, policy)
+    # Backends whose weight-stationary skip is only exact for aligned
+    # groupings (group-dot/RNS: integer mantissas required) re-quantize the
+    # transposed read instead — w.T is grouped along N, not the K grid.
+    dx_policy = policy
+    if (policy.assume_quantized_weights
+            and backends.resolve(policy).weight_stationary_aligned_only):
+        dx_policy = policy.replace(assume_quantized_weights=False)
+    dx = _forward_impl(gout, w.T, dx_policy)
     # dW = X^T @ dO (contraction over tokens): neither operand is a
     # stationary weight -> always quantize both sides.
     dw_policy = (policy.replace(assume_quantized_weights=False)

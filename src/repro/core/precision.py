@@ -25,6 +25,8 @@ GEMM_MODES = (
     "mirage_rrns",         # redundant-RNS path: analog channel + majority decode
     "mirage_faithful_ref", # seed fori_loop faithful path (parity oracle)
     "mirage_rns_ref",      # seed fori_loop RNS path (parity oracle)
+    "mirage_rrns_ref",     # pre-fusion RRNS path (per-call weight encode +
+                           # subset-loop decode; walltime baseline + oracle)
 )
 
 ROUNDING_MODES = ("nearest", "truncate", "stochastic")
@@ -92,6 +94,11 @@ class MiragePolicy:
         point); fewer bits re-grid residues onto ``2^bits`` levels.
       crosstalk: inter-MMU leakage coefficient; each group output channel
         deterministically absorbs ``crosstalk`` of each neighbor group.
+      burst_rate / burst_width: correlated burst errors on the readout
+        (``analog.channel.burst_errors``): with probability ``burst_rate``
+        per output element, ``burst_width`` adjacent residue channels take
+        simultaneous uniform errors. width=1 stays inside the RRNS
+        single-error correction radius; width>=2 exceeds it.
       noise_seed: implicit PRNG seed for stochastic channel stages when no
         explicit key is passed. Keyless jitted call sites (training) fold
         the seed with the operand shapes: a STATIC error pattern per GEMM
@@ -125,6 +132,8 @@ class MiragePolicy:
     dac_bits: Optional[int] = None
     adc_bits: Optional[int] = None
     crosstalk: float = 0.0
+    burst_rate: float = 0.0
+    burst_width: int = 1
     noise_seed: Optional[int] = None
     redundant_moduli: Tuple[int, ...] = ()
     group_block: int = 0

@@ -1,0 +1,172 @@
+"""Stationary-residue weight caching (the program-once MMVMU dataflow).
+
+The photonic core programs a weight tile into the MMVMU phase shifters ONCE
+and then streams activations against it for many MVMs (paper §III-A); the
+programming cost — BFP quantization, forward conversion to residues, DAC
+re-gridding and phase-shifter drift — is paid per *programming event*, not
+per GEMM. The RNS-family backends used to pay all of it per call, which at
+serving decode shapes (M = slots) dominates the whole GEMM.
+
+:class:`StationaryResidues` is that programmed tile as a pytree: the
+residue-encoded, channel-programmed weight operand of one GEMM site, in the
+exact ``(n_mod, G, g, N)`` group-major layout the group-batched backends
+consume. Backends whose registry entry sets ``supports_stationary_residues``
+accept it directly in the ``w`` slot of ``mirage_matmul`` /
+``mirage_matmul_nograd`` and skip the whole weight-side pipeline; the
+serving engine builds one per GEMM weight at admission
+(:func:`encode_stationary_params`) and reuses it across every prefill batch
+and decode tick. Being a pytree, a stacked ``(L, ...)`` encoding scans and
+vmaps exactly like the raw stacked weights it replaces.
+
+Clean-channel encodings are bit-identical to what the backends compute
+per-call, so swapping them in changes no numerics (parity-tested). With
+``phase_drift_sigma > 0`` the drift is drawn once at encode time — the
+hardware-faithful semantics (drift is a programming error, frozen until the
+tile is reprogrammed), where the per-call path re-draws it per GEMM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp, rns
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StationaryResidues:
+    """A residue-encoded, channel-programmed stationary GEMM weight.
+
+    residues: int32 ``(*stack, n_mod, G, g, N)`` programmed residues over
+      ``moduli`` (group-major, contraction dim split into G groups of g).
+    scale: f32 ``(*stack, G, 1, N)`` BFP group scales (powers of two).
+    moduli: static moduli tuple the residues are encoded over.
+    b_m / g / orig_k: static BFP parameters + original contraction length.
+    """
+
+    residues: jax.Array
+    scale: jax.Array
+    moduli: Tuple[int, ...]
+    b_m: int
+    g: int
+    orig_k: int
+
+    def tree_flatten(self):
+        return ((self.residues, self.scale),
+                (self.moduli, self.b_m, self.g, self.orig_k))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        residues, scale = children
+        moduli, b_m, g, orig_k = aux
+        return cls(residues=residues, scale=scale, moduli=moduli, b_m=b_m,
+                   g=g, orig_k=orig_k)
+
+    def check_matches(self, policy, moduli: Tuple[int, ...],
+                      k_dim: int) -> None:
+        """Static consistency check against the executing policy."""
+        if tuple(self.moduli) != tuple(moduli):
+            raise ValueError(
+                f"stationary residues were programmed over moduli "
+                f"{self.moduli} but the policy executes over {moduli} — "
+                f"re-encode with the policy that will run them")
+        if (self.b_m, self.g) != (policy.b_m, policy.g):
+            raise ValueError(
+                f"stationary residues use BFP(b_m={self.b_m}, g={self.g}) "
+                f"but the policy is BFP(b_m={policy.b_m}, g={policy.g})")
+        if self.orig_k != k_dim:
+            raise ValueError(
+                f"stationary residues hold a K={self.orig_k} weight but the "
+                f"activation contraction dim is K={k_dim}")
+
+
+def stationary_moduli(policy) -> Tuple[int, ...]:
+    """Moduli set a stationary weight must be programmed over for a policy:
+    base + redundant for the error-corrected mode, base otherwise."""
+    if policy.mode in ("mirage_rrns", "mirage_rrns_ref"):
+        from repro.analog import rrns
+        return rrns.rrns_moduli(policy)
+    return tuple(policy.moduli)
+
+
+def _leaf_key(policy, path: str) -> Optional[jax.Array]:
+    """Deterministic per-leaf programming key: noise_seed folded with a
+    crc32 of the parameter path (no CPython hash — reproducible anywhere)."""
+    if policy.noise_seed is None:
+        return None
+    base = jax.random.PRNGKey(policy.noise_seed)
+    return jax.random.fold_in(base, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+
+def encode_stationary(w: jax.Array, policy,
+                      moduli: Optional[Sequence[int]] = None,
+                      key: Optional[jax.Array] = None) -> StationaryResidues:
+    """Program one weight ``(*stack, K, N)`` into stationary residues.
+
+    BFP-quantize along K, forward-convert to ``moduli`` residues, then run
+    the program-side analog chain (DAC re-grid + phase-shifter drift) for
+    channel-carrying modes. Leading stack dims (scan layers, MoE experts)
+    are vmapped through unchanged.
+    """
+    moduli = tuple(moduli) if moduli is not None else stationary_moduli(policy)
+    if w.ndim > 2:
+        if key is not None:
+            # one programming-drift draw per stacked tile (layer / expert)
+            keys = jax.random.split(key, w.shape[0])
+            return jax.vmap(
+                lambda wi, ki: encode_stationary(wi, policy, moduli, ki)
+            )(w, keys)
+        return jax.vmap(
+            lambda wi: encode_stationary(wi, policy, moduli, None))(w)
+    from repro.analog import channel
+    cfg = channel.AnalogChannelConfig.from_policy(policy)
+    qw, sw = bfp.bfp_quantize_contract(w, policy.b_m, policy.g,
+                                       policy.rounding)       # (G, g, N)
+    wr = rns.to_rns(qw, moduli)                    # (n_mod, G, g, N) int32
+    carries_channel = policy.mode in ("mirage_rns_noisy", "mirage_rrns",
+                                      "mirage_rrns_ref")
+    if carries_channel:
+        k_prog = key
+        if cfg.phase_drift_sigma > 0 and k_prog is None:
+            if policy.noise_seed is None:
+                raise ValueError(
+                    "phase_drift_sigma > 0 needs a programming key: pass "
+                    "key= or set policy.noise_seed")
+            k_prog = _leaf_key(policy, "stationary")
+        wr = channel.apply_program_channel(wr, moduli, cfg, k_prog)
+    return StationaryResidues(residues=wr, scale=sw, moduli=moduli,
+                              b_m=policy.b_m, g=policy.g, orig_k=w.shape[-2])
+
+
+# parameter leaves that are GEMM weights (matches the trainer's
+# weight-stationary quantization convention); "emb" is excluded — embedding
+# gathers and the tied unembed head stay FP32 on the digital side
+_GEMM_LEAF = ("w", "gate", "up", "down")
+
+
+def encode_stationary_params(params, policy):
+    """Program every GEMM weight leaf of a param pytree into stationary
+    residues, leaving everything else (norms, biases, embeddings, router
+    logits — consumed outside ``mirage_matmul``) untouched.
+
+    The serving engine calls this once at admission; the resulting pytree
+    drops into every jitted prefill/decode signature in place of ``params``
+    (containers flatten to array leaves, stacked layers still scan).
+    """
+
+    def enc(path, p):
+        keys = [k.key if hasattr(k, "key") else str(k) for k in path]
+        leaf = keys[-1]
+        if leaf not in _GEMM_LEAF or getattr(p, "ndim", 0) < 2:
+            return p
+        if "router" in keys:
+            return p                   # router matmul runs plain fp32
+        pathstr = "/".join(keys)
+        return encode_stationary(p, policy, key=_leaf_key(policy, pathstr))
+
+    return jax.tree_util.tree_map_with_path(enc, params)

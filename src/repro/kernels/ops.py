@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.core.precision import MiragePolicy
 from repro.kernels.bfp_quantize import bfp_fake_quant_pallas
 from repro.kernels.mirage_gemm import mirage_gemm_pallas
-from repro.kernels.rns_matmul import rns_matmul_pallas
+from repro.kernels.rns_matmul import (rns_matmul_pallas,
+                                      rns_matmul_pallas_channel)
 
 
 def bfp_fake_quant(x: jax.Array, policy: MiragePolicy) -> jax.Array:
@@ -58,4 +59,28 @@ def rns_group_matmul(x_res: jax.Array, w_res: jax.Array,
     wf = w_res.reshape(nm * G, g, N)
     flat_moduli = tuple(m for m in moduli for _ in range(G))
     res = rns_matmul_pallas(xf, wf, flat_moduli, interpret=interpret)
+    return res.reshape(nm, G, M, N)
+
+
+def rns_group_matmul_channel(x_res: jax.Array, w_res: jax.Array,
+                             moduli: Tuple[int, ...],
+                             noise: jax.Array,
+                             adc_bits=None,
+                             interpret: bool = True) -> jax.Array:
+    """Group-batched residue GEMM with the readout channel fused in-kernel.
+
+    Same (modulus, group)-flattened grid as :func:`rns_group_matmul`, but
+    each accumulated residue block gets detector noise + ADC re-gridding
+    applied in the kernel epilogue (``rns_matmul_pallas_channel``). ``noise``
+    is (n_mod, G, M, N) f32, pre-scaled to the per-modulus detector sigmas
+    (zeros = noiseless readout).
+    """
+    nm, G, M, g = x_res.shape
+    N = w_res.shape[-1]
+    xf = x_res.reshape(nm * G, M, g)
+    wf = w_res.reshape(nm * G, g, N)
+    nzf = noise.reshape(nm * G, M, N)
+    flat_moduli = tuple(m for m in moduli for _ in range(G))
+    res = rns_matmul_pallas_channel(xf, wf, flat_moduli, nzf,
+                                    adc_bits=adc_bits, interpret=interpret)
     return res.reshape(nm, G, M, N)

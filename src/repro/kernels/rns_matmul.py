@@ -10,12 +10,23 @@ ceil(log2 m) bits of information outside the accumulator.
 Grid: (modulus, M blocks, N blocks, K blocks). The modulus value is streamed
 in as a (1,)-blocked operand indexed by the first grid axis, so one compiled
 kernel serves the whole moduli set.
+
+``rns_matmul_pallas_channel`` is the analog-channel variant: the readout
+side of the channel (SNR-parameterized detector noise + ADC re-gridding,
+``repro.analog.channel``) is applied at **residue granularity inside the
+kernel epilogue** — on the last K step the accumulated residue block gets
+the pre-sampled, pre-scaled Gaussian phase noise added, is re-quantized to
+the nearest phase level, wrapped mod m, and re-gridded onto the ADC levels,
+all while the block is still VMEM-resident. The noise tensor is sampled
+*outside* with the caller's PRNG key (``gemm.noise_key_scope`` plumbing),
+so the kernel stays deterministic per key and bit-identical to the jnp
+channel path (``channel.phase_noise`` + ``channel.converter_quantize``).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,4 +96,102 @@ def rns_matmul_pallas(
                                        jnp.float32),
         interpret=interpret,
     )(mf, xf, wf)
+    return out[:, :M, :N].astype(jnp.int32)
+
+
+def _kernel_channel(mod_ref, step_ref, x_ref, w_ref, nz_ref, o_ref, *,
+                    nk: int):
+    m = mod_ref[0]
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(x_ref[0], w_ref[0], preferred_element_type=jnp.float32)
+    o_ref[0] = jnp.mod(o_ref[0] + jnp.mod(part, m), m)
+
+    @pl.when(pl.program_id(3) == nk - 1)
+    def _readout():
+        # residue-level readout channel, fused on the VMEM-resident block:
+        # detector phase noise (pre-scaled N(0, sigma_m) levels), nearest-
+        # level re-quantize, ring wrap, then ADC re-grid. Bit-identical to
+        # channel.phase_noise + channel.converter_quantize on the same draws.
+        o = jnp.mod(jnp.round(o_ref[0] + nz_ref[0]), m)
+        step = step_ref[0]
+        safe = jnp.where(step > 0, step, 1.0)
+        oq = jnp.clip(jnp.round(jnp.round(o / safe) * safe), 0, m - 1)
+        o_ref[0] = jnp.where(step > 0, oq, o)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("moduli", "adc_bits", "block_m", "block_n", "block_k",
+                     "interpret"),
+)
+def rns_matmul_pallas_channel(
+    x_res: jax.Array,
+    w_res: jax.Array,
+    moduli: Tuple[int, ...],
+    noise: jax.Array,
+    adc_bits: Optional[int] = None,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """Residue matmul with the readout channel fused into the epilogue.
+
+    x_res/w_res: (n_mod, M, K) x (n_mod, K, N) non-negative residues.
+    noise: (n_mod, M, N) f32 — detector noise PRE-SCALED to per-modulus
+      phase-level sigmas (zeros for noiseless channels); sampled by the
+      caller so determinism/keying stays outside the kernel.
+    adc_bits: ADC precision; identity whenever ``2^bits >= m`` (per slot).
+    """
+    nm, M, K = x_res.shape
+    N = w_res.shape[2]
+    assert len(moduli) == nm, (moduli, x_res.shape)
+    assert noise.shape == (nm, M, N), (noise.shape, (nm, M, N))
+    xf = x_res.astype(jnp.float32)
+    wf = w_res.astype(jnp.float32)
+    nz = noise.astype(jnp.float32)
+    mf = jnp.asarray(moduli, jnp.float32)
+    # per-slot ADC grid step; 0 flags the identity converter (2^bits >= m)
+    steps = []
+    for m in moduli:
+        if adc_bits is None or 2 ** adc_bits >= m:
+            steps.append(0.0)
+        else:
+            steps.append((m - 1) / (2 ** adc_bits - 1))
+    sf = jnp.asarray(steps, jnp.float32)
+
+    max_m = max(moduli)
+    exact_cap = (2**24) // max(1, (max_m - 1) ** 2)
+    bk = max(1, min(block_k, K, exact_cap))
+    bm_ = min(block_m, M)
+    bn = min(block_n, N)
+    pm, pn, pk = (-M) % bm_, (-N) % bn, (-K) % bk
+    if pm or pk:
+        xf = jnp.pad(xf, ((0, 0), (0, pm), (0, pk)))
+    if pk or pn:
+        wf = jnp.pad(wf, ((0, 0), (0, pk), (0, pn)))
+    if pm or pn:
+        nz = jnp.pad(nz, ((0, 0), (0, pm), (0, pn)))
+
+    nk = xf.shape[2] // bk
+    grid = (nm, xf.shape[1] // bm_, wf.shape[2] // bn, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel_channel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda mi, i, j, k: (mi,)),
+            pl.BlockSpec((1,), lambda mi, i, j, k: (mi,)),
+            pl.BlockSpec((1, bm_, bk), lambda mi, i, j, k: (mi, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda mi, i, j, k: (mi, k, j)),
+            pl.BlockSpec((1, bm_, bn), lambda mi, i, j, k: (mi, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm_, bn), lambda mi, i, j, k: (mi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nm, xf.shape[1], wf.shape[2]),
+                                       jnp.float32),
+        interpret=interpret,
+    )(mf, sf, xf, wf, nz)
     return out[:, :M, :N].astype(jnp.int32)

@@ -1,0 +1,143 @@
+"""Pallas kernel: fused single-pass RRNS majority decode.
+
+Kernel counterpart of :func:`repro.analog.rrns.rrns_decode` (same
+consistency-count voting identity — see that module's docstring), laid out
+on a **subset-major grid**: ``grid = (element_blocks, S)`` with the subset
+axis innermost, so for each output block the kernel revisits the block S
+times, accumulating the running (first-max) winner directly in the output
+refs — the per-subset reconstruction, the congruence checks, the binomial
+vote lookup and the winner select all fuse into one VMEM-resident pass per
+(block, subset) step. No ``(S, ...)`` intermediate ever exists.
+
+Per-subset constants stream in as ``(1, ...)``-blocked operand rows indexed
+by the subset grid axis (the same trick ``rns_matmul`` uses for the modulus
+value), so ONE compiled kernel serves any (moduli, n_required, psi) table.
+
+The kernel runs entirely in f32 and therefore requires ``tables.f32_exact``
+(every reconstruction sum inside the exact-integer window 2^24 — always
+true at the paper point k=5 with two redundant moduli); larger moduli sets
+must use the jnp fallback decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(wrow_ref, sub_ref, minv_ref, res_ref, dec_ref, vot_ref,
+                   *, n_total: int, n_required: int, psi: float,
+                   binom: Tuple[int, ...]):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        dec_ref[...] = jnp.zeros_like(dec_ref)
+        vot_ref[...] = jnp.full_like(vot_ref, -2.0)
+
+    # reconstruction: weights are 0 for non-members, so the full-width
+    # contraction over n_total positions equals the member sum exactly
+    acc = None
+    for i in range(n_total):
+        term = res_ref[i] * wrow_ref[0, i]
+        acc = term if acc is None else acc + term
+    M_s = sub_ref[0, 0]
+    inv_M = sub_ref[0, 1]
+    psi_s = sub_ref[0, 2]
+    lo = sub_ref[0, 3]
+    # round-based signed fold into [psi_s + 1 - M_s, psi_s] (two selects
+    # absorb the half-up boundary and the reciprocal off-by-one)
+    q = jnp.floor(acc * inv_M + 0.5)
+    X = acc - q * M_s
+    X = jnp.where(X > psi_s, X - M_s, X)
+    X = jnp.where(X < lo, X + M_s, X)
+    # consistency count over ALL positions: members are congruent by CRT
+    # construction, so cons ranges over [n_required, n_total] and the vote
+    # count is binom[cons - n_required]
+    cons = None
+    for i in range(n_total):
+        d = X - res_ref[i]
+        k = jnp.round(d * minv_ref[1, i])
+        ok = (d - k * minv_ref[0, i] == 0.0).astype(jnp.float32)
+        cons = ok if cons is None else cons + ok
+    votes = jnp.full(X.shape, float(binom[0]))
+    for e in range(1, n_total - n_required + 1):
+        votes = jnp.where(cons == float(n_required + e), float(binom[e]),
+                          votes)
+    votes = jnp.where(jnp.abs(X) <= psi, votes, -1.0)
+    # strict > keeps the FIRST max across the subset-major grid sweep ==
+    # the oracle's dict-insertion-order tie-break
+    better = votes > vot_ref[...]
+    dec_ref[...] = jnp.where(better, X, dec_ref[...])
+    vot_ref[...] = jnp.where(better, votes, vot_ref[...])
+
+
+def _decode_flat(res_flat: jax.Array, tables, block_e: int,
+                 interpret: bool) -> Tuple[jax.Array, jax.Array]:
+    n_total, E = res_flat.shape
+    S = tables.n_subsets
+    be = min(block_e, max(E, 1))
+    pad = (-E) % be
+    if pad:
+        res_flat = jnp.pad(res_flat, ((0, 0), (0, pad)))
+    wrow = jnp.asarray(tables.weights, jnp.float32)            # (S, n_total)
+    sub = jnp.stack([
+        tables.subset_M.astype(np.float32),
+        (1.0 / tables.subset_M).astype(np.float32),
+        tables.subset_psi.astype(np.float32),
+        (tables.subset_psi + 1 - tables.subset_M).astype(np.float32),
+    ], axis=1)                                                 # (S, 4)
+    moduli = np.asarray(tables.moduli, np.float32)
+    minv = jnp.asarray(np.stack([moduli, 1.0 / moduli]))       # (2, n_total)
+    grid = (res_flat.shape[1] // be, S)
+    dec, vot = pl.pallas_call(
+        functools.partial(
+            _decode_kernel, n_total=n_total,
+            n_required=tables.n_required, psi=float(tables.psi),
+            binom=tables.binom),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_total), lambda e, s: (s, 0)),
+            pl.BlockSpec((1, 4), lambda e, s: (s, 0)),
+            pl.BlockSpec((2, n_total), lambda e, s: (0, 0)),
+            pl.BlockSpec((n_total, be), lambda e, s: (0, e)),
+        ],
+        out_specs=[
+            pl.BlockSpec((be,), lambda e, s: (e,)),
+            pl.BlockSpec((be,), lambda e, s: (e,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((res_flat.shape[1],), jnp.float32),
+            jax.ShapeDtypeStruct((res_flat.shape[1],), jnp.float32),
+        ],
+        interpret=interpret,
+    )(wrow, sub, minv, res_flat.astype(jnp.float32))
+    dec, vot = dec[:E], vot[:E]
+    any_legal = vot >= 0.0
+    decoded = jnp.where(any_legal, dec, 0.0).astype(jnp.int32)
+    corrected = jnp.where(any_legal, vot < float(S), True)
+    return decoded, corrected
+
+
+def rrns_decode_pallas(residues: jax.Array, tables, block_e: int = 4096,
+                       interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """RRNS majority decode through the subset-major Pallas kernel.
+
+    residues: (n_total, ...) int32 over ``tables.moduli``; trailing dims are
+    flattened into the kernel's element axis. Bit-identical outputs to
+    :func:`repro.analog.rrns.rrns_decode` (and hence to the frozen
+    ``rrns_decode_np`` oracle). Requires ``tables.f32_exact``.
+    """
+    if not tables.f32_exact:
+        raise ValueError(
+            "rrns_decode_pallas runs in f32 and needs every reconstruction "
+            "bound inside the 2^24 exact-integer window; this moduli set "
+            f"({tables.moduli}) exceeds it — use the jnp rrns_decode, whose "
+            "int32 fallback handles large moduli")
+    shape = residues.shape[1:]
+    flat = residues.reshape(residues.shape[0], -1)
+    decoded, corrected = _decode_flat(flat, tables, block_e, interpret)
+    return decoded.reshape(shape), corrected.reshape(shape)

@@ -42,7 +42,13 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--policy", default="mirage",
-                    help="fp32|bf16|int8|mirage|mirage_faithful|mirage_rns")
+                    help="fp32|bf16|int8|mirage|mirage_faithful|mirage_rns|"
+                         "mirage_rns_noisy|mirage_rrns")
+    ap.add_argument("--snr-db", type=float, default=None,
+                    help="detector SNR for the analog-channel policies")
+    ap.add_argument("--noise-seed", type=int, default=None,
+                    help="static per-GEMM-site error pattern seed for "
+                         "keyless noisy training")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (CPU-scale)")
@@ -61,7 +67,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    policy = get_policy(args.policy)
+    overrides = {}
+    if args.snr_db is not None:
+        overrides["snr_db"] = args.snr_db
+    if args.noise_seed is not None:
+        overrides["noise_seed"] = args.noise_seed
+    policy = get_policy(args.policy, **overrides)
     tc = TrainConfig(policy=policy, optimizer=args.optimizer, lr=args.lr,
                      microbatches=args.microbatches,
                      grad_compression=args.grad_compression, seed=args.seed)

@@ -26,6 +26,16 @@ opens a :func:`repro.core.gemm.noise_key_scope` with a key folded from
 decode step while staying fully jitted (the key is a traced input, not a
 static policy field — no recompiles).
 
+For RNS-family backends the engine additionally programs every GEMM weight
+into **stationary residues** once at admission
+(:func:`repro.core.stationary.encode_stationary_params`): BFP quantization,
+residue conversion and DAC/drift programming are paid once per server
+lifetime instead of once per GEMM per tick — the paper's program-once
+MMVMU dataflow. At decode shapes the per-call weight pipeline dominates
+the GEMM, so this is the difference between the error-corrected path being
+a curiosity and a serving mode. Clean-channel numerics are bit-identical
+to the per-call path (parity-tested).
+
 :class:`PerSlotLMServer` is the seed's slot-at-a-time loop, retained only
 as the parity oracle (token-exact vs the batched engine under greedy
 decode) and as the benchmark baseline.
@@ -174,7 +184,8 @@ class LMServer:
                  buckets: Optional[Sequence[int]] = None,
                  on_token: Optional[Callable[[Request, int], None]] = None,
                  scheduler: Optional[Scheduler] = None,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0,
+                 stationary_weights: Optional[bool] = None):
         self.model = model
         self.params = params
         self.cap = cap
@@ -202,6 +213,26 @@ class LMServer:
         self._sample_base = jax.random.PRNGKey(sample_seed)
         self._tick_count = 0
         self._prefill_count = 0
+
+        # program-once weight admission: RNS-family backends execute against
+        # pre-encoded stationary residues. Auto-on for model families whose
+        # GEMM weights all flow through `dense` (the merged parallel
+        # projection concatenates raw weight arrays; MoE experts cross a
+        # shard_map boundary with positional specs — both keep per-call
+        # encoding). Force with stationary_weights=True/False.
+        if stationary_weights is None:
+            from repro.core import backends as _backends
+            stationary_weights = (
+                _backends.resolve(model.policy).supports_stationary_residues
+                and getattr(model, "kind", None) in ("attn_mlp", "mamba")
+                and not getattr(model.opt, "merge_parallel_proj", False))
+        self.stationary_weights = bool(stationary_weights)
+        if self.stationary_weights:
+            from repro.core import stationary
+            self._exec_params = stationary.encode_stationary_params(
+                params, model.policy)
+        else:
+            self._exec_params = params
 
         self.state = self._init_state(batch_slots)
         self._decode_tick = jax.jit(self._make_tick_fn())
@@ -345,7 +376,7 @@ class LMServer:
                 nk, sk = self._next_keys(1, self._prefill_count)
                 self._prefill_count += 1
                 self.state, payload = self._prefill_insert(
-                    self.params, self.state, jnp.asarray(tokens),
+                    self._exec_params, self.state, jnp.asarray(tokens),
                     jnp.asarray(lens), jnp.asarray(slots), jnp.asarray(eos),
                     jnp.asarray(max_tok), nk, sk)
                 # TTFT is stamped only once the token bytes are on host
@@ -367,7 +398,7 @@ class LMServer:
             nk, sk = self._next_keys(0, self._tick_count)
             self._tick_count += 1
             self.state, payload = self._decode_tick(
-                self.params, self.state, nk, sk)
+                self._exec_params, self.state, nk, sk)
             payload = np.asarray(jax.device_get(payload))  # the ONE transfer
             for i, (tok, is_done) in enumerate(payload):
                 req = self.slot_req[i]
