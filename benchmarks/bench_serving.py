@@ -11,6 +11,16 @@ so ``--json`` makes them machine-readable):
   * ``serving_load``   — open-loop offered load sweep: requests arrive at
     a fixed rate; rows report achieved tok/s, mean TTFT, mean TPOT and
     queue time per offered rate.
+  * ``serving_paged``  — cache MEMORY for a mixed-length long-context
+    workload: bytes the dense layout allocates (slots x cap rings) vs the
+    paged block pool's measured peak (live tokens rounded to blocks). The
+    acceptance gate requires >= 2x saving; a second run on a pool sized to
+    that peak proves the tight pool actually serves the workload.
+  * ``serving_chunked`` — the admission latency spike: per-tick wall times
+    while a long prompt arrives into active short-decode streams, with
+    monolithic prefill (dense) vs chunked/piggybacked prefill. Rows report
+    the max tick (the stall), the steady-state median tick, and the long
+    request's TTFT for both engines.
 
   PYTHONPATH=src python -m benchmarks.bench_serving --json out.json
 """
@@ -145,6 +155,139 @@ def load_sweep(print_fn=print, arch: str = "qwen2-0.5b",
                  f"{lat['queue_mean_s'] * 1e3:.2f},mean")
 
 
+def _kv_leaf_bytes(spec, keys):
+    return sum(int(np.prod(s)) * np.dtype(d).itemsize
+               for k, (s, d) in spec.items() if k in keys)
+
+
+def paged_sweep(print_fn=print, arch: str = "qwen2-0.5b",
+                policy: str = "mirage", slots: int = 4,
+                block_size: int = 16, short_len: int = 8,
+                long_len: int = 192, max_tokens: int = 8,
+                chunk: int = 8, enforce: bool = True):
+    """Paged-vs-dense cache bytes on a mixed-length workload, then the
+    chunked-prefill admission-spike comparison. Returns a dict of headline
+    numbers (also printed as CSV rows).
+
+    With ``enforce=True`` (the CI default) the DETERMINISTIC acceptance
+    gates raise on regression: cache saving must stay >= 2x and the
+    tight-pool rerun must serve the whole workload. The spike ratio is
+    wall-clock (noisy on a shared box) and stays informational. Pass
+    ``enforce=False`` for exploratory configs where < 2x is expected."""
+    import jax
+
+    from repro.models import lm as lm_helpers
+    from repro.runtime.server import LMServer, Request
+
+    cap = long_len + max_tokens + block_size
+    cfg, model, params, _ = _build(arch, policy, long_len, max_tokens)
+
+    def mixed_requests(rid0=0):
+        rng = np.random.default_rng(rid0)
+        reqs = [Request(rid=rid0 + i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            short_len).astype(np.int32),
+                        max_tokens=max_tokens)
+                for i in range(slots - 1)]
+        reqs.append(Request(rid=rid0 + slots - 1,
+                            prompt=rng.integers(0, cfg.vocab_size,
+                                                long_len).astype(np.int32),
+                            max_tokens=max_tokens))
+        return reqs
+
+    # ---- cache bytes: dense allocation vs paged peak ----
+    dense_spec = model.cache_spec(slots, cap, per_slot_idx=True)
+    dense_bytes = _kv_leaf_bytes(
+        dense_spec, ("k", "v", "shared_k", "shared_v"))
+    server = LMServer(model, params, cap=cap, batch_slots=slots,
+                      cache_layout="paged", block_size=block_size)
+    if server.alloc is None:
+        # pure-SSM archs have no KV to page (O(1) recurrent state per slot)
+        print_fn(f"serving_paged,skipped,0,{arch} has no paged KV "
+                 f"(pure-SSM recurrent state)")
+        return {"cache_saving_ratio": float("nan"),
+                "spike_flatten_ratio": float("nan")}
+    _drain(server, mixed_requests())
+    peak = server.alloc.peak_in_use
+    pool_spec = model.cache_spec(slots, cap, per_slot_idx=True,
+                                 layout="paged", block_size=block_size,
+                                 n_blocks=server.alloc.n_blocks)
+    per_block = _kv_leaf_bytes(pool_spec, lm_helpers.PAGE_POOL_LEAVES) \
+        // server.alloc.n_blocks
+    table_bytes = _kv_leaf_bytes(pool_spec, ("bt",))
+    paged_bytes = peak * per_block + table_bytes
+    ratio = dense_bytes / max(paged_bytes, 1)
+    print_fn(f"# paged KV: {arch} slots={slots} cap={cap} "
+             f"lens={slots - 1}x{short_len}+1x{long_len} block={block_size}")
+    print_fn(f"serving_paged,cache_bytes_dense,{dense_bytes},"
+             f"slots={slots};cap={cap}")
+    print_fn(f"serving_paged,cache_bytes_paged,{paged_bytes},"
+             f"peak_blocks={peak};block={block_size}")
+    print_fn(f"serving_paged,cache_saving_ratio,{ratio:.2f},dense_over_paged")
+    if enforce and ratio < 2.0:
+        raise RuntimeError(
+            f"paged cache saving regressed below the 2x acceptance gate: "
+            f"{ratio:.2f}x (dense {dense_bytes} vs paged {paged_bytes})")
+    # prove a pool sized to the measured peak serves the same workload
+    tight = LMServer(model, params, cap=cap, batch_slots=slots,
+                     cache_layout="paged", block_size=block_size,
+                     n_blocks=peak)
+    _, _, fin = _drain(tight, mixed_requests(rid0=100))
+    print_fn(f"serving_paged,tight_pool_completed,{len(fin)},"
+             f"n_blocks={peak}")
+    if enforce and len(fin) != slots:
+        raise RuntimeError(
+            f"tight pool ({peak} blocks) failed to serve the workload: "
+            f"{len(fin)}/{slots} requests completed")
+
+    # ---- admission spike: monolithic vs chunked prefill ----
+    def spike_run(**kw):
+        srv = LMServer(model, params, cap=cap, batch_slots=slots, **kw)
+        # warm every path this run will hit (incl. the long prefill /
+        # every chunk shape) so measured ticks are compute, not compiles
+        _drain(srv, mixed_requests(rid0=200))
+        reqs = mixed_requests(rid0=300)
+        shorts, long_req = reqs[:-1], reqs[-1]
+        for r in shorts:
+            srv.submit(r)
+        srv.tick()                      # admit + first decode, steady state
+        ticks = []
+        srv.submit(long_req)
+        guard = 0
+        while (srv.scheduler.waiting or srv.prefilling or
+               any(r is not None for r in srv.slot_req)):
+            t0 = time.perf_counter()
+            srv.tick()
+            ticks.append(time.perf_counter() - t0)
+            guard += 1
+            if guard > 10_000:
+                break
+        return (max(ticks) * 1e3, float(np.median(ticks)) * 1e3,
+                long_req.ttft * 1e3)
+
+    results = {"cache_bytes_dense": dense_bytes,
+               "cache_bytes_paged": paged_bytes,
+               "cache_saving_ratio": ratio}
+    for label, kw in (
+            ("dense", {}),
+            ("chunked", {"cache_layout": "paged", "block_size": block_size,
+                         "prefill_chunk": chunk})):
+        spike_ms, median_ms, ttft_ms = spike_run(**kw)
+        results[f"{label}_tick_max_ms"] = spike_ms
+        print_fn(f"serving_chunked,{label}_tick_max_ms,{spike_ms:.2f},"
+                 f"long={long_len};chunk="
+                 f"{chunk if label == 'chunked' else 'off'}")
+        print_fn(f"serving_chunked,{label}_tick_median_ms,{median_ms:.2f},"
+                 f"steady_state")
+        print_fn(f"serving_chunked,{label}_long_ttft_ms,{ttft_ms:.2f},mean")
+    flatten = results["dense_tick_max_ms"] / \
+        max(results["chunked_tick_max_ms"], 1e-9)
+    results["spike_flatten_ratio"] = flatten
+    print_fn(f"serving_chunked,spike_flatten_ratio,{flatten:.2f},"
+             f"dense_over_chunked_max_tick")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -156,6 +299,12 @@ def main(argv=None):
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: tiny sweep")
+    ap.add_argument("--skip-paged", action="store_true",
+                    help="skip the paged-memory / chunked-prefill section")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--long-len", type=int, default=192,
+                    help="long-context prompt for the paged/chunked section")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args(argv)
     if args.quick:
@@ -163,6 +312,7 @@ def main(argv=None):
         args.rates = [64.0]
         args.requests_per_slot = 2
         args.max_tokens = 8
+        args.long_len = 96
 
     from benchmarks.emit import BenchWriter
 
@@ -177,6 +327,16 @@ def main(argv=None):
                slots=max(args.slots), rates=tuple(args.rates),
                n_requests=max(args.slots) * args.requests_per_slot,
                prompt_len=args.prompt_len, max_tokens=args.max_tokens)
+    if not args.skip_paged:
+        paged = paged_sweep(writer, arch=args.arch, policy=args.policy,
+                            slots=max(args.slots),
+                            block_size=args.block_size,
+                            long_len=args.long_len,
+                            max_tokens=args.max_tokens,
+                            chunk=args.prefill_chunk)
+        print(f"# paged KV saves {paged['cache_saving_ratio']:.1f}x cache "
+              f"bytes; chunked prefill flattens the admission spike "
+              f"{paged['spike_flatten_ratio']:.1f}x")
     if args.json:
         writer.write_json(args.json, argv=list(argv or sys.argv[1:]),
                           elapsed_s=round(time.time() - t0, 2))

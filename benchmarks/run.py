@@ -96,6 +96,10 @@ def main(argv=None):
             from benchmarks import bench_serving
             bench_serving.slots_sweep(slot_counts=(1, 4),
                                       requests_per_slot=2, max_tokens=8)
+            # paged-vs-dense cache bytes + chunked-prefill spike (the CI
+            # artifact the paged-KV acceptance gate reads)
+            bench_serving.paged_sweep(slots=4, long_len=96, max_tokens=8,
+                                      chunk=8)
         if want("roofline"):
             roofline_section()
     elapsed = time.time() - t0

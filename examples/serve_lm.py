@@ -27,6 +27,11 @@ def main():
     ap.add_argument("--max-tokens", type=int, default=10)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--policy", default="mirage")
+    ap.add_argument("--cache-layout", choices=("dense", "paged"),
+                    default="dense",
+                    help="paged = block-table KV pool for long-context memory")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="piggybacked prefill chunk size (paged only)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are emitted")
     args = ap.parse_args()
@@ -39,7 +44,9 @@ def main():
         if args.stream else None
     server = LMServer(model, params,
                       cap=args.prompt_len + args.max_tokens + 4,
-                      batch_slots=args.slots, on_token=on_token)
+                      batch_slots=args.slots, on_token=on_token,
+                      cache_layout=args.cache_layout,
+                      prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(7)
     t0 = time.perf_counter()

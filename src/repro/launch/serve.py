@@ -4,6 +4,11 @@
 
 Knobs: ``--engine batched`` (one jitted decode over the stacked slot cache;
 default) vs ``--engine oracle`` (the retained per-slot parity loop);
+``--cache-layout paged`` switches the per-slot KV rings to the block-table
+page pool (``--block-size``/``--n-blocks`` size it — memory scales with
+live tokens instead of slots x cap); ``--prefill-chunk N`` streams prompts
+through the decode loop N tokens per tick (piggybacked prefill, paged
+only) so long arrivals don't stall active streams;
 ``--policy mirage_rns_noisy --snr-db 30 --noise-seed 7`` serves under the
 analog channel with fresh noise per tick; ``--sample`` switches greedy
 argmax to device-side categorical sampling.
@@ -34,6 +39,18 @@ def main(argv=None):
     ap.add_argument("--policy", default="mirage")
     ap.add_argument("--engine", choices=("batched", "oracle"),
                     default="batched")
+    ap.add_argument("--cache-layout", choices=("dense", "paged"),
+                    default="dense",
+                    help="paged = block-table KV pool (memory scales with "
+                         "live tokens, not slots x cap)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="positions per KV block (paged layout)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="block-pool size (default: slots * ceil(cap/block) "
+                         "= no saving but never exhausts)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="stream prompts through decode ticks in chunks of "
+                         "this many tokens (requires --cache-layout paged)")
     ap.add_argument("--snr-db", type=float, default=None,
                     help="serve through the analog channel at this SNR "
                          "(use with --policy mirage_rns_noisy/mirage_rrns)")
@@ -45,6 +62,10 @@ def main(argv=None):
     if args.engine == "oracle" and args.sample:
         ap.error("--sample needs the batched engine (the per-slot oracle "
                  "is greedy-only)")
+    if args.engine == "oracle" and (args.cache_layout != "dense" or
+                                    args.prefill_chunk):
+        ap.error("--cache-layout paged / --prefill-chunk need the batched "
+                 "engine")
 
     cfg = get_config(args.arch).reduced()
     overrides = {}
@@ -57,7 +78,11 @@ def main(argv=None):
     cap = args.prompt_len + args.max_tokens + 4
     if args.engine == "batched":
         server = LMServer(model, params, cap=cap, batch_slots=args.slots,
-                          greedy=not args.sample)
+                          greedy=not args.sample,
+                          cache_layout=args.cache_layout,
+                          block_size=args.block_size,
+                          n_blocks=args.n_blocks,
+                          prefill_chunk=args.prefill_chunk)
     else:
         server = PerSlotLMServer(model, params, cap=cap,
                                  batch_slots=args.slots)
@@ -77,6 +102,11 @@ def main(argv=None):
           f"tokens in {dt:.2f}s ({tot_toks / dt:.1f} tok/s); "
           f"mean TTFT {np.mean(ttfts)*1e3:.1f}ms; "
           f"{server.metrics['ticks']} decode ticks")
+    if getattr(server, "alloc", None) is not None:
+        a = server.alloc
+        print(f"  paged KV: block_size={a.block_size}, pool={a.n_blocks} "
+              f"blocks, peak in use {a.peak_in_use} "
+              f"({a.peak_in_use / a.n_blocks:.0%})")
     for r in finished[:3]:
         print(f"  req {r.rid}: {r.tokens_out[:8]}...")
     return 0

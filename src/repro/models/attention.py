@@ -210,20 +210,37 @@ def attn_decode_step(
     n_heads: int, n_kv_heads: int, head_dim: int, rope_theta: float,
     window: Optional[int] = None, qk_norm: bool = False, kv_repeat: int = 1,
     use_rope: bool = True, cross: bool = False,
+    block_tables: Optional[jax.Array] = None,
 ):
-    """One decode step. x: (B, 1, d). cache_k/v: (B, S_cap, Kv_eff, D) holding
-    keys ALREADY rope'd at their absolute positions. ``idx``: current length —
-    a scalar (whole batch at one position: the per-slot oracle loop) or a
-    ``(B,)`` vector (continuous-batching engine: every slot decodes at its own
+    """One decode step. x: (B, 1, d). ``idx``: current length — a scalar
+    (whole batch at one position: the per-slot oracle loop) or a ``(B,)``
+    vector (continuous-batching engine: every slot decodes at its own
     position; write slots and validity masks are computed per row).
 
-    Sliding windows use modular slot addressing: position p lives at slot
-    p % S_cap, so the cache capacity for SWA archs is min(seq, window).
-    Cross-attention reads a fixed precomputed cache and writes nothing.
+    Two cache layouts:
+
+      * **dense** (``block_tables=None``): cache_k/v are ``(B, S_cap,
+        Kv_eff, D)`` per-slot rings holding keys ALREADY rope'd at their
+        absolute positions. Sliding windows use modular slot addressing
+        (position p lives at slot ``p % S_cap``), so the cache capacity for
+        SWA archs is min(seq, window). This is the parity oracle path.
+      * **paged** (``block_tables`` = ``(B, max_blocks)`` int32): cache_k/v
+        are GLOBAL page pools ``(n_blocks, block_size, Kv_eff, D)``; logical
+        position p of row b lives at physical block ``block_tables[b,
+        p // bs]`` offset ``p % bs`` (linear addressing, no ring wrap — the
+        window is applied purely through the validity mask). Unmapped table
+        entries carry the OOB sentinel ``n_blocks``: the scatter-write drops
+        on device, and the gather clamps to a real block whose garbage is
+        hidden by the ``kpos <= idx`` mask (the allocator guarantees blocks
+        exist for every position <= idx). Requires vector ``idx``.
+
+    Cross-attention reads a fixed precomputed dense cache and writes nothing.
     """
     B = x.shape[0]
-    S_cap = cache_k.shape[1]
+    paged = block_tables is not None
     per_slot = jnp.ndim(idx) == 1
+    assert not (paged and (cross or not per_slot)), \
+        "paged decode needs a per-slot idx vector and a self-attention cache"
     q = common.dense(p["q"], x, policy).reshape(B, 1, n_heads, head_dim)
     if qk_norm:
         q = common.head_rmsnorm(p["q_norm"], q)
@@ -240,35 +257,118 @@ def attn_decode_step(
             knew = common.apply_rope(knew, rope_pos, rope_theta)
         knew = _repeat_kv(knew, kv_repeat)
         vnew = _repeat_kv(vnew, kv_repeat)
-        slot = jnp.mod(idx, S_cap)
-        if per_slot:
-            cache_k = cache_k.at[jnp.arange(B), slot].set(knew[:, 0])
-            cache_v = cache_v.at[jnp.arange(B), slot].set(vnew[:, 0])
+        if paged:
+            NB, bs = cache_k.shape[0], cache_k.shape[1]
+            mb = block_tables.shape[1]
+            LP = mb * bs
+            blk = jnp.minimum(idx // bs, mb - 1)
+            wb = jnp.where(idx < LP,
+                           block_tables[jnp.arange(B), blk], NB)
+            wo = jnp.mod(idx, bs)
+            cache_k = cache_k.at[wb, wo].set(knew[:, 0], mode="drop")
+            cache_v = cache_v.at[wb, wo].set(vnew[:, 0], mode="drop")
+            keys = cache_k[jnp.minimum(block_tables, NB - 1)].reshape(
+                B, LP, cache_k.shape[2], head_dim)
+            vals = cache_v[jnp.minimum(block_tables, NB - 1)].reshape(
+                B, LP, cache_v.shape[2], head_dim)
+            kpos = jnp.arange(LP)
+            idx_b = idx[:, None]
+            valid = (kpos[None, :] <= idx_b) & \
+                (kpos[None, :] >= (idx_b - (window - 1) if window else 0))
         else:
-            cache_k = jax.lax.dynamic_update_slice(cache_k, knew, (0, slot, 0, 0))
-            cache_v = jax.lax.dynamic_update_slice(cache_v, vnew, (0, slot, 0, 0))
-        # absolute position held by each slot (after this write); per-row when
-        # idx is a vector -> kpos/valid broadcast to (B, S_cap)
-        slots = jnp.arange(S_cap)
-        idx_b = idx[:, None] if per_slot else idx
-        kpos = idx_b - jnp.mod(idx_b - slots, S_cap)
-        valid = (kpos >= 0) & (kpos >= (idx_b - (window - 1) if window else 0))
+            S_cap = cache_k.shape[1]
+            slot = jnp.mod(idx, S_cap)
+            if per_slot:
+                cache_k = cache_k.at[jnp.arange(B), slot].set(knew[:, 0])
+                cache_v = cache_v.at[jnp.arange(B), slot].set(vnew[:, 0])
+            else:
+                cache_k = jax.lax.dynamic_update_slice(cache_k, knew,
+                                                       (0, slot, 0, 0))
+                cache_v = jax.lax.dynamic_update_slice(cache_v, vnew,
+                                                       (0, slot, 0, 0))
+            # absolute position held by each slot (after this write); per-row
+            # when idx is a vector -> kpos/valid broadcast to (B, S_cap)
+            slots = jnp.arange(S_cap)
+            idx_b = idx[:, None] if per_slot else idx
+            kpos = idx_b - jnp.mod(idx_b - slots, S_cap)
+            valid = (kpos >= 0) & \
+                (kpos >= (idx_b - (window - 1) if window else 0))
+            keys, vals = cache_k, cache_v
     else:
-        slots = jnp.arange(S_cap)
-        kpos = slots
+        S_cap = cache_k.shape[1]
         valid = jnp.ones((S_cap,), bool)
+        keys, vals = cache_k, cache_v
 
-    Kv_eff = cache_k.shape[2]
+    Kv_eff = keys.shape[2]
     rep = n_heads // Kv_eff
     sm = 1.0 / math.sqrt(head_dim)
     q5 = q.reshape(B, 1, Kv_eff, rep, head_dim)
-    s = jnp.einsum("bqkrd,bskd->bqkrs", q5, cache_k,
+    s = jnp.einsum("bqkrd,bskd->bqkrs", q5, keys,
                    preferred_element_type=jnp.float32) * sm
     vmask = (valid[:, None, None, None, :] if valid.ndim == 2
              else valid[None, None, None, None, :])
     s = jnp.where(vmask, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bqkrs,bskd->bqkrd", w, cache_v,
+    out = jnp.einsum("bqkrs,bskd->bqkrd", w, vals,
                      preferred_element_type=jnp.float32)
     out = out.reshape(B, 1, n_heads * head_dim)
     return common.dense(p["o"], out, policy), cache_k, cache_v
+
+
+def attn_chunk_step(
+    p, x, k_pages, v_pages, table_row, pos0, true_len,
+    policy: MiragePolicy, *,
+    n_heads: int, n_kv_heads: int, head_dim: int, rope_theta: float,
+    window: Optional[int] = None, qk_norm: bool = False, kv_repeat: int = 1,
+    q_chunk: int = 1024, kv_chunk: int = 1024,
+):
+    """Chunked-prefill attention for ONE serving slot over the paged cache.
+
+    x: ``(1, C, d)`` — the next ``C`` prompt tokens of the slot, starting at
+    absolute position ``pos0`` (traced). ``true_len <= C`` is the number of
+    REAL tokens (attention families right-pad the final chunk; pads are
+    dropped at the page write and masked in attention, so their garbage
+    never enters the cache). k/v_pages are the global ``(n_blocks,
+    block_size, Kv_eff, D)`` pools and ``table_row`` the slot's
+    ``(max_blocks,)`` block table.
+
+    The chunk's keys are scatter-written into the pages FIRST, then q
+    attends over the gathered prefix+chunk with absolute positions — the
+    same online-softmax ``chunked_attention`` as full prefill, so cross-
+    chunk causality (and SWA windows) come from the position mask alone.
+    """
+    B, C = x.shape[0], x.shape[1]
+    NB, bs = k_pages.shape[0], k_pages.shape[1]
+    mb = table_row.shape[0]
+    LP = mb * bs
+    positions = pos0 + jnp.arange(C)
+    q = common.dense(p["q"], x, policy).reshape(B, C, n_heads, head_dim)
+    k = common.dense(p["k"], x, policy).reshape(B, C, n_kv_heads, head_dim)
+    v = common.dense(p["v"], x, policy).reshape(B, C, n_kv_heads, head_dim)
+    if qk_norm:
+        q = common.head_rmsnorm(p["q_norm"], q)
+        k = common.head_rmsnorm(p["k_norm"], k)
+    q = common.apply_rope(q, positions, rope_theta)
+    k = common.apply_rope(k, positions, rope_theta)
+    k = _repeat_kv(k, kv_repeat)
+    v = _repeat_kv(v, kv_repeat)
+    # scatter the chunk into the pages; pads and positions beyond the table
+    # capacity route to the OOB sentinel and drop on device
+    j = jnp.arange(C)
+    blk = jnp.minimum(positions // bs, mb - 1)
+    dest = jnp.where((j < true_len) & (positions < LP), table_row[blk], NB)
+    off = jnp.mod(positions, bs)
+    k_pages = k_pages.at[dest, off].set(k[0], mode="drop")
+    v_pages = v_pages.at[dest, off].set(v[0], mode="drop")
+    # gather prefix + chunk; unwritten positions get kpos 2^30 (masked)
+    kb = k_pages[jnp.minimum(table_row, NB - 1)].reshape(
+        LP, k_pages.shape[2], head_dim)[None]
+    vb = v_pages[jnp.minimum(table_row, NB - 1)].reshape(
+        LP, v_pages.shape[2], head_dim)[None]
+    kpos = jnp.arange(LP)
+    kpos = jnp.where(kpos < pos0 + true_len, kpos, 2**30)
+    out = chunked_attention(q, kb, vb, positions, kpos, causal=True,
+                            window=window, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    out = out.reshape(B, C, n_heads * head_dim)
+    return common.dense(p["o"], out, policy), k_pages, v_pages

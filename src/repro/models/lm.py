@@ -256,6 +256,25 @@ class LM:
         return h + mamba2.mamba_apply(lp["mamba"], n1, cfg, self.policy,
                                     opt=self.opt)
 
+    def _post_attn_combine(self, lp, hh, n1, a, aux):
+        """Residual + FFN tail shared by the full-prefill and chunked-prefill
+        layer bodies (moe / command-r parallel / default pre-norm MLP)."""
+        cfg = self.cfg
+        if self.kind == "attn_moe":
+            hh = hh + a
+            n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+            m, aux_l = moe.moe_apply(
+                lp["moe"], n2, self.policy, n_experts=cfg.n_experts,
+                experts_per_token=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor, opt=self.opt)
+            return hh + m, aux + aux_l
+        if cfg.arch_id.startswith("command-r"):
+            return (hh + a + common.mlp(lp["mlp"], n1, self.policy,
+                                        opt=self.opt), aux)
+        hh = hh + a
+        n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
+        return hh + common.mlp(lp["mlp"], n2, self.policy, opt=self.opt), aux
+
     def _shared_block(self, sp, h, emb0, positions):
         cfg, opt = self.cfg, self.opt
         hd = cfg.resolved_head_dim
@@ -339,15 +358,44 @@ class LM:
     # ------------------------------------------------------------------
 
     def cache_spec(self, batch: int, cap: int,
-                   per_slot_idx: bool = False) -> Dict[str, Any]:
+                   per_slot_idx: bool = False, layout: str = "dense",
+                   block_size: int = 16,
+                   n_blocks: Optional[int] = None) -> Dict[str, Any]:
         """Abstract cache shapes (used by init_cache and the dry-run specs).
 
         ``per_slot_idx=True`` is the continuous-batching layout: ``idx`` is a
         ``(batch,)`` vector (each serving slot decodes at its own position)
-        instead of one scalar shared by the whole batch."""
+        instead of one scalar shared by the whole batch.
+
+        ``layout="paged"`` (implies per-slot idx) replaces the per-slot KV
+        rings with global page pools plus per-slot block tables:
+
+          * ``kp``/``vp`` (or ``shared_kp``/``shared_vp`` for the hybrid
+            family): ``(n_layers, n_blocks, block_size, kv_eff, hd)`` — ONE
+            pool shared by every slot, sized by the live-token budget
+            (default ``batch * ceil(cap / block_size)`` blocks = no saving
+            but always safe; servers pass a smaller pool to realize the
+            paged-memory win);
+          * ``bt``: ``(batch, ceil(cap / block_size))`` int32 block table,
+            unmapped entries hold the OOB sentinel ``n_blocks``.
+
+        Addressing is linear (logical position p -> table entry ``p //
+        block_size``), no ring wrap: sliding windows are applied through the
+        attention validity mask instead, so paged SWA capacity is ``cap``
+        positions rather than ``min(cap, window)``. SSM recurrent state
+        (``ssm``/``conv``) is O(1) per slot and stays dense under both
+        layouts."""
+        if layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache layout {layout!r}")
+        paged = layout == "paged"
+        if paged:
+            per_slot_idx = True
         cfg = self.cfg
         hd = cfg.resolved_head_dim
         nl = cfg.n_layers
+        from repro.runtime.paging import blocks_for
+        mb = blocks_for(cap, block_size)
+        nb = n_blocks if n_blocks is not None else batch * mb
         spec: Dict[str, Any] = {
             "idx": (((batch,) if per_slot_idx else ()), jnp.int32)}
         if self.kind == "mamba":
@@ -358,21 +406,43 @@ class LM:
             if cfg.attn_every:
                 napp = cfg.n_layers // cfg.attn_every
                 kv_eff = cfg.n_kv_heads * self.opt.kv_repeat
-                cache_len = min(cap, cfg.sliding_window or cap)
-                spec["shared_k"] = ((napp, batch, cache_len, kv_eff, hd), jnp.float32)
-                spec["shared_v"] = ((napp, batch, cache_len, kv_eff, hd), jnp.float32)
+                if paged:
+                    spec["shared_kp"] = ((napp, nb, block_size, kv_eff, hd),
+                                         jnp.float32)
+                    spec["shared_vp"] = ((napp, nb, block_size, kv_eff, hd),
+                                         jnp.float32)
+                    spec["bt"] = ((batch, mb), jnp.int32)
+                else:
+                    cache_len = min(cap, cfg.sliding_window or cap)
+                    spec["shared_k"] = ((napp, batch, cache_len, kv_eff, hd),
+                                        jnp.float32)
+                    spec["shared_v"] = ((napp, batch, cache_len, kv_eff, hd),
+                                        jnp.float32)
         else:
             kv_eff = cfg.n_kv_heads * self.opt.kv_repeat
-            cache_len = min(cap, cfg.sliding_window or cap)
-            spec["k"] = ((nl, batch, cache_len, kv_eff, hd), jnp.float32)
-            spec["v"] = ((nl, batch, cache_len, kv_eff, hd), jnp.float32)
+            if paged:
+                spec["kp"] = ((nl, nb, block_size, kv_eff, hd), jnp.float32)
+                spec["vp"] = ((nl, nb, block_size, kv_eff, hd), jnp.float32)
+                spec["bt"] = ((batch, mb), jnp.int32)
+            else:
+                cache_len = min(cap, cfg.sliding_window or cap)
+                spec["k"] = ((nl, batch, cache_len, kv_eff, hd), jnp.float32)
+                spec["v"] = ((nl, batch, cache_len, kv_eff, hd), jnp.float32)
         return spec
 
     def init_cache(self, batch: int, cap: int,
-                   per_slot_idx: bool = False) -> Dict[str, Any]:
-        return {k: jnp.zeros(s, d)
-                for k, (s, d) in self.cache_spec(batch, cap,
-                                                 per_slot_idx).items()}
+                   per_slot_idx: bool = False, layout: str = "dense",
+                   block_size: int = 16,
+                   n_blocks: Optional[int] = None) -> Dict[str, Any]:
+        spec = self.cache_spec(batch, cap, per_slot_idx, layout=layout,
+                               block_size=block_size, n_blocks=n_blocks)
+        cache = {k: jnp.zeros(s, d) for k, (s, d) in spec.items()}
+        if "bt" in cache:
+            # unmapped table entries carry the OOB sentinel (= pool size):
+            # scatter-writes drop, gathers clamp + get masked
+            pool = spec.get("kp", spec.get("shared_kp"))
+            cache["bt"] = jnp.full(spec["bt"][0], pool[0][1], jnp.int32)
+        return cache
 
     def prefill(self, params, tokens, cap: int, extra_embeds=None, lens=None):
         """Run the prompt, build the cache, return last-position logits.
@@ -475,21 +545,7 @@ class LM:
                     causal=True, window=cfg.sliding_window,
                     qk_norm=cfg.qk_norm, kv_repeat=self.opt.kv_repeat,
                     q_chunk=self.opt.q_chunk, kv_chunk=self.opt.kv_chunk, opt=self.opt)
-                if self.kind == "attn_moe":
-                    hh = hh + a
-                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
-                    m, aux_l = moe.moe_apply(
-                        lp["moe"], n2, self.policy, n_experts=cfg.n_experts,
-                        experts_per_token=cfg.experts_per_token,
-                        capacity_factor=cfg.capacity_factor, opt=self.opt)
-                    hh = hh + m
-                    aux = aux + aux_l
-                elif cfg.arch_id.startswith("command-r"):
-                    hh = hh + a + common.mlp(lp["mlp"], n1, self.policy, opt=self.opt)
-                else:
-                    hh = hh + a
-                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
-                    hh = hh + common.mlp(lp["mlp"], n2, self.policy, opt=self.opt)
+                hh, aux = self._post_attn_combine(lp, hh, n1, a, aux)
                 # keep the last cache_len positions (ring layout: pos % cache_len)
                 kk = kk[:, -cache_len:]
                 vv = vv[:, -cache_len:]
@@ -520,11 +576,21 @@ class LM:
         return logits, cache
 
     def decode_step(self, params, cache, tokens):
-        """tokens: (B, 1). Returns (logits (B, 1, V), new cache)."""
+        """tokens: (B, 1). Returns (logits (B, 1, V), new cache).
+
+        Layout is inferred from the cache keys: a ``bt`` leaf selects the
+        paged path (page-pool leaves ``kp``/``vp`` or ``shared_kp``/
+        ``shared_vp``; block tables shared across layers), otherwise the
+        dense per-slot rings."""
         cfg = self.cfg
         h = common.embed(params["embed"], tokens)
         emb0 = h
         idx = cache["idx"]
+        bt = cache.get("bt")
+        k_key, v_key = ("kp", "vp") if "kp" in cache else ("k", "v")
+        shk_key, shv_key = (("shared_kp", "shared_vp")
+                            if "shared_kp" in cache
+                            else ("shared_k", "shared_v"))
 
         if self.kind == "mamba":
             def body(carry, xs):
@@ -552,7 +618,8 @@ class LM:
                             self.policy, n_heads=cfg.n_heads,
                             n_kv_heads=cfg.n_kv_heads, head_dim=hd,
                             rope_theta=cfg.rope_theta,
-                            kv_repeat=self.opt.kv_repeat)
+                            kv_repeat=self.opt.kv_repeat,
+                            block_tables=bt)
                         shk_ = jax.lax.dynamic_update_index_in_dim(
                             shk_, ck, jnp.maximum(app, 0), 0)
                         shv_ = jax.lax.dynamic_update_index_in_dim(
@@ -568,15 +635,15 @@ class LM:
                         lambda args: args, (hh, shk, shv))
                 return (hh, shk, shv), (ssm_st, conv_st)
 
-            shk = cache.get("shared_k", jnp.zeros((1,), jnp.float32))
-            shv = cache.get("shared_v", jnp.zeros((1,), jnp.float32))
+            shk = cache.get(shk_key, jnp.zeros((1,), jnp.float32))
+            shv = cache.get(shv_key, jnp.zeros((1,), jnp.float32))
             (h, shk, shv), (ssm, conv) = jax.lax.scan(
                 _layer_noise_scoped(body), (h, shk, shv),
                 (params["layers"], cache["ssm"], cache["conv"],
                  jnp.arange(cfg.n_layers)))
             cache = dict(cache, ssm=ssm, conv=conv)
             if cfg.attn_every:
-                cache["shared_k"], cache["shared_v"] = shk, shv
+                cache[shk_key], cache[shv_key] = shk, shv
         else:
             def body(hh, xs):
                 lp, ck, cv, _li = xs
@@ -587,31 +654,138 @@ class LM:
                     n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
                     head_dim=hd, rope_theta=cfg.rope_theta,
                     window=cfg.sliding_window, qk_norm=cfg.qk_norm,
-                    kv_repeat=self.opt.kv_repeat)
-                if self.kind == "attn_moe":
-                    hh = hh + a
-                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
-                    m, _ = moe.moe_apply(
-                        lp["moe"], n2, self.policy, n_experts=cfg.n_experts,
-                        experts_per_token=cfg.experts_per_token,
-                        capacity_factor=cfg.capacity_factor, opt=self.opt)
-                    hh = hh + m
-                elif cfg.arch_id.startswith("command-r"):
-                    hh = hh + a + common.mlp(lp["mlp"], n1, self.policy, opt=self.opt)
-                else:
-                    hh = hh + a
-                    n2 = common.norm(lp["ln2"], hh, cfg.norm_eps, cfg.norm_type)
-                    hh = hh + common.mlp(lp["mlp"], n2, self.policy, opt=self.opt)
+                    kv_repeat=self.opt.kv_repeat, block_tables=bt)
+                hh, _ = self._post_attn_combine(
+                    lp, hh, n1, a, jnp.zeros((), jnp.float32))
                 return hh, (ck, cv)
 
             h, (ks, vs) = jax.lax.scan(
                 _layer_noise_scoped(body), h,
-                (params["layers"], cache["k"], cache["v"],
+                (params["layers"], cache[k_key], cache[v_key],
                  jnp.arange(cfg.n_layers)))
-            cache = dict(cache, k=ks, v=vs)
+            cache = dict(cache, **{k_key: ks, v_key: vs})
 
         cache["idx"] = idx + 1
         logits = self._head(params, h)
+        return logits, cache
+
+    def prefill_chunk(self, params, cache, tokens, slot, pos0, true_len):
+        """Process one prompt chunk for ONE slot of a stacked PAGED cache.
+
+        tokens: ``(1, C)`` — the slot's next chunk, starting at absolute
+        position ``pos0`` (traced; ``slot``/``true_len`` traced too, so one
+        compile serves every chunk of every request). ``true_len <= C`` is
+        the real token count: attention families may right-pad the final
+        chunk (pads are dropped at the page write and masked in attention);
+        SSM/hybrid recurrences carry state through EVERY step, so callers
+        there must send exact-length chunks (``true_len == C``) — the
+        server's chunker does exactly that, mirroring its exact-length
+        prefill bucketing.
+
+        Chunk k/v scatter straight into the global page pools through the
+        slot's block table (blocks must already be allocated for positions
+        ``< pos0 + true_len``); SSM state is read from / written back to the
+        slot's row, with ``pos0 == 0`` resetting it (a reused slot's stale
+        state must not leak into a new request). Returns ``(logits (1, 1, V)
+        at the chunk's last real token, new cache)`` and advances
+        ``idx[slot]`` to ``pos0 + true_len``.
+        """
+        cfg = self.cfg
+        h, _ = self._embed_inputs(params, tokens, None)
+        h = h.astype(self.opt.carry)
+        C = h.shape[1]
+        emb0 = h
+        positions = pos0 + jnp.arange(C)
+        bt_row = cache["bt"][slot] if "bt" in cache else None
+        aux0 = jnp.zeros((), jnp.float32)
+
+        if self.kind == "mamba":
+            fresh = (pos0 == 0)
+            ssm0 = jnp.where(fresh, 0.0, cache["ssm"][:, slot])
+            conv0 = jnp.where(fresh, 0.0, cache["conv"][:, slot])
+
+            def body(carry, xs):
+                hh, shk, shv = carry
+                lp, st, cv, li = xs
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+                o, (st2, cv2) = mamba2.mamba_apply(
+                    lp["mamba"], n1, cfg, self.policy, init_state=st[None],
+                    conv_state=cv[None], return_cache=True, opt=self.opt)
+                hh = hh + o
+                if cfg.attn_every:
+                    app = (li + 1) // cfg.attn_every - 1
+
+                    def do_shared(args):
+                        v, shk_, shv_ = args
+                        hd = cfg.resolved_head_dim
+                        u = common.dense(
+                            params["shared"]["proj"],
+                            jnp.concatenate([v, emb0], axis=-1), self.policy)
+                        n = common.norm(params["shared"]["ln1"], u,
+                                        cfg.norm_eps, cfg.norm_type)
+                        ckp = shk_[jnp.maximum(app, 0)]
+                        cvp = shv_[jnp.maximum(app, 0)]
+                        a, ckp, cvp = attention.attn_chunk_step(
+                            params["shared"]["attn"], n, ckp, cvp, bt_row,
+                            pos0, true_len, self.policy,
+                            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=hd, rope_theta=cfg.rope_theta,
+                            kv_repeat=self.opt.kv_repeat,
+                            q_chunk=self.opt.q_chunk,
+                            kv_chunk=self.opt.kv_chunk)
+                        shk_ = jax.lax.dynamic_update_index_in_dim(
+                            shk_, ckp, jnp.maximum(app, 0), 0)
+                        shv_ = jax.lax.dynamic_update_index_in_dim(
+                            shv_, cvp, jnp.maximum(app, 0), 0)
+                        u = u + a
+                        n2 = common.norm(params["shared"]["ln2"], u,
+                                         cfg.norm_eps, cfg.norm_type)
+                        return (v + u + common.mlp(params["shared"]["mlp"],
+                                                   n2, self.policy,
+                                                   opt=self.opt), shk_, shv_)
+
+                    hh, shk, shv = jax.lax.cond(
+                        (li + 1) % cfg.attn_every == 0, do_shared,
+                        lambda args: args, (hh, shk, shv))
+                return (hh, shk, shv), (st2[0], cv2[0])
+
+            shk = cache.get("shared_kp", jnp.zeros((1,), jnp.float32))
+            shv = cache.get("shared_vp", jnp.zeros((1,), jnp.float32))
+            (h, shk, shv), (ssm, conv) = jax.lax.scan(
+                _layer_noise_scoped(body), (h, shk, shv),
+                (params["layers"], ssm0, conv0, jnp.arange(cfg.n_layers)))
+            cache = dict(cache,
+                         ssm=cache["ssm"].at[:, slot].set(ssm),
+                         conv=cache["conv"].at[:, slot].set(conv))
+            if cfg.attn_every:
+                cache["shared_kp"], cache["shared_vp"] = shk, shv
+        else:
+            def body(carry, xs):
+                hh, aux = carry
+                lp, kp, vp, _li = xs
+                hd = cfg.resolved_head_dim
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+                a, kp, vp = attention.attn_chunk_step(
+                    lp["attn"], n1, kp, vp, bt_row, pos0, true_len,
+                    self.policy, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                    rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+                    qk_norm=cfg.qk_norm, kv_repeat=self.opt.kv_repeat,
+                    q_chunk=self.opt.q_chunk, kv_chunk=self.opt.kv_chunk)
+                hh, aux = self._post_attn_combine(lp, hh, n1, a, aux)
+                return (hh.astype(self.opt.carry), aux), (kp, vp)
+
+            (h, _), (kps, vps) = jax.lax.scan(
+                _layer_noise_scoped(body), (h, aux0),
+                (params["layers"], cache["kp"], cache["vp"],
+                 jnp.arange(cfg.n_layers)))
+            cache = dict(cache, kp=kps, vp=vps)
+
+        cache["idx"] = cache["idx"].at[slot].set(
+            jnp.asarray(pos0 + true_len, jnp.int32))
+        h_last = jnp.take_along_axis(
+            h, jnp.reshape(jnp.maximum(true_len - 1, 0), (1, 1, 1)), axis=1)
+        logits = self._head(params, h_last)
         return logits, cache
 
 
@@ -619,42 +793,98 @@ class LM:
 # Stacked-cache helpers (continuous-batching serving; runtime/server.py and
 # runtime/elastic.py). A "stacked" cache is a normal cache pytree whose batch
 # dimension is the slot dimension and whose "idx" is a per-slot vector
-# (``cache_spec(..., per_slot_idx=True)``).
+# (``cache_spec(..., per_slot_idx=True)``). The paged layout additionally
+# carries global page pools (``kp``/``vp``/``shared_kp``/``shared_vp`` — NOT
+# per-slot) and a per-slot ``bt`` block table.
 # --------------------------------------------------------------------------
 
+PAGE_POOL_LEAVES = ("kp", "vp", "shared_kp", "shared_vp")
+# paged-pool leaf -> the dense prefill leaf whose rows scatter into it
+_POOL_SRC = {"kp": "k", "vp": "v", "shared_kp": "shared_k",
+             "shared_vp": "shared_v"}
+
+
 def cache_slot_axis(name: str) -> int:
-    """Axis of the serving-slot dimension for a cache leaf. Every leaf is
-    layer-stacked with batch at axis 1, except the per-slot ``idx`` vector."""
-    return 0 if name == "idx" else 1
+    """Axis of the serving-slot dimension for a PER-SLOT cache leaf. Every
+    such leaf is layer-stacked with batch at axis 1, except the ``idx``
+    vector and the ``bt`` block table (slot-major). Page-pool leaves
+    (:data:`PAGE_POOL_LEAVES`) have no slot axis at all — callers must
+    route them separately."""
+    return 0 if name in ("idx", "bt") else 1
 
 
 def cache_slot_count(cache: Dict[str, Any]) -> int:
     return cache["idx"].shape[0]
 
 
+def _scatter_pages(pages: jax.Array, dense: jax.Array,
+                   rows: jax.Array) -> jax.Array:
+    """Scatter dense prefill KV rows into a page pool.
+
+    pages: ``(nl, n_blocks, bs, kv, hd)``; dense: ``(nl, B, L, kv, hd)``
+    (linear positions 0..L-1 — serving prefill never ring-wraps); rows: the
+    ``(B, max_blocks)`` destination block tables. Table entries carrying
+    the OOB sentinel (unallocated blocks / dropped admission rows) make the
+    scatter drop on device."""
+    B, L = dense.shape[1], dense.shape[2]
+    nb, bs, mb = pages.shape[1], pages.shape[2], rows.shape[1]
+    pos = jnp.arange(L)
+    # positions beyond the table's linear capacity route to the sentinel
+    # (drop), matching the decode/chunk write contract
+    db = jnp.where(pos < mb * bs,
+                   rows[:, jnp.minimum(pos // bs, mb - 1)], nb)   # (B, L)
+    off = jnp.broadcast_to(jnp.mod(pos, bs), (B, L))
+    return pages.at[:, db, off].set(dense, mode="drop")
+
+
 def cache_insert(live: Dict[str, Any], new: Dict[str, Any],
                  slots: jax.Array) -> Dict[str, Any]:
     """Scatter a (batched) prefill cache into the live stacked cache.
 
-    ``new`` leaves carry ``B_new`` slots' worth of state; ``slots`` is the
-    ``(B_new,)`` destination slot index per row. Jit-safe (one scatter per
-    leaf, no per-slot Python); rows whose slot is out of bounds (the
-    ``>= n_slots`` sentinel used to pad admission groups to a fixed batch)
-    are dropped on device.
+    ``new`` is a DENSE-layout prefill cache carrying ``B_new`` slots' worth
+    of state; ``slots`` is the ``(B_new,)`` destination slot index per row.
+    Jit-safe (one scatter per leaf, no per-slot Python); rows whose slot is
+    out of bounds (the ``>= n_slots`` sentinel used to pad admission groups
+    to a fixed batch) are dropped on device.
+
+    When ``live`` is PAGED, per-slot leaves scatter as usual while the
+    dense ``k``/``v`` (and ``shared_k``/``shared_v``) rows scatter through
+    the live block tables into the page pools — blocks for each row's
+    positions must already be allocated (the server's admission path does
+    this); OOB slot rows get all-sentinel tables so they still drop.
     """
     out = {}
+    bt = live.get("bt")
+    rows = None
+    if bt is not None:
+        nb = live[next(k for k in PAGE_POOL_LEAVES if k in live)].shape[1]
+        S = bt.shape[0]
+        rows = jnp.where((slots < S)[:, None],
+                         bt[jnp.minimum(slots, S - 1)], nb)
     for k, v in live.items():
-        src = new[k]
-        if cache_slot_axis(k) == 0:
-            out[k] = v.at[slots].set(src, mode="drop")
+        if k == "bt":
+            out[k] = v
+        elif k in PAGE_POOL_LEAVES:
+            out[k] = _scatter_pages(v, new[_POOL_SRC[k]], rows)
+        elif cache_slot_axis(k) == 0:
+            out[k] = v.at[slots].set(new[k], mode="drop")
         else:
-            out[k] = v.at[:, slots].set(src, mode="drop")
+            out[k] = v.at[:, slots].set(new[k], mode="drop")
     return out
 
 
 def cache_extract(cache: Dict[str, Any], slots) -> Dict[str, Any]:
     """Gather the given slots out of a stacked cache (elastic resize /
-    debugging). ``slots`` may be any integer index array."""
+    debugging). ``slots`` may be any integer index array. Page-pool leaves
+    are global (block ids are stable across slot compaction) and pass
+    through untouched; the ``bt`` rows carry the per-slot mapping."""
     slots = jnp.asarray(slots, jnp.int32)
-    return {k: (v[slots] if cache_slot_axis(k) == 0 else v[:, slots])
-            for k, v in cache.items()}
+    out = {}
+    for k, v in cache.items():
+        if k in PAGE_POOL_LEAVES:
+            out[k] = v
+        elif cache_slot_axis(k) == 0:
+            out[k] = v[slots]
+        else:
+            out[k] = v[:, slots]
+    return out

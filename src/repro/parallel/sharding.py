@@ -185,6 +185,12 @@ def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
     """KV/SSM cache leaves. Layout:
       k/v/self_k/self_v/cross_k/cross_v/shared_k/shared_v:
           (nl, B, S, kv_eff, hd) -> (None, dp, sp_if_B_unshardable, tp, None)
+      kp/vp/shared_kp/shared_vp (paged page pools):
+          (nl, NB, bs, kv_eff, hd) -> (None, dp_if_NB_divisible, None, tp, None)
+          — the BLOCK dim takes the data axis (blocks are the unit of both
+          allocation and placement; per-slot gathers cross shards and GSPMD
+          inserts the collectives, which the roofline makes visible)
+      bt (block tables): (slots, max_blocks) -> (dp, None)
       ssm:  (nl, B, H, P, N)     -> (None, dp, tp, None, None)
       conv: (nl, B, K-1, C)      -> (None, dp, None, tp)
     """
@@ -196,6 +202,12 @@ def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
         return P() if not shape else _fit(mesh, shape, (dp,))
     if not shape:
         return P()
+    if leaf == "bt":
+        return _fit(mesh, shape, (dp, None))
+    if leaf in ("kp", "vp", "shared_kp", "shared_vp"):
+        nl, NB, bs, kv, hd = shape
+        b_ax = dp if NB % _axsize(mesh, dp) == 0 else None
+        return _fit(mesh, shape, (None, b_ax, None, "model", None))
     if leaf in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
                 "shared_k", "shared_v"):
         nl, B, S, kv, hd = shape

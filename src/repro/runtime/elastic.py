@@ -58,10 +58,15 @@ def resize_serving_state(model, state, cap: int, new_slots: int,
 
     ``state`` is the :class:`repro.runtime.server.LMServer` device pytree
     ({"cache": stacked cache, per-slot vectors...}). Slots listed in
-    ``keep`` are compacted to the front of the new state via the stacked-
-    cache gather/scatter helpers in ``models.lm``; everything else starts
-    empty (inactive). The caller remaps its host-side slot bookkeeping to
-    ``range(len(keep))``.
+    ``keep`` are compacted to the front of the new state; everything else
+    starts empty (inactive). The caller remaps its host-side slot
+    bookkeeping (and, for the paged layout, the block allocator via
+    ``BlockAllocator.remap_slots``) to ``range(len(keep))``.
+
+    Dense caches move through the ``models.lm`` gather/scatter helpers;
+    paged caches keep their page POOLS untouched (block ids are stable
+    under slot compaction) and only gather the per-slot leaves — ``idx``,
+    the ``bt`` table rows and any dense recurrent state.
     """
     import jax.numpy as jnp
 
@@ -70,7 +75,18 @@ def resize_serving_state(model, state, cap: int, new_slots: int,
     keep = list(keep or [])
     if len(keep) > new_slots:
         raise ValueError(f"{len(keep)} live slots do not fit in {new_slots}")
-    new_cache = model.init_cache(new_slots, cap, per_slot_idx=True)
+    cache = state["cache"]
+    paged = "bt" in cache
+    if paged:
+        pool = next(k for k in lm_helpers.PAGE_POOL_LEAVES if k in cache)
+        new_cache = model.init_cache(
+            new_slots, cap, per_slot_idx=True, layout="paged",
+            block_size=cache[pool].shape[2], n_blocks=cache[pool].shape[1])
+        for k in lm_helpers.PAGE_POOL_LEAVES:
+            if k in cache:
+                new_cache[k] = cache[k]
+    else:
+        new_cache = model.init_cache(new_slots, cap, per_slot_idx=True)
     new_state = {"cache": new_cache}
     for k, v in state.items():
         if k == "cache":
@@ -79,13 +95,52 @@ def resize_serving_state(model, state, cap: int, new_slots: int,
     if keep:
         dst = jnp.arange(len(keep), dtype=jnp.int32)
         src = jnp.asarray(keep, jnp.int32)
-        new_state["cache"] = lm_helpers.cache_insert(
-            new_cache, lm_helpers.cache_extract(state["cache"], src), dst)
+        if paged:
+            for k, v in new_cache.items():
+                if k in lm_helpers.PAGE_POOL_LEAVES:
+                    continue
+                old = cache[k]
+                if lm_helpers.cache_slot_axis(k) == 0:
+                    new_cache[k] = v.at[dst].set(old[src])
+                else:
+                    new_cache[k] = v.at[:, dst].set(old[:, src])
+            new_state["cache"] = new_cache
+        else:
+            new_state["cache"] = lm_helpers.cache_insert(
+                new_cache, lm_helpers.cache_extract(cache, src), dst)
         for k, v in state.items():
             if k == "cache":
                 continue
             new_state[k] = new_state[k].at[dst].set(v[src])
     return new_state
+
+
+def resize_block_pool(state, allocator, new_n_blocks: int):
+    """Elastic paged-pool resize: compact live blocks to the front of a
+    pool of ``new_n_blocks`` (grow under admission pressure, shrink after a
+    long-context burst retires). ``allocator`` is the server's
+    :class:`repro.runtime.paging.BlockAllocator` — its ``resize_pool``
+    renumbers the live blocks and rewrites every table; this moves the page
+    ARRAYS to match. Raises if the live blocks don't fit the new pool."""
+    import jax.numpy as jnp
+
+    from repro.models import lm as lm_helpers
+
+    old_ids, new_ids = allocator.resize_pool(new_n_blocks)
+    cache = dict(state["cache"])
+    for k in lm_helpers.PAGE_POOL_LEAVES:
+        if k not in cache:
+            continue
+        v = cache[k]
+        nv = jnp.zeros(v.shape[:1] + (int(new_n_blocks),) + v.shape[2:],
+                       v.dtype)
+        if len(old_ids):
+            nv = nv.at[:, jnp.asarray(new_ids)].set(
+                v[:, jnp.asarray(old_ids)])
+        cache[k] = nv
+    cache["bt"] = jnp.asarray(allocator.tables)
+    allocator.dirty = False
+    return dict(state, cache=cache)
 
 
 def elastic_restore(ckpt: Checkpointer, abstract_state, shardings,

@@ -1,0 +1,201 @@
+"""Paged KV serving memory: the block allocator behind the block-table cache.
+
+A dense stacked cache gives every serving slot its own ``cap``-length ring,
+so KV memory scales with ``slots x max_context`` even when most requests are
+short. The paged layout replaces the per-slot rings with ONE global pool of
+fixed-size blocks (``(n_layers, n_blocks, block_size, kv_heads, head_dim)``
+page arrays) plus a small per-slot **block table** mapping logical block
+``i`` of a slot to a physical block id. Memory then scales with the *live
+token count* of the workload, rounded up to blocks — the same trick
+production LLM engines use (vLLM-style paged attention).
+
+Split of responsibilities:
+
+  * the **allocator** (this module) is host-side bookkeeping: a lowest-id
+    free heap, per-slot tables, alloc/free/defrag on retirement. It owns the
+    authoritative ``tables`` array and mirrors it to the device cache leaf
+    ``bt`` (the server syncs lazily via :attr:`BlockAllocator.dirty`);
+  * the **device** side only ever sees jittable arrays: the page pools and
+    the ``(slots, max_blocks)`` int32 table whose unmapped entries hold the
+    OOB sentinel ``n_blocks`` — scatter-writes through a sentinel drop on
+    device, gathers clamp and are hidden by the position validity mask.
+
+Freed blocks re-enter a min-heap, so reuse prefers LOW physical ids: after a
+burst retires, the live region compacts toward the front of the pool
+(defrag-on-retirement), which is what makes :meth:`resize_pool` (elastic
+pool shrink/grow, ``runtime.elastic.resize_block_pool``) cheap.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def blocks_for(n_positions: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_positions`` tokens."""
+    return -(-max(int(n_positions), 0) // block_size)
+
+
+class BlockAllocator:
+    """Free-heap block allocator with per-slot block tables.
+
+    Invariants (asserted by :meth:`check_invariants`, property-tested in
+    ``tests/test_paging.py``):
+      * every block is either on the free heap or owned by exactly one slot;
+      * a slot's table maps logical blocks ``0..n_owned-1`` to distinct
+        physical ids and holds the sentinel ``n_blocks`` everywhere else;
+      * ``free_count + sum(owned) == n_blocks`` at all times.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, n_slots: int,
+                 max_blocks_per_slot: Optional[int] = None):
+        if n_blocks < 1 or block_size < 1:
+            raise ValueError(f"bad pool geometry: n_blocks={n_blocks} "
+                             f"block_size={block_size}")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self.n_slots = int(n_slots)
+        self.max_blocks_per_slot = int(max_blocks_per_slot or n_blocks)
+        self.sentinel = self.n_blocks
+        self._free: List[int] = list(range(self.n_blocks))
+        heapq.heapify(self._free)
+        self.tables = np.full((self.n_slots, self.max_blocks_per_slot),
+                              self.sentinel, np.int32)
+        self.owner = np.full((self.n_blocks,), -1, np.int64)
+        self.n_owned = np.zeros((self.n_slots,), np.int64)
+        self.peak_in_use = 0
+        # host->device table sync flag: the server pushes ``tables`` to the
+        # cache's ``bt`` leaf only when this is set (and clears it)
+        self.dirty = True
+
+    # -- queries ---------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def can_fit(self, n_positions: int) -> bool:
+        return blocks_for(n_positions, self.block_size) <= self.free_count
+
+    def slot_blocks(self, slot: int) -> List[int]:
+        return [int(b) for b in self.tables[slot, :self.n_owned[slot]]]
+
+    # -- mutation --------------------------------------------------------
+
+    def ensure(self, slot: int, n_positions: int) -> None:
+        """Grow ``slot``'s table until it covers ``n_positions`` tokens.
+
+        Raises :class:`RuntimeError` on pool exhaustion and
+        :class:`ValueError` when the slot's table itself is full (the
+        request outgrew ``max_blocks_per_slot * block_size`` capacity).
+        """
+        need = blocks_for(n_positions, self.block_size)
+        if need > self.max_blocks_per_slot:
+            raise ValueError(
+                f"slot {slot} needs {need} blocks for {n_positions} "
+                f"positions but tables hold {self.max_blocks_per_slot} "
+                f"(capacity {self.max_blocks_per_slot * self.block_size})")
+        if need - self.n_owned[slot] > len(self._free):
+            # atomic: a failed grow leaves the slot untouched
+            raise RuntimeError(
+                f"block pool exhausted ({self.n_blocks} blocks of "
+                f"{self.block_size}); grow n_blocks or admit less")
+        while self.n_owned[slot] < need:
+            b = heapq.heappop(self._free)
+            self.tables[slot, self.n_owned[slot]] = b
+            self.owner[b] = slot
+            self.n_owned[slot] += 1
+            self.dirty = True
+        self.peak_in_use = max(self.peak_in_use, self.used_count)
+
+    def release(self, slot: int) -> int:
+        """Return all of ``slot``'s blocks to the pool (defrag-on-retirement:
+        the min-heap hands low ids back first). Returns the count freed."""
+        n = int(self.n_owned[slot])
+        for j in range(n):
+            b = int(self.tables[slot, j])
+            heapq.heappush(self._free, b)
+            self.owner[b] = -1
+        if n:
+            self.tables[slot, :n] = self.sentinel
+            self.n_owned[slot] = 0
+            self.dirty = True
+        return n
+
+    def remap_slots(self, keep: Sequence[int], new_slots: int) -> None:
+        """Elastic slot-count change: compact the kept slots' table rows to
+        the front (row ``i`` <- old row ``keep[i]``), release everything
+        else. Mirrors ``elastic.resize_serving_state`` slot compaction."""
+        keep = list(keep)
+        if len(keep) > new_slots:
+            raise ValueError(f"{len(keep)} kept slots do not fit {new_slots}")
+        for s in range(self.n_slots):
+            if s not in keep:
+                self.release(s)
+        new_tables = np.full((new_slots, self.max_blocks_per_slot),
+                             self.sentinel, np.int32)
+        new_owned = np.zeros((new_slots,), np.int64)
+        for i, s in enumerate(keep):
+            new_tables[i] = self.tables[s]
+            new_owned[i] = self.n_owned[s]
+            for b in self.slot_blocks(s):
+                self.owner[b] = i
+        self.tables, self.n_owned, self.n_slots = new_tables, new_owned, \
+            new_slots
+        self.dirty = True
+
+    def resize_pool(self, new_n_blocks: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Elastic pool resize with compaction: used blocks are renumbered
+        ``0..used-1`` in increasing old-id order. Returns ``(old_ids,
+        new_ids)`` so the caller can move the page-array rows
+        (``new_pages[:, new_ids] = old_pages[:, old_ids]``); tables are
+        rewritten in place (sentinel value changes with the pool size)."""
+        used = np.sort(np.where(self.owner >= 0)[0])
+        if len(used) > new_n_blocks:
+            raise ValueError(f"{len(used)} blocks in use do not fit a pool "
+                             f"of {new_n_blocks}")
+        old_to_new = np.full((self.n_blocks,), new_n_blocks, np.int64)
+        old_to_new[used] = np.arange(len(used))
+        new_owner = np.full((new_n_blocks,), -1, np.int64)
+        new_owner[:len(used)] = self.owner[used]
+        mapped = self.tables < self.sentinel
+        new_tables = np.full_like(self.tables, new_n_blocks)
+        new_tables[mapped] = old_to_new[self.tables[mapped]]
+        old_ids, new_ids = used, np.arange(len(used))
+        self.n_blocks = int(new_n_blocks)
+        self.sentinel = self.n_blocks
+        self.tables = new_tables.astype(np.int32)
+        self.owner = new_owner
+        self._free = [b for b in range(self.n_blocks) if new_owner[b] < 0]
+        heapq.heapify(self._free)
+        self.peak_in_use = min(self.peak_in_use, self.n_blocks)
+        self.dirty = True
+        return old_ids, new_ids
+
+    # -- integrity -------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate ids on the free heap"
+        owned = []
+        for s in range(self.n_slots):
+            n = int(self.n_owned[s])
+            row = self.tables[s]
+            assert np.all(row[n:] == self.sentinel), \
+                f"slot {s}: mapped entries beyond n_owned"
+            blocks = [int(b) for b in row[:n]]
+            assert all(0 <= b < self.n_blocks for b in blocks), \
+                f"slot {s}: block id out of range"
+            assert all(self.owner[b] == s for b in blocks), \
+                f"slot {s}: owner mismatch"
+            owned.extend(blocks)
+        assert len(owned) == len(set(owned)), "block owned by two slots"
+        assert not (free & set(owned)), "block both free and owned"
+        assert len(free) + len(owned) == self.n_blocks, "blocks leaked"

@@ -36,6 +36,24 @@ the GEMM, so this is the difference between the error-corrected path being
 a curiosity and a serving mode. Clean-channel numerics are bit-identical
 to the per-call path (parity-tested).
 
+**Paged KV memory** (``cache_layout="paged"``): instead of one dense
+``cap``-length ring per slot, KV lives in a global pool of fixed-size
+blocks addressed through per-slot block tables
+(:mod:`repro.runtime.paging`). Memory scales with the workload's live
+token count (rounded up to blocks) instead of ``slots x cap``; blocks are
+allocated on demand at admission and during decode, returned to the pool
+at retirement, and the device only ever sees jittable arrays (page pools +
+an int32 table whose unmapped entries are an OOB sentinel). The dense
+layout is retained as the parity oracle — the paged engine is
+token-identical under greedy decode.
+
+**Chunked (piggybacked) prefill** (``prefill_chunk=N``, paged only): long
+prompts stream through the decode loop N tokens per tick instead of
+running one monolithic prefill at admission, so a long arrival no longer
+stalls every active decode stream (the TTFT/TPOT spike
+``benchmarks/bench_serving.py`` measures). The final chunk emits the first
+token; TTFT is stamped only when that token's bytes reach the host.
+
 :class:`PerSlotLMServer` is the seed's slot-at-a-time loop, retained only
 as the parity oracle (token-exact vs the batched engine under greedy
 decode) and as the benchmark baseline.
@@ -54,6 +72,7 @@ import numpy as np
 
 from repro.core import gemm
 from repro.models import lm as lm_helpers
+from repro.runtime.paging import blocks_for
 
 
 @dataclasses.dataclass
@@ -119,6 +138,11 @@ class Scheduler:
         self.metrics: Dict[str, Any] = {
             "completed": 0, "tokens": 0, "ticks": 0,
             "admitted": 0, "prefill_batches": 0,
+            # chunked prefill: total chunk steps run, and the gauge of
+            # requests admitted but still streaming their prompt (these are
+            # no longer "waiting" yet hold a slot — queue accounting must
+            # count them or occupancy reads wrong)
+            "prefill_chunks": 0, "prefilling": 0,
         }
 
     def submit(self, req: Request) -> None:
@@ -185,7 +209,11 @@ class LMServer:
                  on_token: Optional[Callable[[Request, int], None]] = None,
                  scheduler: Optional[Scheduler] = None,
                  sample_seed: int = 0,
-                 stationary_weights: Optional[bool] = None):
+                 stationary_weights: Optional[bool] = None,
+                 cache_layout: str = "dense",
+                 block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.model = model
         self.params = params
         self.cap = cap
@@ -193,6 +221,37 @@ class LMServer:
         self.n_slots = batch_slots
         cfg = model.cfg
         self.cache_len = min(cap, cfg.sliding_window or cap)
+        if cache_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_layout {cache_layout!r}")
+        if prefill_chunk is not None and cache_layout != "paged":
+            raise ValueError(
+                "prefill_chunk requires cache_layout='paged' (chunk steps "
+                "scatter through block tables with linear addressing; the "
+                "dense ring keeps whole-prompt bucketed prefill)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.cache_layout = cache_layout
+        self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
+        # pure-SSM models have no KV to page (recurrent state is O(1) per
+        # slot and stays dense under both layouts) — no pool, no tables
+        has_pages = not (model.kind == "mamba" and not cfg.attn_every)
+        if cache_layout == "paged" and has_pages:
+            from repro.runtime.paging import BlockAllocator
+            mb = blocks_for(cap, block_size)
+            # default pool = slots * ceil(cap/bs): no memory saving but never
+            # exhausts; pass a smaller n_blocks (sized to the live-token
+            # budget of the workload) to realize the paged win
+            self.alloc: Optional["BlockAllocator"] = BlockAllocator(
+                n_blocks if n_blocks is not None else batch_slots * mb,
+                block_size, batch_slots, mb)
+        else:
+            self.alloc = None
+        # chunked-prefill in-flight entries: {"req", "slot", "pos"}
+        self.prefilling: List[Dict[str, Any]] = []
+        self._slot_pos = [0] * batch_slots   # host mirror of each slot's idx
+        # lifetime block reservation per occupied slot (see _free_budget)
+        self._slot_budget = [0] * batch_slots
         # SSM/hybrid recurrences carry state through padded steps, so those
         # families bucket by EXACT prompt length (still batched across
         # same-length prompts); attention families right-pad to buckets.
@@ -208,11 +267,13 @@ class LMServer:
         seed = model.policy.noise_seed if model.policy.noise_seed is not None \
             else 0
         # distinct streams: fold(base, 0) -> decode ticks, fold(base, 1) ->
-        # prefill batches; each then folds its own counter per event
+        # prefill batches, fold(base, 2) -> prefill chunks; each then folds
+        # its own counter per event
         self._noise_base = jax.random.PRNGKey(seed)
         self._sample_base = jax.random.PRNGKey(sample_seed)
         self._tick_count = 0
         self._prefill_count = 0
+        self._chunk_count = 0
 
         # program-once weight admission: RNS-family backends execute against
         # pre-encoded stationary residues. Auto-on for model families whose
@@ -237,15 +298,25 @@ class LMServer:
         self.state = self._init_state(batch_slots)
         self._decode_tick = jax.jit(self._make_tick_fn())
         self._prefill_insert = jax.jit(self._make_prefill_fn())
+        if self.prefill_chunk is not None:
+            mid, last = self._make_chunk_fns()
+            self._chunk_mid = jax.jit(mid)
+            self._chunk_last = jax.jit(last)
 
     # ------------------------------------------------------------------
     # device-side step functions
     # ------------------------------------------------------------------
 
     def _init_state(self, n_slots: int) -> Dict[str, Any]:
+        if self.cache_layout == "paged" and self.alloc is not None:
+            cache = self.model.init_cache(
+                n_slots, self.cap, per_slot_idx=True, layout="paged",
+                block_size=self.block_size, n_blocks=self.alloc.n_blocks)
+        else:
+            cache = self.model.init_cache(n_slots, self.cap,
+                                          per_slot_idx=True)
         return {
-            "cache": self.model.init_cache(n_slots, self.cap,
-                                           per_slot_idx=True),
+            "cache": cache,
             "last_tok": jnp.zeros((n_slots,), jnp.int32),
             "active": jnp.zeros((n_slots,), bool),
             "emitted": jnp.zeros((n_slots,), jnp.int32),
@@ -253,15 +324,22 @@ class LMServer:
             "max_tok": jnp.zeros((n_slots,), jnp.int32),
         }
 
+    def _sync_tables(self) -> None:
+        """Mirror the allocator's block tables to the device cache leaf
+        (lazily — only after alloc/free/remap changed them)."""
+        if self.alloc is not None and self.alloc.dirty:
+            self.state["cache"]["bt"] = jnp.asarray(self.alloc.tables)
+            self.alloc.dirty = False
+
     def _make_tick_fn(self):
         model, greedy = self.model, self.greedy
 
         def tick(params, state, noise_key, sample_key):
-            cache = state["cache"]
-            idx0 = cache["idx"]
+            cache0 = state["cache"]
+            idx0 = cache0["idx"]
             with gemm.noise_key_scope(noise_key):
                 logits, cache = model.decode_step(
-                    params, cache, state["last_tok"][:, None])
+                    params, cache0, state["last_tok"][:, None])
             logits = logits[:, -1, :]
             if greedy:
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -273,10 +351,18 @@ class LMServer:
             hit_eos = (state["eos"] >= 0) & (tok == state["eos"])
             done = active & (hit_eos | (emitted >= state["max_tok"]))
             # inactive slots don't advance their position (their k/v writes
-            # land on a frozen slot and are fully overwritten on reuse)
+            # land on a frozen slot / a dropped page and are overwritten on
+            # reuse), and their SSM recurrent state stays frozen — a slot
+            # mid-chunked-prefill carries real state between chunks that the
+            # engine-wide step must not perturb
+            cache = dict(cache, idx=jnp.where(active, cache["idx"], idx0))
+            for leaf in ("ssm", "conv"):
+                if leaf in cache:
+                    m = active.reshape((1, -1) + (1,) * (cache[leaf].ndim - 2))
+                    cache[leaf] = jnp.where(m, cache[leaf], cache0[leaf])
             new_state = dict(
                 state,
-                cache=dict(cache, idx=jnp.where(active, cache["idx"], idx0)),
+                cache=cache,
                 last_tok=jnp.where(active, tok, state["last_tok"]),
                 active=active & ~done,
                 emitted=emitted,
@@ -320,6 +406,46 @@ class LMServer:
 
         return prefill_insert
 
+    def _make_chunk_fns(self):
+        """Jitted chunk steps for piggybacked prefill. ``slot``/``pos0``/
+        ``true_len`` (and eos/max_tok) are traced scalars, so ONE compile
+        serves every chunk of every request (SSM/hybrid additionally compile
+        once per distinct final-chunk length — exact-length chunking, same
+        reason as the exact-length prefill buckets)."""
+        model, greedy = self.model, self.greedy
+
+        def chunk_mid(params, state, tokens, slot, pos0, true_len, noise_key):
+            with gemm.noise_key_scope(noise_key):
+                _, cache = model.prefill_chunk(
+                    params, state["cache"], tokens, slot, pos0, true_len)
+            return dict(state, cache=cache)
+
+        def chunk_last(params, state, tokens, slot, pos0, true_len, eos,
+                       max_tok, noise_key, sample_key):
+            with gemm.noise_key_scope(noise_key):
+                logits, cache = model.prefill_chunk(
+                    params, state["cache"], tokens, slot, pos0, true_len)
+            logits = logits[:, -1, :]
+            if greedy:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                tok = jax.random.categorical(sample_key, logits
+                                             ).astype(jnp.int32)
+            done0 = ((eos >= 0) & (tok[0] == eos)) | (max_tok <= 1)
+            state = dict(
+                state, cache=cache,
+                last_tok=state["last_tok"].at[slot].set(tok[0]),
+                active=state["active"].at[slot].set(~done0),
+                emitted=state["emitted"].at[slot].set(1),
+                eos=state["eos"].at[slot].set(eos),
+                max_tok=state["max_tok"].at[slot].set(max_tok),
+            )
+            payload = jnp.stack(
+                [tok, jnp.reshape(done0, (1,)).astype(jnp.int32)], axis=-1)
+            return state, payload
+
+        return chunk_mid, chunk_last
+
     def _next_keys(self, stream: int, count: int):
         noise = jax.random.fold_in(
             jax.random.fold_in(self._noise_base, stream), count)
@@ -332,27 +458,91 @@ class LMServer:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        if len(req.prompt) > self.buckets[-1]:
+        # chunked prefill streams arbitrarily long prompts through the paged
+        # cache (up to its linear capacity); bucketed prefill is bounded by
+        # the largest bucket
+        limit = self.cap if self.prefill_chunk else self.buckets[-1]
+        if len(req.prompt) > limit:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
-                f"largest bucket {self.buckets[-1]}")
+                + (f"cache capacity {limit}" if self.prefill_chunk else
+                   f"largest bucket {limit}"))
+        if self.alloc is not None:
+            # paged addressing is linear — it cannot ring-wrap like the
+            # dense layout, so a lifetime that outgrows the table capacity
+            # would silently drop its own recent KV. Reject loudly.
+            capacity = self.alloc.max_blocks_per_slot * self.block_size
+            if len(req.prompt) + req.max_tokens > capacity:
+                raise ValueError(
+                    f"request {req.rid}: prompt {len(req.prompt)} + "
+                    f"max_tokens {req.max_tokens} exceeds the paged cache's "
+                    f"linear capacity {capacity}; raise cap or lower "
+                    f"max_tokens")
+            # and a lifetime block budget exceeding the whole pool could
+            # never be admitted — reject instead of livelocking the FCFS
+            # queue behind an unsatisfiable head-of-line wait
+            if self._block_budget(req) > self.alloc.n_blocks:
+                raise ValueError(
+                    f"request {req.rid}: prompt {len(req.prompt)} + "
+                    f"max_tokens {req.max_tokens} needs "
+                    f"{self._block_budget(req)} blocks of {self.block_size} "
+                    f"but the pool holds {self.alloc.n_blocks}; grow "
+                    f"n_blocks")
         self.scheduler.submit(req)
 
     def _bucket(self, length: int) -> int:
         return pick_bucket(length, self.buckets) if self.pad_prefill \
             else length
 
+    def _block_budget(self, req: Request) -> int:
+        """Blocks a request needs over its whole lifetime: prompt plus
+        decode growth up to ``max_tokens`` (``submit`` bounds this by the
+        per-slot table capacity)."""
+        return blocks_for(len(req.prompt) + req.max_tokens, self.block_size)
+
+    def _free_budget(self) -> int:
+        """Pool blocks neither allocated nor RESERVED for the future decode
+        growth of already-admitted requests. Admission gates on this — not
+        on the raw free count — so a tight pool serializes admissions
+        instead of exhausting mid-decode (ensure() would raise out of
+        ``tick()`` and kill every in-flight stream)."""
+        reserved = sum(
+            max(0, self._slot_budget[i] - int(self.alloc.n_owned[i]))
+            for i, r in enumerate(self.slot_req) if r is not None)
+        return self.alloc.free_count - reserved
+
+    def _take_admissible(self, n: int) -> List[Request]:
+        """Pop up to ``n`` waiting requests FCFS. Under the paged layout,
+        stop at the first whose lifetime block budget cannot be reserved
+        (head-of-line admission keeps FCFS order; blocked work waits for
+        retirements to free blocks)."""
+        if self.alloc is None:
+            return self.scheduler.take(n)
+        out, budget = [], self._free_budget()
+        while self.scheduler.waiting and len(out) < n:
+            need = self._block_budget(self.scheduler.waiting[0])
+            if need > budget:
+                break
+            budget -= need
+            out.append(self.scheduler.waiting.popleft())
+        return out
+
     def _admit(self) -> List[Request]:
         """Admit waiting requests into free slots (bucketed batched
-        prefill). Returns requests retired AT admission (prefill token was
-        EOS / one-token budget) — their slots are immediately reusable, so
-        the loop keeps admitting while slots free up and work waits."""
+        prefill, or chunked prefill when ``prefill_chunk`` is set). Returns
+        requests retired AT admission (prefill token was EOS / one-token
+        budget) — their slots are immediately reusable, so the loop keeps
+        admitting while slots free up and work waits."""
+        if self.prefill_chunk is not None:
+            return self._admit_chunked()
         retired: List[Request] = []
         while True:
             free = [i for i, r in enumerate(self.slot_req) if r is None]
             if not free or not self.scheduler.waiting:
                 return retired
-            reqs = self.scheduler.take(len(free))
+            reqs = self._take_admissible(len(free))
+            if not reqs:
+                return retired
             groups: Dict[int, List[Request]] = {}
             for r in reqs:
                 groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
@@ -372,7 +562,12 @@ class LMServer:
                     my_slots.append(int(slots[j]))
                     eos[j] = -1 if r.eos_id is None else r.eos_id
                     max_tok[j] = r.max_tokens
+                    if self.alloc is not None:
+                        # reserved by _take_admissible: cannot fail
+                        self.alloc.ensure(my_slots[j], len(r.prompt))
+                        self._slot_budget[my_slots[j]] = self._block_budget(r)
                 self.scheduler.record_admit(group)
+                self._sync_tables()
                 nk, sk = self._next_keys(1, self._prefill_count)
                 self._prefill_count += 1
                 self.state, payload = self._prefill_insert(
@@ -386,15 +581,103 @@ class LMServer:
                     r.t_first_token = t_host
                     self.scheduler.emit(r, int(payload[j, 0]))
                     if payload[j, 1]:
+                        if self.alloc is not None:
+                            self.alloc.release(my_slots[j])
                         retired.append(self.scheduler.retire(r))
                     else:
                         self.slot_req[my_slots[j]] = r
+                        self._slot_pos[my_slots[j]] = len(r.prompt)
+
+    def _admit_chunked(self) -> List[Request]:
+        """Chunked (piggybacked) prefill: waiting prompts claim a slot and
+        their prompt's blocks up front, then stream through the decode loop
+        ONE fixed-size chunk per tick — a long arrival adds one bounded
+        chunk step to each tick instead of a whole-prompt prefill stall.
+        The final chunk runs device-side token selection; TTFT is stamped
+        only when that token materializes on host. Requests retired at the
+        final chunk (EOS / one-token budget) free their slot immediately."""
+        retired: List[Request] = []
+        # claim slots + prompt blocks for as many waiting prompts as fit
+        while self.scheduler.waiting:
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            if not free:
+                break
+            head = self.scheduler.waiting[0]
+            if self.alloc is not None and \
+                    self._block_budget(head) > self._free_budget():
+                break
+            req = self.scheduler.waiting.popleft()
+            slot = free[0]
+            if self.alloc is not None:
+                # reserve the lifetime budget but allocate lazily, one
+                # chunk's worth at a time — queued prompts must not pin
+                # pool blocks they won't write for many ticks
+                self._slot_budget[slot] = self._block_budget(req)
+            self.slot_req[slot] = req
+            self.scheduler.record_admit([req])
+            self.prefilling.append({"req": req, "slot": slot, "pos": 0})
+        if not self.prefilling:
+            return retired
+        # one chunk per tick, FCFS entry first (bounded per-tick latency)
+        e = self.prefilling[0]
+        req, slot, pos = e["req"], e["slot"], e["pos"]
+        C = self.prefill_chunk
+        take = min(C, len(req.prompt) - pos)
+        last = pos + take >= len(req.prompt)
+        toks = np.asarray(req.prompt[pos:pos + take], np.int32)[None, :]
+        if self.pad_prefill and take < C:
+            # attention families right-pad (masked); SSM/hybrid recurrences
+            # need exact-length chunks, costing one compile per distinct
+            # final-chunk length
+            toks = np.pad(toks, ((0, 0), (0, C - take)))
+        if self.alloc is not None:
+            self.alloc.ensure(slot, pos + take)   # reserved: cannot fail
+        self._sync_tables()
+        nk, sk = self._next_keys(2, self._chunk_count)
+        self._chunk_count += 1
+        args = (self._exec_params, self.state, jnp.asarray(toks),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(pos, jnp.int32),
+                jnp.asarray(take, jnp.int32))
+        if not last:
+            self.state = self._chunk_mid(*args, nk)
+            e["pos"] = pos + take
+        else:
+            eos = -1 if req.eos_id is None else req.eos_id
+            self.state, payload = self._chunk_last(
+                *args, jnp.asarray(eos, jnp.int32),
+                jnp.asarray(req.max_tokens, jnp.int32), nk, sk)
+            payload = np.asarray(jax.device_get(payload))
+            req.t_first_token = time.perf_counter()
+            self.prefilling.pop(0)
+            self._slot_pos[slot] = len(req.prompt)
+            self.scheduler.emit(req, int(payload[0, 0]))
+            if payload[0, 1]:
+                self.slot_req[slot] = None
+                if self.alloc is not None:
+                    self.alloc.release(slot)
+                retired.append(self.scheduler.retire(req))
+        self.scheduler.metrics["prefill_chunks"] += 1
+        self.scheduler.metrics["prefilling"] = len(self.prefilling)
+        return retired
 
     def tick(self) -> List[Request]:
-        """Admit waiting requests, then decode one token for EVERY active
-        slot in a single jitted call."""
+        """Admit waiting requests (piggybacking one prefill chunk when
+        chunked prefill is on), then decode one token for EVERY active slot
+        in a single jitted call."""
         done: List[Request] = list(self._admit())
-        if any(r is not None for r in self.slot_req):
+        mid_prefill = {e["slot"] for e in self.prefilling}
+        decode_slots = [i for i, r in enumerate(self.slot_req)
+                        if r is not None and i not in mid_prefill]
+        if decode_slots:
+            if self.alloc is not None:
+                cap_pos = self.alloc.max_blocks_per_slot * self.block_size
+                for i in decode_slots:
+                    # this tick writes each slot's token at position
+                    # _slot_pos[i]; grow its table on block boundaries
+                    # (reserved at admission — cannot exhaust; writes past
+                    # the linear capacity drop on device, hence the clamp)
+                    self.alloc.ensure(i, min(self._slot_pos[i] + 1, cap_pos))
+                self._sync_tables()
             nk, sk = self._next_keys(0, self._tick_count)
             self._tick_count += 1
             self.state, payload = self._decode_tick(
@@ -404,11 +687,16 @@ class LMServer:
                 req = self.slot_req[i]
                 if req is None or tok < 0:
                     continue
+                self._slot_pos[i] += 1
                 self.scheduler.emit(req, int(tok))
                 if is_done:
                     self.slot_req[i] = None
+                    if self.alloc is not None:
+                        self.alloc.release(i)
                     done.append(self.scheduler.retire(req))
         self.scheduler.metrics["ticks"] += 1
+        if self.prefill_chunk is not None:
+            self.scheduler.metrics["prefilling"] = len(self.prefilling)
         return done
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
@@ -422,17 +710,42 @@ class LMServer:
 
     def resize_slots(self, new_slots: int) -> None:
         """Elastic slot-count change mid-flight (scale with offered load).
-        Active slots are compacted to the front of the new stacked cache."""
+        Active slots are compacted to the front of the new stacked cache;
+        under the paged layout the page POOL is untouched (block ids are
+        stable) — only the table rows and allocator bookkeeping move."""
         from repro.runtime.elastic import resize_serving_state
+        if self.prefilling:
+            raise RuntimeError(
+                "cannot resize slots while chunked prefill is in flight")
         keep = [i for i, r in enumerate(self.slot_req) if r is not None]
         if len(keep) > new_slots:
             raise ValueError(
                 f"cannot shrink to {new_slots} slots with {len(keep)} active")
         self.state = resize_serving_state(self.model, self.state, self.cap,
                                           new_slots, keep)
+        if self.alloc is not None:
+            self.alloc.remap_slots(keep, new_slots)
+            self._sync_tables()
         self.slot_req = [self.slot_req[i] for i in keep] + \
             [None] * (new_slots - len(keep))
+        self._slot_pos = [self._slot_pos[i] for i in keep] + \
+            [0] * (new_slots - len(keep))
+        self._slot_budget = [self._slot_budget[i] for i in keep] + \
+            [0] * (new_slots - len(keep))
         self.n_slots = new_slots
+
+    def resize_block_pool(self, new_n_blocks: int) -> None:
+        """Elastic block-pool resize (grow under admission pressure, shrink
+        after a long-context burst retires). Live blocks are compacted to
+        the front of the new pool, page arrays move with them, and every
+        block table is rewritten — live requests keep decoding their exact
+        continuations."""
+        if self.alloc is None:
+            raise RuntimeError(
+                "block pool resize requires cache_layout='paged'")
+        from repro.runtime.elastic import resize_block_pool
+        self.state = resize_block_pool(self.state, self.alloc, new_n_blocks)
+        self._sync_tables()
 
     @property
     def metrics(self) -> Dict[str, Any]:

@@ -1,0 +1,155 @@
+"""Block allocator behind the paged KV cache: allocation/free/table
+invariants (unit + hypothesis property tests over random admit/retire
+sequences), slot remapping and elastic pool resize."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.paging import BlockAllocator, blocks_for
+from tests._hypothesis_compat import given, settings, st
+
+
+def test_blocks_for():
+    assert blocks_for(0, 16) == 0
+    assert blocks_for(1, 16) == 1
+    assert blocks_for(16, 16) == 1
+    assert blocks_for(17, 16) == 2
+
+
+def test_alloc_assigns_distinct_blocks():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=3)
+    a.ensure(0, 9)          # 3 blocks
+    a.ensure(1, 5)          # 2 blocks
+    a.check_invariants()
+    assert a.n_owned[0] == 3 and a.n_owned[1] == 2
+    assert not set(a.slot_blocks(0)) & set(a.slot_blocks(1))
+    assert a.free_count == 3
+    # growing to an already-covered position is a no-op
+    a.ensure(0, 12)
+    assert a.n_owned[0] == 3
+
+
+def test_unmapped_entries_hold_sentinel():
+    a = BlockAllocator(n_blocks=6, block_size=4, n_slots=2,
+                       max_blocks_per_slot=4)
+    a.ensure(0, 6)
+    assert list(a.tables[0, 2:]) == [a.sentinel] * 2
+    assert list(a.tables[1]) == [a.sentinel] * 4
+
+
+def test_release_returns_blocks_and_reuse_prefers_low_ids():
+    a = BlockAllocator(n_blocks=4, block_size=4, n_slots=2)
+    a.ensure(0, 8)
+    first = a.slot_blocks(0)
+    a.release(0)
+    a.check_invariants()
+    assert a.free_count == 4 and a.used_count == 0
+    # defrag-on-retirement: the freed (low) ids come back first
+    a.ensure(1, 8)
+    assert a.slot_blocks(1) == sorted(first)
+
+
+def test_pool_exhaustion_and_table_overflow_raise():
+    a = BlockAllocator(n_blocks=2, block_size=4, n_slots=2,
+                       max_blocks_per_slot=2)
+    a.ensure(0, 8)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.ensure(1, 4)
+    with pytest.raises(ValueError, match="tables hold"):
+        a.ensure(0, 12)
+    assert not a.can_fit(1)
+    a.release(0)
+    assert a.can_fit(8)
+
+
+def test_peak_tracks_high_watermark():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=2)
+    a.ensure(0, 16)
+    a.ensure(1, 8)
+    a.release(0)
+    assert a.used_count == 2 and a.peak_in_use == 6
+
+
+def test_remap_slots_compacts_kept_rows():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=3)
+    a.ensure(0, 4)
+    a.ensure(1, 8)
+    a.ensure(2, 4)
+    keep_blocks = a.slot_blocks(2)
+    a.remap_slots([2], 2)
+    a.check_invariants()
+    assert a.n_slots == 2
+    assert a.slot_blocks(0) == keep_blocks      # old slot 2 -> row 0
+    assert a.n_owned[1] == 0
+    assert a.free_count == 7
+
+
+def test_resize_pool_compacts_and_remaps_tables():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=2)
+    a.ensure(0, 8)
+    a.ensure(1, 8)
+    a.release(0)                                # leaves holes
+    held = {int(b) for b in a.slot_blocks(1)}
+    old_ids, new_ids = a.resize_pool(3)
+    a.check_invariants()
+    assert a.n_blocks == 3 and a.sentinel == 3
+    assert set(old_ids) == held
+    assert list(new_ids) == list(range(len(held)))
+    # the slot's data moved with the renumbering
+    assert sorted(a.slot_blocks(1)) == list(new_ids)
+    with pytest.raises(ValueError):
+        a.resize_pool(1)
+    # growing back works too
+    a.resize_pool(10)
+    a.check_invariants()
+    assert a.free_count == 10 - a.used_count
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 32)),
+                min_size=1, max_size=60))
+def test_random_admit_retire_preserves_invariants(ops):
+    """Property: over any admit/grow/retire sequence, no block is ever
+    double-owned, frees return to the pool, and tables stay consistent."""
+    a = BlockAllocator(n_blocks=12, block_size=4, n_slots=4,
+                       max_blocks_per_slot=8)
+    lens = [0] * 4
+    for slot, n in ops:
+        if n == 0:
+            freed = a.release(slot)
+            assert freed == blocks_for(lens[slot], 4)
+            lens[slot] = 0
+        else:
+            n = max(lens[slot], n)      # ensure() only grows
+            need = blocks_for(n, 4) - blocks_for(lens[slot], 4)
+            if need > a.free_count:
+                with pytest.raises(RuntimeError):
+                    a.ensure(slot, n)
+            else:
+                a.ensure(slot, n)
+                lens[slot] = n
+        a.check_invariants()
+        assert a.used_count == sum(blocks_for(length, 4) for length in lens)
+    for s in range(4):
+        a.release(s)
+    a.check_invariants()
+    assert a.free_count == 12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=12),
+       st.integers(0, 3))
+def test_alloc_after_retire_reuses_blocks(lengths, retire_every):
+    """Property: serving a stream of admissions through ONE slot never
+    grows the footprint past that slot's own block need — retired blocks
+    are reused, not leaked."""
+    a = BlockAllocator(n_blocks=6, block_size=4, n_slots=1,
+                       max_blocks_per_slot=6)
+    for i, n in enumerate(lengths):
+        a.ensure(0, n)
+        a.check_invariants()
+        assert a.used_count <= blocks_for(max(lengths), 4)
+        if retire_every and i % (retire_every + 1) == retire_every:
+            a.release(0)
+    a.release(0)
+    assert a.free_count == 6
