@@ -288,6 +288,132 @@ def paged_sweep(print_fn=print, arch: str = "qwen2-0.5b",
     return results
 
 
+def prefix_sweep(print_fn=print, arch: str = "qwen2-0.5b",
+                 policy: str = "mirage", slots: int = 8,
+                 block_size: int = 16, prompt_len: int = 512,
+                 overlaps=(0.0, 0.5, 0.9), max_tokens: int = 2,
+                 enforce: bool = True):
+    """Prefix caching: prefill walltime + peak cache blocks vs the fraction
+    of the prompt shared across requests (a common-system-prompt workload).
+    ``max_tokens`` stays tiny so the drain walltime IS prefill walltime.
+    The acceptance gate requires >= 2x walltime reduction at 90% overlap
+    (matched full blocks skip prefill entirely; only suffixes run).
+
+    ``prompt_len`` must be large enough that prefill compute dominates
+    dispatch: cache-off admits the whole wave as ONE batched prefill while
+    prefix admission runs one suffix chunk per matched request, so at
+    short prompts the per-call overhead of the serial path swamps the
+    FLOP savings and the measured speedup collapses below 1."""
+    from repro.runtime.server import LMServer, Request
+
+    cfg, model, params, cap = _build(arch, policy, prompt_len, max_tokens)
+    probe = LMServer(model, params, cap=cap, batch_slots=slots,
+                     cache_layout="paged", block_size=block_size,
+                     prefix_cache=True)
+    if not probe.prefix_cache:
+        # SSM/hybrid: recurrent state at the match point cannot be skipped
+        print_fn(f"serving_prefix,skipped,0,{arch} cannot share prefixes "
+                 f"(recurrent state at the match point)")
+        return {"prefill_speedup_at_0.9": float("nan")}
+
+    def shared_requests(overlap, rid0=0):
+        rng = np.random.default_rng(rid0 + 1)
+        shared = rng.integers(0, cfg.vocab_size,
+                              int(prompt_len * overlap)).astype(np.int32)
+        out = []
+        for i in range(slots):
+            tail = rng.integers(0, cfg.vocab_size,
+                                prompt_len - len(shared)).astype(np.int32)
+            out.append(Request(rid=rid0 + i,
+                               prompt=np.concatenate([shared, tail]),
+                               max_tokens=max_tokens))
+        return out
+
+    print_fn(f"# prefix caching: {arch} slots={slots} prompt={prompt_len} "
+             f"block={block_size}")
+    results = {}
+    for overlap in overlaps:
+        row = {}
+        for label, kw in (("off", {}), ("on", {"prefix_cache": True})):
+            server = LMServer(model, params, cap=cap, batch_slots=slots,
+                              cache_layout="paged", block_size=block_size,
+                              **kw)
+            _drain(server, shared_requests(overlap, rid0=1000))  # warm jits
+            _, dt, fin = _drain(server, shared_requests(overlap))
+            assert len(fin) == slots
+            row[label] = dt
+            row[f"peak_{label}"] = server.alloc.peak_in_use
+            print_fn(f"serving_prefix,overlap{overlap:g}_{label}_wall_ms,"
+                     f"{dt * 1e3:.2f},prefill_dominated")
+        print_fn(f"serving_prefix,overlap{overlap:g}_peak_blocks,"
+                 f"{row['peak_on']},vs_{row['peak_off']}_unshared")
+        speedup = row["off"] / max(row["on"], 1e-9)
+        results[f"prefill_speedup_at_{overlap:g}"] = speedup
+        results[f"peak_blocks_at_{overlap:g}"] = row["peak_on"]
+        results[f"peak_blocks_unshared_at_{overlap:g}"] = row["peak_off"]
+        print_fn(f"serving_prefix,overlap{overlap:g}_prefill_speedup,"
+                 f"{speedup:.2f},off_over_on")
+    gate = results.get("prefill_speedup_at_0.9")
+    if enforce and gate is not None and gate < 2.0:
+        raise RuntimeError(
+            f"prefix caching prefill reduction regressed below the 2x "
+            f"acceptance gate at 90% overlap: {gate:.2f}x")
+    return results
+
+
+def spec_sweep(print_fn=print, arch: str = "qwen2-0.5b",
+               policy: str = "mirage", slots: int = 4,
+               block_size: int = 16, prompt_len: int = 12,
+               max_tokens: int = 16, ks=(0, 2, 4),
+               n_requests: int = 8, enforce: bool = True):
+    """Speculative decoding: accepted-tokens/tick and walltime vs draft
+    length ``k`` (k=0 is the plain decode baseline). The acceptance gate
+    requires mean accepted-tokens per slot-tick > 1 at k=4 — the verify
+    step must amortize its per-tick cost over more than one token."""
+    from repro.runtime.server import LMServer, Request
+
+    cfg, model, params, cap = _build(arch, policy, prompt_len, max_tokens)
+
+    def reqs(rid0=0):
+        rng = np.random.default_rng(7)
+        return [Request(rid=rid0 + i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            prompt_len).astype(np.int32),
+                        max_tokens=max_tokens)
+                for i in range(n_requests)]
+
+    print_fn(f"# speculative decoding: {arch} slots={slots} "
+             f"max_tokens={max_tokens}")
+    results = {}
+    baseline_toks = None
+    for k in ks:
+        server = LMServer(model, params, cap=cap, batch_slots=slots,
+                          cache_layout="paged", block_size=block_size,
+                          spec_k=k)
+        _drain(server, reqs(rid0=1000))                       # warm jits
+        toks, dt, fin = _drain(server, reqs())
+        out = {r.rid: r.tokens_out for r in fin}
+        if baseline_toks is None:
+            baseline_toks = out
+        # exactness is part of the measurement: same tokens at every k
+        assert out == baseline_toks, f"spec k={k} diverged from greedy"
+        m = server.metrics
+        acc = m["spec_accepted"] / max(m["spec_slot_ticks"], 1) \
+            if k else 1.0
+        results[f"accepted_per_tick_k{k}"] = acc
+        results[f"tok_per_s_k{k}"] = toks / dt
+        print_fn(f"serving_spec,k{k}_accepted_per_tick,{acc:.3f},"
+                 f"ticks={m['ticks']}")
+        print_fn(f"serving_spec,k{k}_tok_per_s,{toks / dt:.2f},"
+                 f"token_identical_to_greedy")
+    gate = results.get("accepted_per_tick_k4")
+    if enforce and gate is not None and gate <= 1.0:
+        raise RuntimeError(
+            f"speculative decoding accepted-tokens/tick regressed to the "
+            f"k=4 acceptance gate: {gate:.3f} (must be > 1)")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -301,9 +427,20 @@ def main(argv=None):
                     help="CI smoke: tiny sweep")
     ap.add_argument("--skip-paged", action="store_true",
                     help="skip the paged-memory / chunked-prefill section")
+    ap.add_argument("--skip-prefix", action="store_true",
+                    help="skip the prefix-caching sweep")
+    ap.add_argument("--skip-spec", action="store_true",
+                    help="skip the speculative-decoding sweep")
+    ap.add_argument("--spec-ks", type=int, nargs="+", default=[0, 2, 4])
+    ap.add_argument("--overlaps", type=float, nargs="+",
+                    default=[0.0, 0.5, 0.9])
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--long-len", type=int, default=192,
                     help="long-context prompt for the paged/chunked section")
+    ap.add_argument("--prefix-len", type=int, default=512,
+                    help="prompt length for the prefix-caching section "
+                         "(long enough that prefill compute dominates "
+                         "dispatch; see prefix_sweep)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args(argv)
@@ -313,6 +450,7 @@ def main(argv=None):
         args.requests_per_slot = 2
         args.max_tokens = 8
         args.long_len = 96
+        args.prefix_len = 192
 
     from benchmarks.emit import BenchWriter
 
@@ -337,6 +475,32 @@ def main(argv=None):
         print(f"# paged KV saves {paged['cache_saving_ratio']:.1f}x cache "
               f"bytes; chunked prefill flattens the admission spike "
               f"{paged['spike_flatten_ratio']:.1f}x")
+    if not args.skip_prefix:
+        # --quick runs are informational (too small for the walltime gate
+        # to be meaningful); the full run enforces both acceptance gates
+        pref = prefix_sweep(writer, arch=args.arch, policy=args.policy,
+                            slots=max(args.slots),
+                            block_size=args.block_size,
+                            prompt_len=args.prefix_len,
+                            overlaps=tuple(args.overlaps),
+                            enforce=not args.quick)
+        sp = pref.get("prefill_speedup_at_0.9")
+        if sp == sp:                               # not NaN
+            print(f"# prefix caching cuts prefill walltime "
+                  f"{sp:.1f}x at 90% overlap")
+    if not args.skip_spec:
+        spec = spec_sweep(writer, arch=args.arch, policy=args.policy,
+                          slots=max(args.slots),
+                          block_size=args.block_size,
+                          prompt_len=args.prompt_len,
+                          max_tokens=args.max_tokens,
+                          ks=tuple(args.spec_ks),
+                          enforce=not args.quick)
+        k_top = max(k for k in args.spec_ks)
+        acc = spec.get(f"accepted_per_tick_k{k_top}")
+        if acc:
+            print(f"# speculative decoding accepts {acc:.2f} tokens/tick "
+                  f"at k={k_top} (token-identical to greedy)")
     if args.json:
         writer.write_json(args.json, argv=list(argv or sys.argv[1:]),
                           elapsed_s=round(time.time() - t0, 2))

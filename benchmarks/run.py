@@ -100,6 +100,13 @@ def main(argv=None):
             # artifact the paged-KV acceptance gate reads)
             bench_serving.paged_sweep(slots=4, long_len=96, max_tokens=8,
                                       chunk=8)
+            # prefix caching + speculative decoding (CI artifact gates:
+            # >= 2x prefill walltime at 90% overlap; accepted/tick > 1
+            # at k=4). The prompt must be long enough that prefill
+            # compute dominates dispatch — see prefix_sweep's docstring.
+            bench_serving.prefix_sweep(slots=8, prompt_len=512,
+                                       overlaps=(0.0, 0.9))
+            bench_serving.spec_sweep(slots=4, ks=(0, 2, 4))
         if want("roofline"):
             roofline_section()
     elapsed = time.time() - t0

@@ -32,9 +32,21 @@ def main():
                     help="paged = block-table KV pool for long-context memory")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="piggybacked prefill chunk size (paged only)")
+    ap.add_argument("--block-size", type=int, default=4,
+                    help="positions per KV block (paged only; small enough "
+                         "that the demo's 8-token shared prefix spans "
+                         "full blocks)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share matched prompt-prefix blocks copy-on-write "
+                         "(paged only; the demo prompts share 8 tokens)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-draft + verify this many tokens per tick "
+                         "(paged only, token-identical to greedy)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are emitted")
     args = ap.parse_args()
+    if (args.prefix_cache or args.spec_k) and args.cache_layout != "paged":
+        ap.error("--prefix-cache / --spec-k require --cache-layout paged")
 
     cfg = get_config(args.arch).reduced()
     policy = get_policy(args.policy)
@@ -46,15 +58,21 @@ def main():
                       cap=args.prompt_len + args.max_tokens + 4,
                       batch_slots=args.slots, on_token=on_token,
                       cache_layout=args.cache_layout,
-                      prefill_chunk=args.prefill_chunk)
+                      block_size=args.block_size,
+                      prefill_chunk=args.prefill_chunk,
+                      prefix_cache=args.prefix_cache,
+                      spec_k=args.spec_k)
 
     rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size,
+                          min(8, args.prompt_len)).astype(np.int32)
     t0 = time.perf_counter()
     for rid in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            args.prompt_len - len(shared)).astype(np.int32)
         server.submit(Request(
             rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                args.prompt_len).astype(np.int32),
+            prompt=np.concatenate([shared, tail]),
             max_tokens=args.max_tokens))
     finished = server.run_until_drained()
     dt = time.perf_counter() - t0
@@ -64,6 +82,13 @@ def main():
           f"{toks/dt:.1f} tok/s, {server.metrics['ticks']} decode ticks, "
           f"TTFT {lat['ttft_mean_s']*1e3:.1f}ms, "
           f"TPOT {lat['tpot_mean_s']*1e3:.1f}ms")
+    if args.prefix_cache:
+        print(f"  prefix hits: {server.metrics['prefix_hits']} "
+              f"({server.metrics['prefix_shared_blocks']} blocks shared)")
+    if args.spec_k:
+        m = server.metrics
+        print(f"  spec accepted/tick: "
+              f"{m['spec_accepted'] / max(m['spec_slot_ticks'], 1):.2f}")
 
 
 if __name__ == "__main__":

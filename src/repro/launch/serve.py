@@ -11,7 +11,12 @@ through the decode loop N tokens per tick (piggybacked prefill, paged
 only) so long arrivals don't stall active streams;
 ``--policy mirage_rns_noisy --snr-db 30 --noise-seed 7`` serves under the
 analog channel with fresh noise per tick; ``--sample`` switches greedy
-argmax to device-side categorical sampling.
+argmax to device-side categorical sampling; ``--prefix-cache`` shares
+matched whole-prompt-prefix blocks copy-on-write across slots (paged
+only; ``--shared-prefix N`` makes the synthetic prompts actually share
+their first N tokens so hits occur); ``--spec-k K`` self-drafts K tokens
+per tick and verifies them in one jitted step (paged + greedy only,
+token-identical to plain greedy decode).
 """
 
 from __future__ import annotations
@@ -51,6 +56,15 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="stream prompts through decode ticks in chunks of "
                          "this many tokens (requires --cache-layout paged)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share matched prompt-prefix blocks copy-on-write "
+                         "across slots (requires --cache-layout paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="first N prompt tokens identical across the "
+                         "synthetic requests (makes --prefix-cache hit)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: self-draft this many tokens "
+                         "per tick, verify in one step (paged + greedy)")
     ap.add_argument("--snr-db", type=float, default=None,
                     help="serve through the analog channel at this SNR "
                          "(use with --policy mirage_rns_noisy/mirage_rrns)")
@@ -63,9 +77,14 @@ def main(argv=None):
         ap.error("--sample needs the batched engine (the per-slot oracle "
                  "is greedy-only)")
     if args.engine == "oracle" and (args.cache_layout != "dense" or
-                                    args.prefill_chunk):
-        ap.error("--cache-layout paged / --prefill-chunk need the batched "
-                 "engine")
+                                    args.prefill_chunk or args.prefix_cache
+                                    or args.spec_k):
+        ap.error("--cache-layout paged / --prefill-chunk / --prefix-cache / "
+                 "--spec-k need the batched engine")
+    if (args.prefix_cache or args.spec_k) and args.cache_layout != "paged":
+        ap.error("--prefix-cache / --spec-k require --cache-layout paged")
+    if args.spec_k and args.sample:
+        ap.error("--spec-k verifies against greedy argmax; drop --sample")
 
     cfg = get_config(args.arch).reduced()
     overrides = {}
@@ -82,17 +101,23 @@ def main(argv=None):
                           cache_layout=args.cache_layout,
                           block_size=args.block_size,
                           n_blocks=args.n_blocks,
-                          prefill_chunk=args.prefill_chunk)
+                          prefill_chunk=args.prefill_chunk,
+                          prefix_cache=args.prefix_cache,
+                          spec_k=args.spec_k)
     else:
         server = PerSlotLMServer(model, params, cap=cap,
                                  batch_slots=args.slots)
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size,
+                          min(args.shared_prefix,
+                              args.prompt_len)).astype(np.int32)
     t0 = time.perf_counter()
     for rid in range(args.requests):
+        tail = rng.integers(0, cfg.vocab_size,
+                            args.prompt_len - len(shared)).astype(np.int32)
         server.submit(Request(
             rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                args.prompt_len).astype(np.int32),
+            prompt=np.concatenate([shared, tail]),
             max_tokens=args.max_tokens))
     finished = server.run_until_drained()
     dt = time.perf_counter() - t0
@@ -107,6 +132,16 @@ def main(argv=None):
         print(f"  paged KV: block_size={a.block_size}, pool={a.n_blocks} "
               f"blocks, peak in use {a.peak_in_use} "
               f"({a.peak_in_use / a.n_blocks:.0%})")
+    m = server.metrics
+    if args.prefix_cache:
+        print(f"  prefix cache: {m['prefix_hits']} hits "
+              f"({m['prefix_full_hits']} full), "
+              f"{m['prefix_shared_blocks']} blocks shared")
+    if args.spec_k:
+        per = m["spec_accepted"] / max(m["spec_slot_ticks"], 1)
+        print(f"  speculative k={args.spec_k}: {m['spec_accepted']} tokens "
+              f"accepted over {m['spec_slot_ticks']} slot-ticks "
+              f"({per:.2f}/tick)")
     for r in finished[:3]:
         print(f"  req {r.rid}: {r.tokens_out[:8]}...")
     return 0

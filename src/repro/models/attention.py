@@ -315,6 +315,74 @@ def attn_decode_step(
     return common.dense(p["o"], out, policy), cache_k, cache_v
 
 
+def attn_verify_step(
+    p, x, cache_k, cache_v, idx, policy: MiragePolicy, *,
+    n_heads: int, n_kv_heads: int, head_dim: int, rope_theta: float,
+    window: Optional[int] = None, qk_norm: bool = False, kv_repeat: int = 1,
+    block_tables: jax.Array = None,
+):
+    """Multi-token verify step for speculative decoding (paged cache only).
+
+    x: ``(B, T, d)`` — per slot, the current token plus ``T-1`` draft
+    tokens, occupying absolute positions ``idx[b] + j`` (``idx`` is the
+    engine's per-slot position vector). All ``T`` keys/values are
+    scatter-written through the block tables FIRST (the server reserves
+    the blocks up front; OOB sentinel entries drop), then row ``j``
+    attends over the gathered pages masked at ``kpos <= idx + j`` — the
+    same write-then-gather contract as :func:`attn_chunk_step`, which is
+    what makes rejected draft tails safe: their garbage KV sits at
+    positions ``> idx + accepted`` and the NEXT verify tick re-writes
+    exactly those positions before any gather reads them.
+    """
+    assert block_tables is not None, "verify step requires the paged layout"
+    B, T = x.shape[0], x.shape[1]
+    q = common.dense(p["q"], x, policy).reshape(B, T, n_heads, head_dim)
+    knew = common.dense(p["k"], x, policy).reshape(B, T, n_kv_heads, head_dim)
+    vnew = common.dense(p["v"], x, policy).reshape(B, T, n_kv_heads, head_dim)
+    if qk_norm:
+        q = common.head_rmsnorm(p["q_norm"], q)
+        knew = common.head_rmsnorm(p["k_norm"], knew)
+    pos = idx[:, None] + jnp.arange(T)[None, :]          # (B, T)
+    q = common.apply_rope(q, pos, rope_theta)
+    knew = common.apply_rope(knew, pos, rope_theta)
+    knew = _repeat_kv(knew, kv_repeat)
+    vnew = _repeat_kv(vnew, kv_repeat)
+
+    NB, bs = cache_k.shape[0], cache_k.shape[1]
+    mb = block_tables.shape[1]
+    LP = mb * bs
+    blk = jnp.minimum(pos // bs, mb - 1)
+    wb = jnp.where(pos < LP,
+                   jnp.take_along_axis(block_tables, blk, axis=1), NB)
+    wo = jnp.mod(pos, bs)
+    # positions within a slot are distinct, and slots never share a
+    # writable block (the server's copy-on-write guard forks shared blocks
+    # before any write), so the scatter indices are collision-free
+    cache_k = cache_k.at[wb, wo].set(knew, mode="drop")
+    cache_v = cache_v.at[wb, wo].set(vnew, mode="drop")
+    keys = cache_k[jnp.minimum(block_tables, NB - 1)].reshape(
+        B, LP, cache_k.shape[2], head_dim)
+    vals = cache_v[jnp.minimum(block_tables, NB - 1)].reshape(
+        B, LP, cache_v.shape[2], head_dim)
+    kpos = jnp.arange(LP)
+    valid = kpos[None, None, :] <= pos[:, :, None]       # (B, T, LP)
+    if window:
+        valid = valid & (kpos[None, None, :] > pos[:, :, None] - window)
+
+    Kv_eff = keys.shape[2]
+    rep = n_heads // Kv_eff
+    sm = 1.0 / math.sqrt(head_dim)
+    q5 = q.reshape(B, T, Kv_eff, rep, head_dim)
+    s = jnp.einsum("btkrd,bskd->btkrs", q5, keys,
+                   preferred_element_type=jnp.float32) * sm
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("btkrs,bskd->btkrd", w, vals,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, T, n_heads * head_dim)
+    return common.dense(p["o"], out, policy), cache_k, cache_v
+
+
 def attn_chunk_step(
     p, x, k_pages, v_pages, table_row, pos0, true_len,
     policy: MiragePolicy, *,

@@ -669,6 +669,121 @@ class LM:
         logits = self._head(params, h)
         return logits, cache
 
+    def verify_step(self, params, cache, tokens):
+        """Speculative-decoding verify: score ``T`` tokens per slot in ONE
+        step over a stacked PAGED cache.
+
+        tokens: ``(S, T)`` — per slot, ``[current token ; T-1 draft
+        tokens]`` occupying positions ``idx[s] .. idx[s]+T-1``. Returns
+        ``(logits (S, T, V), new cache, steps)``. ``cache["idx"]`` is NOT
+        advanced — the caller accepts a per-slot count ``a`` and commits
+        ``idx += a`` itself (rejected tails need no KV rollback: the next
+        verify tick's writes land on exactly those positions before any
+        gather reads them — see :func:`attention.attn_verify_step`).
+
+        ``steps`` is ``None`` for pure-attention families. For SSM/hybrid
+        families it is ``{"ssm": (nl, T, S, H, P, N), "conv": (nl, T, S,
+        K-1, C)}`` — the recurrent state AFTER each of the ``T`` tokens, so
+        the caller can roll back to the state at the accepted position
+        (``steps[...][:, a-1]``); the returned cache's ``ssm``/``conv``
+        leaves hold the full-T state and must be overwritten from
+        ``steps``. Token-exact vs. one-token decode under greedy: the
+        per-token recurrence is the same ``mamba_decode_step`` scan.
+        """
+        cfg = self.cfg
+        h = common.embed(params["embed"], tokens)      # (S, T, d)
+        emb0 = h
+        idx = cache["idx"]
+        bt = cache.get("bt")
+
+        if self.kind == "mamba":
+            def body(carry, xs):
+                hh, shk, shv = carry
+                lp, ssm_st, conv_st, li = xs
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+
+                def tok_step(st, x_t):
+                    ssm, conv = st
+                    o, ssm, conv = mamba2.mamba_decode_step(
+                        lp["mamba"], x_t[:, None], cfg, self.policy, ssm,
+                        conv)
+                    return (ssm, conv), (o[:, 0], ssm, conv)
+
+                (_, _), (o_seq, ssm_steps, conv_steps) = jax.lax.scan(
+                    tok_step, (ssm_st, conv_st), jnp.moveaxis(n1, 1, 0))
+                hh = hh + jnp.moveaxis(o_seq, 0, 1)
+                if cfg.attn_every:
+                    app = (li + 1) // cfg.attn_every - 1
+
+                    def do_shared(args):
+                        v, shk_, shv_ = args
+                        hd = cfg.resolved_head_dim
+                        u = common.dense(
+                            params["shared"]["proj"],
+                            jnp.concatenate([v, emb0], axis=-1), self.policy)
+                        n = common.norm(params["shared"]["ln1"], u,
+                                        cfg.norm_eps, cfg.norm_type)
+                        ck = shk_[jnp.maximum(app, 0)]
+                        cv = shv_[jnp.maximum(app, 0)]
+                        a, ck, cv = attention.attn_verify_step(
+                            params["shared"]["attn"], n, ck, cv, idx,
+                            self.policy, n_heads=cfg.n_heads,
+                            n_kv_heads=cfg.n_kv_heads,
+                            head_dim=hd, rope_theta=cfg.rope_theta,
+                            kv_repeat=self.opt.kv_repeat, block_tables=bt)
+                        shk_ = jax.lax.dynamic_update_index_in_dim(
+                            shk_, ck, jnp.maximum(app, 0), 0)
+                        shv_ = jax.lax.dynamic_update_index_in_dim(
+                            shv_, cv, jnp.maximum(app, 0), 0)
+                        u = u + a
+                        n2 = common.norm(params["shared"]["ln2"], u,
+                                         cfg.norm_eps, cfg.norm_type)
+                        return (v + u + common.mlp(params["shared"]["mlp"],
+                                                   n2, self.policy,
+                                                   opt=self.opt), shk_, shv_)
+
+                    hh, shk, shv = jax.lax.cond(
+                        (li + 1) % cfg.attn_every == 0, do_shared,
+                        lambda args: args, (hh, shk, shv))
+                return (hh, shk, shv), (ssm_steps, conv_steps)
+
+            shk = cache.get("shared_kp", jnp.zeros((1,), jnp.float32))
+            shv = cache.get("shared_vp", jnp.zeros((1,), jnp.float32))
+            (h, shk, shv), (ssm_steps, conv_steps) = jax.lax.scan(
+                _layer_noise_scoped(body), (h, shk, shv),
+                (params["layers"], cache["ssm"], cache["conv"],
+                 jnp.arange(cfg.n_layers)))
+            # (nl, T, S, ...): per-token states for the caller's rollback;
+            # cache keeps the full-T state as a placeholder
+            cache = dict(cache, ssm=ssm_steps[:, -1], conv=conv_steps[:, -1])
+            if cfg.attn_every:
+                cache["shared_kp"], cache["shared_vp"] = shk, shv
+            steps = {"ssm": ssm_steps, "conv": conv_steps}
+        else:
+            def body(hh, xs):
+                lp, ck, cv, _li = xs
+                hd = cfg.resolved_head_dim
+                n1 = common.norm(lp["ln1"], hh, cfg.norm_eps, cfg.norm_type)
+                a, ck, cv = attention.attn_verify_step(
+                    lp["attn"], n1, ck, cv, idx, self.policy,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=hd, rope_theta=cfg.rope_theta,
+                    window=cfg.sliding_window, qk_norm=cfg.qk_norm,
+                    kv_repeat=self.opt.kv_repeat, block_tables=bt)
+                hh, _ = self._post_attn_combine(
+                    lp, hh, n1, a, jnp.zeros((), jnp.float32))
+                return hh, (ck, cv)
+
+            h, (ks, vs) = jax.lax.scan(
+                _layer_noise_scoped(body), h,
+                (params["layers"], cache["kp"], cache["vp"],
+                 jnp.arange(cfg.n_layers)))
+            cache = dict(cache, kp=ks, vp=vs)
+            steps = None
+
+        logits = self._head(params, h)
+        return logits, cache, steps
+
     def prefill_chunk(self, params, cache, tokens, slot, pos0, true_len):
         """Process one prompt chunk for ONE slot of a stacked PAGED cache.
 

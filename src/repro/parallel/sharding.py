@@ -189,7 +189,11 @@ def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
           (nl, NB, bs, kv_eff, hd) -> (None, dp_if_NB_divisible, None, tp, None)
           — the BLOCK dim takes the data axis (blocks are the unit of both
           allocation and placement; per-slot gathers cross shards and GSPMD
-          inserts the collectives, which the roofline makes visible)
+          inserts the collectives, which the roofline makes visible).
+          Prefix sharing aliases one block into MANY slots' tables
+          (refcounted, copy-on-write), so a block's readers may live on any
+          dp shard — block-dim placement, not slot-dim placement, is what
+          keeps those aliased gathers addressable without replication
       bt (block tables): (slots, max_blocks) -> (dp, None)
       ssm:  (nl, B, H, P, N)     -> (None, dp, tp, None, None)
       conv: (nl, B, K-1, C)      -> (None, dp, None, tp)
@@ -232,7 +236,10 @@ def serve_state_shardings(mesh: Mesh, cfg: ModelConfig, abstract_state):
     (``runtime.server.LMServer.state``): cache leaves follow
     :func:`cache_spec` with the slot dim as the batch dim, and the per-slot
     control vectors (last_tok/active/emitted/eos/max_tok) shard over dp
-    alongside it — one serving replica per dp shard of slots."""
+    alongside it — one serving replica per dp shard of slots. Prefix-shared
+    page-pool blocks are referenced by slots across dp shards; that aliasing
+    is safe because pool leaves shard on the BLOCK dim (cache_spec), so a
+    shared block has one home and every reader gathers from it."""
     dp = dp_axes(mesh)
 
     def one(path, leaf):

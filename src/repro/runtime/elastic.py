@@ -66,7 +66,11 @@ def resize_serving_state(model, state, cap: int, new_slots: int,
     Dense caches move through the ``models.lm`` gather/scatter helpers;
     paged caches keep their page POOLS untouched (block ids are stable
     under slot compaction) and only gather the per-slot leaves — ``idx``,
-    the ``bt`` table rows and any dense recurrent state.
+    the ``bt`` table rows and any dense recurrent state. Blocks shared
+    between kept slots (copy-on-write prefix caching) stay shared: ids do
+    not move, and ``remap_slots`` carries their refcounts; blocks whose
+    only holders were dropped slots are freed (the server evicts them
+    from its prefix index).
     """
     import jax.numpy as jnp
 
@@ -121,7 +125,10 @@ def resize_block_pool(state, allocator, new_n_blocks: int):
     long-context burst retires). ``allocator`` is the server's
     :class:`repro.runtime.paging.BlockAllocator` — its ``resize_pool``
     renumbers the live blocks and rewrites every table; this moves the page
-    ARRAYS to match. Raises if the live blocks don't fit the new pool."""
+    ARRAYS to match. Refcounts move with the renumbering, so blocks shared
+    across slots stay shared at their new ids (the server remaps its prefix
+    index by the same compaction order). Raises if the live blocks don't
+    fit the new pool."""
     import jax.numpy as jnp
 
     from repro.models import lm as lm_helpers

@@ -1,4 +1,5 @@
-"""Paged KV serving memory: the block allocator behind the block-table cache.
+"""Paged KV serving memory: block allocator + prefix index behind the
+block-table cache.
 
 A dense stacked cache gives every serving slot its own ``cap``-length ring,
 so KV memory scales with ``slots x max_context`` even when most requests are
@@ -9,12 +10,21 @@ page arrays) plus a small per-slot **block table** mapping logical block
 token count* of the workload, rounded up to blocks — the same trick
 production LLM engines use (vLLM-style paged attention).
 
+Blocks are the unit of SHARING, not just placement: each physical block
+carries a **refcount**, so the same block can appear in several slots'
+tables at once (copy-on-write prefix caching — requests with a common
+prompt prefix map the same prompt blocks read-only and skip prefill for
+those positions). The :class:`PrefixIndex` maps hash-chained full-block
+token prefixes to live block ids so admission can find reusable blocks in
+O(prompt blocks).
+
 Split of responsibilities:
 
   * the **allocator** (this module) is host-side bookkeeping: a lowest-id
-    free heap, per-slot tables, alloc/free/defrag on retirement. It owns the
-    authoritative ``tables`` array and mirrors it to the device cache leaf
-    ``bt`` (the server syncs lazily via :attr:`BlockAllocator.dirty`);
+    free heap, per-slot tables, refcounts, alloc/share/fork/free/defrag. It
+    owns the authoritative ``tables`` array and mirrors it to the device
+    cache leaf ``bt`` (the server syncs lazily via
+    :attr:`BlockAllocator.dirty`);
   * the **device** side only ever sees jittable arrays: the page pools and
     the ``(slots, max_blocks)`` int32 table whose unmapped entries hold the
     OOB sentinel ``n_blocks`` — scatter-writes through a sentinel drop on
@@ -28,8 +38,9 @@ pool shrink/grow, ``runtime.elastic.resize_block_pool``) cheap.
 
 from __future__ import annotations
 
+import hashlib
 import heapq
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,14 +51,20 @@ def blocks_for(n_positions: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-heap block allocator with per-slot block tables.
+    """Free-heap block allocator with per-slot block tables and per-block
+    refcounts (shared read-only blocks for copy-on-write prefix caching).
+
+    A slot's mapped logical blocks form the contiguous range ``[lo, hi)``
+    of its table row (``lo > 0`` after :meth:`trim_below` dropped
+    behind-window blocks for SWA decoding; ``hi`` == :attr:`n_owned`).
 
     Invariants (asserted by :meth:`check_invariants`, property-tested in
     ``tests/test_paging.py``):
-      * every block is either on the free heap or owned by exactly one slot;
-      * a slot's table maps logical blocks ``0..n_owned-1`` to distinct
-        physical ids and holds the sentinel ``n_blocks`` everywhere else;
-      * ``free_count + sum(owned) == n_blocks`` at all times.
+      * ``refcount[b]`` equals the number of table entries referencing
+        ``b`` across all slots (shared blocks count once per slot);
+      * a block is on the free heap iff its refcount is zero;
+      * within one slot the mapped entries are distinct block ids; entries
+        outside ``[lo, hi)`` hold the sentinel ``n_blocks``.
     """
 
     def __init__(self, n_blocks: int, block_size: int, n_slots: int,
@@ -64,8 +81,9 @@ class BlockAllocator:
         heapq.heapify(self._free)
         self.tables = np.full((self.n_slots, self.max_blocks_per_slot),
                               self.sentinel, np.int32)
-        self.owner = np.full((self.n_blocks,), -1, np.int64)
-        self.n_owned = np.zeros((self.n_slots,), np.int64)
+        self.refcount = np.zeros((self.n_blocks,), np.int64)
+        self.n_owned = np.zeros((self.n_slots,), np.int64)   # hi watermark
+        self.lo = np.zeros((self.n_slots,), np.int64)        # first mapped
         self.peak_in_use = 0
         # host->device table sync flag: the server pushes ``tables`` to the
         # cache's ``bt`` leaf only when this is set (and clears it)
@@ -85,9 +103,21 @@ class BlockAllocator:
         return blocks_for(n_positions, self.block_size) <= self.free_count
 
     def slot_blocks(self, slot: int) -> List[int]:
-        return [int(b) for b in self.tables[slot, :self.n_owned[slot]]]
+        """The slot's currently mapped physical block ids (logical order)."""
+        return [int(b)
+                for b in self.tables[slot, self.lo[slot]:self.n_owned[slot]]]
+
+    def is_shared(self, block: int) -> bool:
+        return self.refcount[block] > 1
 
     # -- mutation --------------------------------------------------------
+
+    def _pop_free(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"block pool exhausted ({self.n_blocks} blocks of "
+                f"{self.block_size}); grow n_blocks or admit less")
+        return heapq.heappop(self._free)
 
     def ensure(self, slot: int, n_positions: int) -> None:
         """Grow ``slot``'s table until it covers ``n_positions`` tokens.
@@ -110,61 +140,129 @@ class BlockAllocator:
         while self.n_owned[slot] < need:
             b = heapq.heappop(self._free)
             self.tables[slot, self.n_owned[slot]] = b
-            self.owner[b] = slot
+            self.refcount[b] = 1
             self.n_owned[slot] += 1
             self.dirty = True
         self.peak_in_use = max(self.peak_in_use, self.used_count)
 
-    def release(self, slot: int) -> int:
-        """Return all of ``slot``'s blocks to the pool (defrag-on-retirement:
-        the min-heap hands low ids back first). Returns the count freed."""
+    def share(self, slot: int, blocks: Sequence[int]) -> None:
+        """Map already-live ``blocks`` (a matched prompt prefix) into
+        ``slot``'s table read-only, bumping their refcounts. The slot's
+        table must have room; blocks must be live (refcount >= 1)."""
         n = int(self.n_owned[slot])
-        for j in range(n):
-            b = int(self.tables[slot, j])
-            heapq.heappush(self._free, b)
-            self.owner[b] = -1
-        if n:
-            self.tables[slot, :n] = self.sentinel
-            self.n_owned[slot] = 0
+        if n + len(blocks) > self.max_blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: sharing {len(blocks)} blocks past "
+                f"{self.max_blocks_per_slot}-entry table")
+        for b in blocks:
+            b = int(b)
+            if not (0 <= b < self.n_blocks) or self.refcount[b] < 1:
+                raise ValueError(f"cannot share dead block {b}")
+        for b in blocks:
+            self.tables[slot, n] = int(b)
+            self.refcount[int(b)] += 1
+            n += 1
+        self.n_owned[slot] = n
+        if blocks:
             self.dirty = True
-        return n
 
-    def remap_slots(self, keep: Sequence[int], new_slots: int) -> None:
+    def fork_cow(self, slot: int, logical: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write fork: give ``slot`` a private copy of its logical
+        block ``logical`` if that block is shared. Returns ``(src, dst)``
+        physical ids so the caller can copy the page rows on device, or
+        ``None`` when no fork is needed (unmapped / already private).
+        Raises :class:`RuntimeError` if the pool has no free block."""
+        b = int(self.tables[slot, logical])
+        if b == self.sentinel or self.refcount[b] <= 1:
+            return None
+        nb = self._pop_free()
+        self.refcount[b] -= 1
+        self.refcount[nb] = 1
+        self.tables[slot, logical] = nb
+        self.peak_in_use = max(self.peak_in_use, self.used_count)
+        self.dirty = True
+        return b, nb
+
+    def _drop_entry(self, slot: int, logical: int,
+                    freed: List[int]) -> None:
+        b = int(self.tables[slot, logical])
+        if b == self.sentinel:
+            return
+        self.refcount[b] -= 1
+        assert self.refcount[b] >= 0, f"double free of block {b}"
+        if self.refcount[b] == 0:
+            heapq.heappush(self._free, b)
+            freed.append(b)
+        self.tables[slot, logical] = self.sentinel
+        self.dirty = True
+
+    def release(self, slot: int) -> List[int]:
+        """Drop all of ``slot``'s references; blocks whose refcount hits
+        zero return to the pool (defrag-on-retirement: the min-heap hands
+        low ids back first). Returns the list of block ids actually FREED
+        (shared blocks survive in their other holders' tables) so the
+        caller can evict them from the prefix index."""
+        freed: List[int] = []
+        for j in range(int(self.lo[slot]), int(self.n_owned[slot])):
+            self._drop_entry(slot, j, freed)
+        self.n_owned[slot] = 0
+        self.lo[slot] = 0
+        return freed
+
+    def trim_below(self, slot: int, pos: int) -> List[int]:
+        """Free ``slot``'s blocks that lie wholly below position ``pos``
+        (sliding-window decode: KV behind the window is dead weight — the
+        validity mask already hides it). Refcount-aware: a shared prefix
+        block outlives one slot's trim. Returns the freed block ids."""
+        new_lo = min(max(int(pos), 0) // self.block_size,
+                     int(self.n_owned[slot]))
+        freed: List[int] = []
+        for j in range(int(self.lo[slot]), new_lo):
+            self._drop_entry(slot, j, freed)
+        if new_lo > self.lo[slot]:
+            self.lo[slot] = new_lo
+        return freed
+
+    def remap_slots(self, keep: Sequence[int], new_slots: int) -> List[int]:
         """Elastic slot-count change: compact the kept slots' table rows to
         the front (row ``i`` <- old row ``keep[i]``), release everything
-        else. Mirrors ``elastic.resize_serving_state`` slot compaction."""
+        else. Mirrors ``elastic.resize_serving_state`` slot compaction.
+        Returns the block ids freed by the dropped slots."""
         keep = list(keep)
         if len(keep) > new_slots:
             raise ValueError(f"{len(keep)} kept slots do not fit {new_slots}")
+        freed: List[int] = []
         for s in range(self.n_slots):
             if s not in keep:
-                self.release(s)
+                freed.extend(self.release(s))
         new_tables = np.full((new_slots, self.max_blocks_per_slot),
                              self.sentinel, np.int32)
         new_owned = np.zeros((new_slots,), np.int64)
+        new_lo = np.zeros((new_slots,), np.int64)
         for i, s in enumerate(keep):
             new_tables[i] = self.tables[s]
             new_owned[i] = self.n_owned[s]
-            for b in self.slot_blocks(s):
-                self.owner[b] = i
-        self.tables, self.n_owned, self.n_slots = new_tables, new_owned, \
-            new_slots
+            new_lo[i] = self.lo[s]
+        self.tables, self.n_owned, self.lo, self.n_slots = \
+            new_tables, new_owned, new_lo, new_slots
         self.dirty = True
+        return freed
 
     def resize_pool(self, new_n_blocks: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Elastic pool resize with compaction: used blocks are renumbered
-        ``0..used-1`` in increasing old-id order. Returns ``(old_ids,
-        new_ids)`` so the caller can move the page-array rows
+        """Elastic pool resize with compaction: live blocks (refcount > 0)
+        are renumbered ``0..live-1`` in increasing old-id order. Returns
+        ``(old_ids, new_ids)`` so the caller can move the page-array rows
         (``new_pages[:, new_ids] = old_pages[:, old_ids]``); tables are
-        rewritten in place (sentinel value changes with the pool size)."""
-        used = np.sort(np.where(self.owner >= 0)[0])
+        rewritten in place (sentinel value changes with the pool size) and
+        refcounts move with the renumbering, so shared blocks stay shared."""
+        used = np.sort(np.where(self.refcount > 0)[0])
         if len(used) > new_n_blocks:
             raise ValueError(f"{len(used)} blocks in use do not fit a pool "
                              f"of {new_n_blocks}")
         old_to_new = np.full((self.n_blocks,), new_n_blocks, np.int64)
         old_to_new[used] = np.arange(len(used))
-        new_owner = np.full((new_n_blocks,), -1, np.int64)
-        new_owner[:len(used)] = self.owner[used]
+        new_refcount = np.zeros((new_n_blocks,), np.int64)
+        new_refcount[:len(used)] = self.refcount[used]
         mapped = self.tables < self.sentinel
         new_tables = np.full_like(self.tables, new_n_blocks)
         new_tables[mapped] = old_to_new[self.tables[mapped]]
@@ -172,8 +270,8 @@ class BlockAllocator:
         self.n_blocks = int(new_n_blocks)
         self.sentinel = self.n_blocks
         self.tables = new_tables.astype(np.int32)
-        self.owner = new_owner
-        self._free = [b for b in range(self.n_blocks) if new_owner[b] < 0]
+        self.refcount = new_refcount
+        self._free = [b for b in range(self.n_blocks) if new_refcount[b] == 0]
         heapq.heapify(self._free)
         self.peak_in_use = min(self.peak_in_use, self.n_blocks)
         self.dirty = True
@@ -184,18 +282,107 @@ class BlockAllocator:
     def check_invariants(self) -> None:
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate ids on the free heap"
-        owned = []
+        refs = np.zeros((self.n_blocks,), np.int64)
         for s in range(self.n_slots):
-            n = int(self.n_owned[s])
+            lo, hi = int(self.lo[s]), int(self.n_owned[s])
             row = self.tables[s]
-            assert np.all(row[n:] == self.sentinel), \
+            assert 0 <= lo <= hi <= self.max_blocks_per_slot, \
+                f"slot {s}: bad lo/hi {lo}/{hi}"
+            assert np.all(row[hi:] == self.sentinel), \
                 f"slot {s}: mapped entries beyond n_owned"
-            blocks = [int(b) for b in row[:n]]
+            assert np.all(row[:lo] == self.sentinel), \
+                f"slot {s}: mapped entries below lo"
+            blocks = [int(b) for b in row[lo:hi]]
             assert all(0 <= b < self.n_blocks for b in blocks), \
                 f"slot {s}: block id out of range"
-            assert all(self.owner[b] == s for b in blocks), \
-                f"slot {s}: owner mismatch"
-            owned.extend(blocks)
-        assert len(owned) == len(set(owned)), "block owned by two slots"
-        assert not (free & set(owned)), "block both free and owned"
-        assert len(free) + len(owned) == self.n_blocks, "blocks leaked"
+            assert len(blocks) == len(set(blocks)), \
+                f"slot {s}: duplicate block in one table row"
+            for b in blocks:
+                refs[b] += 1
+        assert np.array_equal(refs, self.refcount), \
+            "refcount != live table references"
+        zero = {b for b in range(self.n_blocks) if self.refcount[b] == 0}
+        assert free == zero, "free heap != zero-refcount blocks"
+
+
+class PrefixIndex:
+    """Hash-chain prefix index over FULL prompt blocks.
+
+    Key for logical block ``i`` of a prompt: ``sha1(key_{i-1} || tokens of
+    block i)`` — chained, so a key identifies the whole token prefix
+    through block ``i``, not just that block's tokens (``hash()`` is
+    process-salted and unusable for a stable content key). ``match`` walks
+    the chain until the first miss; ``insert_chain`` registers a prompt's
+    full blocks after their KV is written. First insert wins: duplicate
+    content keeps the original (already shareable) block.
+
+    The index only ever references LIVE blocks: the server evicts ids the
+    allocator reports freed (release/trim/remap) and ids it is about to
+    overwrite (copy-on-write guard), and remaps ids on pool resize.
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = int(block_size)
+        self.by_key: Dict[bytes, int] = {}
+        self.by_block: Dict[int, bytes] = {}
+
+    def __len__(self) -> int:
+        return len(self.by_key)
+
+    def _chain_keys(self, prompt: np.ndarray, n_blocks: int) -> List[bytes]:
+        toks = np.asarray(prompt, np.int32)
+        keys, h = [], b"\x00"
+        for i in range(n_blocks):
+            h = hashlib.sha1(
+                h + toks[i * self.block_size:(i + 1) * self.block_size]
+                .tobytes()).digest()
+            keys.append(h)
+        return keys
+
+    def match(self, prompt: np.ndarray) -> List[int]:
+        """Longest indexed full-block prefix of ``prompt``: the physical
+        block ids for blocks ``0..K-1`` (consecutive from the start)."""
+        n_full = len(prompt) // self.block_size
+        ids: List[int] = []
+        for key in self._chain_keys(prompt, n_full):
+            b = self.by_key.get(key)
+            if b is None:
+                break
+            ids.append(b)
+        return ids
+
+    def insert_chain(self, prompt: np.ndarray, block_ids: Sequence[int]) -> None:
+        """Register a prompt's full blocks (``block_ids[i]`` holds the KV of
+        prompt block ``i``). Keys already present keep their original block."""
+        keys = self._chain_keys(prompt, min(len(prompt) // self.block_size,
+                                            len(block_ids)))
+        for key, b in zip(keys, block_ids):
+            if key in self.by_key:
+                continue
+            b = int(b)
+            if b in self.by_block:       # block re-registered under a new
+                del self.by_key[self.by_block[b]]   # chain: drop stale key
+            self.by_key[key] = b
+            self.by_block[b] = key
+
+    def contains_block(self, block: int) -> bool:
+        return int(block) in self.by_block
+
+    def evict_blocks(self, blocks: Sequence[int]) -> None:
+        """Drop freed / about-to-be-overwritten blocks from the index."""
+        for b in blocks:
+            key = self.by_block.pop(int(b), None)
+            if key is not None:
+                del self.by_key[key]
+
+    def remap(self, old_to_new: Dict[int, int]) -> None:
+        """Renumber block ids after an elastic pool resize (ids not in the
+        mapping were freed by the resize and are evicted)."""
+        by_key, by_block = {}, {}
+        for key, b in self.by_key.items():
+            nb = old_to_new.get(b)
+            if nb is None:
+                continue
+            by_key[key] = int(nb)
+            by_block[int(nb)] = key
+        self.by_key, self.by_block = by_key, by_block

@@ -54,6 +54,31 @@ stalls every active decode stream (the TTFT/TPOT spike
 ``benchmarks/bench_serving.py`` measures). The final chunk emits the first
 token; TTFT is stamped only when that token's bytes reach the host.
 
+**Prefix caching** (``prefix_cache=True``, paged only): admission matches
+an incoming prompt's token prefix against live block tables at BLOCK
+granularity through a hash-chain index (:class:`repro.runtime.paging.
+PrefixIndex`). Matched full blocks are mapped read-only into the new
+slot's table with their refcounts bumped — prefill for those positions is
+skipped entirely; only the un-matched suffix runs (as one chunk step). A
+prompt fully covered minus its last token attaches with NO prefill at all
+and emits its first token from the next decode tick (TTFT stamps at that
+token's host materialization). Writes into a shared block fork a private
+copy first (copy-on-write guard), so sharers never see each other's
+tokens. SSM/hybrid families carry recurrent state that cannot be skipped,
+so the flag is inert there (documented, parity-tested).
+
+**Speculative decoding** (``spec_k=k``, paged + greedy only): each tick a
+host-side prompt-lookup draft proposes ``k`` tokens per slot; ONE jitted
+verify step (:meth:`repro.models.lm.LM.verify_step`) scores all ``k+1``
+positions through page-gather attention and accepts the longest prefix of
+drafts matching the verified greedy tokens — plus one bonus token — so
+output is token-identical to greedy tick-by-tick decode while the
+per-tick channel/RRNS-decode overhead amortizes over >1 accepted token.
+Rejected tails need no KV rollback: the next verify tick re-writes
+exactly those positions before any gather reads them; SSM/conv recurrent
+state rolls back by selecting the per-step stacked state at the accepted
+position.
+
 :class:`PerSlotLMServer` is the seed's slot-at-a-time loop, retained only
 as the parity oracle (token-exact vs the batched engine under greedy
 decode) and as the benchmark baseline.
@@ -73,6 +98,37 @@ import numpy as np
 from repro.core import gemm
 from repro.models import lm as lm_helpers
 from repro.runtime.paging import blocks_for
+
+
+@dataclasses.dataclass(frozen=True)
+class _PrefixMatch:
+    """Admission-time prefix-index lookup result."""
+    block_ids: Tuple[int, ...] = ()
+    m: int = 0              # positions covered by shared blocks
+    full_hit: bool = False  # whole prompt minus last token is shared
+    fork_extra: int = 0     # 1 extra block reserved for the deferred fork
+
+
+_NO_MATCH = _PrefixMatch()
+
+
+def _lookup_draft(ctx: np.ndarray, k: int, n: int = 3) -> np.ndarray:
+    """Prompt-lookup drafting (self-drafting speculative decoding): find
+    the most recent earlier occurrence of the context's trailing n-gram
+    and propose the tokens that followed it, falling back to shorter
+    n-grams and finally to repeating the last token. Host-side and
+    deterministic; the verify step makes ANY draft exact under greedy —
+    a bad draft just yields the single bonus token (= plain decode)."""
+    L = len(ctx)
+    out = np.full((k,), ctx[-1] if L else 0, np.int32)
+    for nn in range(min(n, L - 1), 0, -1):
+        key = ctx[L - nn:]
+        for s in range(L - nn - 1, -1, -1):
+            if np.array_equal(ctx[s:s + nn], key):
+                take = ctx[s + nn:s + nn + k]
+                out[:len(take)] = take
+                return out
+    return out
 
 
 @dataclasses.dataclass
@@ -143,6 +199,15 @@ class Scheduler:
             # no longer "waiting" yet hold a slot — queue accounting must
             # count them or occupancy reads wrong)
             "prefill_chunks": 0, "prefilling": 0,
+            # prefix caching: admissions that reused shared blocks, the
+            # subset that skipped prefill entirely, and total blocks mapped
+            # read-only instead of being prefilled
+            "prefix_hits": 0, "prefix_full_hits": 0,
+            "prefix_shared_blocks": 0,
+            # speculative decoding: verify ticks run, per-slot verify
+            # steps, and tokens accepted (accepted/spec_slot_ticks is the
+            # mean accepted-tokens-per-tick the benchmark gates on)
+            "spec_ticks": 0, "spec_slot_ticks": 0, "spec_accepted": 0,
         }
 
     def submit(self, req: Request) -> None:
@@ -213,7 +278,9 @@ class LMServer:
                  cache_layout: str = "dense",
                  block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 spec_k: int = 0):
         self.model = model
         self.params = params
         self.cap = cap
@@ -230,9 +297,26 @@ class LMServer:
                 "dense ring keeps whole-prompt bucketed prefill)")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if prefix_cache and cache_layout != "paged":
+            raise ValueError(
+                "prefix_cache requires cache_layout='paged' (blocks are the "
+                "sharing unit; the dense rings have nothing to share)")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k:
+            if cache_layout != "paged":
+                raise ValueError(
+                    "spec_k requires cache_layout='paged' (the verify step "
+                    "writes k+1 positions through block tables; the dense "
+                    "ring is single-token)")
+            if not greedy:
+                raise ValueError(
+                    "spec_k requires greedy=True (verify-then-accept is "
+                    "exact under greedy sampling only)")
         self.cache_layout = cache_layout
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
+        self.spec_k = int(spec_k)
         # pure-SSM models have no KV to page (recurrent state is O(1) per
         # slot and stays dense under both layouts) — no pool, no tables
         has_pages = not (model.kind == "mamba" and not cfg.attn_every)
@@ -247,11 +331,31 @@ class LMServer:
                 block_size, batch_slots, mb)
         else:
             self.alloc = None
+        # prefix caching needs pages to share AND skippable prefill: SSM /
+        # hybrid recurrent state at the match point cannot be reconstructed
+        # from blocks, so the flag is inert for the mamba kind (documented;
+        # the engine stays token-identical, it just never shares)
+        self.prefix_cache = bool(prefix_cache) and self.alloc is not None \
+            and model.kind != "mamba"
+        if self.prefix_cache:
+            from repro.runtime.paging import PrefixIndex
+            self.prefix_index: Optional["PrefixIndex"] = \
+                PrefixIndex(block_size)
+        else:
+            self.prefix_index = None
         # chunked-prefill in-flight entries: {"req", "slot", "pos"}
         self.prefilling: List[Dict[str, Any]] = []
         self._slot_pos = [0] * batch_slots   # host mirror of each slot's idx
         # lifetime block reservation per occupied slot (see _free_budget)
         self._slot_budget = [0] * batch_slots
+        # linear position cap per occupied slot (prompt + max_tokens): the
+        # speculative ensure() clamps here so draft positions past the
+        # request's own budget never allocate past its reservation
+        self._slot_poscap = [0] * batch_slots
+        # full-prefix-hit slots owe one deferred copy-on-write fork when
+        # their first decode write lands inside a shared block; the free
+        # block for it is reserved until the guard resolves it
+        self._fork_pending = [0] * batch_slots
         # SSM/hybrid recurrences carry state through padded steps, so those
         # families bucket by EXACT prompt length (still batched across
         # same-length prompts); attention families right-pad to buckets.
@@ -298,10 +402,16 @@ class LMServer:
         self.state = self._init_state(batch_slots)
         self._decode_tick = jax.jit(self._make_tick_fn())
         self._prefill_insert = jax.jit(self._make_prefill_fn())
-        if self.prefill_chunk is not None:
+        # prefix-cache misses/partial hits prefill through the chunk step
+        # (one call at pos0 = matched length), so both features share fns
+        if self.prefill_chunk is not None or self.prefix_cache:
             mid, last = self._make_chunk_fns()
             self._chunk_mid = jax.jit(mid)
             self._chunk_last = jax.jit(last)
+        if self.prefix_cache:
+            self._attach = jax.jit(self._make_attach_fn())
+        if self.spec_k:
+            self._verify_tick = jax.jit(self._make_verify_fn())
 
     # ------------------------------------------------------------------
     # device-side step functions
@@ -446,6 +556,92 @@ class LMServer:
 
         return chunk_mid, chunk_last
 
+    def _make_attach_fn(self):
+        """Jitted full-prefix-hit admission: the whole prompt minus its
+        last token is already in shared blocks, so the slot attaches with
+        NO prefill — ``idx = L-1``, ``last_tok = prompt[-1]``, ``emitted =
+        0`` (the engine invariant ``idx = L + emitted - 1`` holds; the
+        next decode tick produces the request's FIRST token)."""
+
+        def attach(state, slot, last_tok, idx, eos, max_tok):
+            cache = dict(state["cache"],
+                         idx=state["cache"]["idx"].at[slot].set(idx))
+            return dict(
+                state, cache=cache,
+                last_tok=state["last_tok"].at[slot].set(last_tok),
+                active=state["active"].at[slot].set(True),
+                emitted=state["emitted"].at[slot].set(0),
+                eos=state["eos"].at[slot].set(eos),
+                max_tok=state["max_tok"].at[slot].set(max_tok))
+
+        return attach
+
+    def _make_verify_fn(self):
+        """Jitted speculative verify tick: score ``k`` drafts + 1 bonus
+        position per slot in one step, accept device-side, roll recurrent
+        state back to the accepted position. Exactly greedy: a token is
+        accepted iff every draft before it equals the verified argmax."""
+        model, k = self.model, self.spec_k
+
+        def verify(params, state, drafts, noise_key):
+            cache0 = state["cache"]
+            idx0 = cache0["idx"]
+            S = idx0.shape[0]
+            tokens = jnp.concatenate(
+                [state["last_tok"][:, None], drafts], axis=1)   # (S, k+1)
+            with gemm.noise_key_scope(noise_key):
+                logits, cache, steps = model.verify_step(
+                    params, cache0, tokens)
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (S, k+1)
+            active = state["active"]
+            # leading-ones acceptance: position j is kept iff all drafts
+            # before it matched greedy, it fits the remaining budget, and
+            # no earlier kept token was EOS (the EOS itself is kept)
+            lead = jnp.cumprod(
+                (drafts == g[:, :-1]).astype(jnp.int32), axis=1)
+            ok = jnp.concatenate(
+                [jnp.ones((S, 1), jnp.int32), lead], axis=1)
+            rem = state["max_tok"] - state["emitted"]
+            j = jnp.arange(k + 1)[None, :]
+            is_eos = (state["eos"][:, None] >= 0) & \
+                (g == state["eos"][:, None])
+            eos_before = jnp.concatenate(
+                [jnp.zeros((S, 1), jnp.int32),
+                 jnp.cumsum(is_eos.astype(jnp.int32), axis=1)[:, :-1]],
+                axis=1)
+            keep = jnp.cumprod(
+                ok * (j < rem[:, None]).astype(jnp.int32) *
+                (eos_before == 0).astype(jnp.int32), axis=1)
+            a = jnp.maximum(jnp.sum(keep, axis=1), 1)           # (S,)
+            last = jnp.take_along_axis(g, (a - 1)[:, None], axis=1)[:, 0]
+            emitted = state["emitted"] + \
+                jnp.where(active, a, 0).astype(jnp.int32)
+            kept_eos = jnp.any((keep > 0) & is_eos, axis=1)
+            done = active & (kept_eos | (emitted >= state["max_tok"]))
+            # rejected-tail KV needs no rollback (the next tick re-writes
+            # positions idx..idx+k before gathering); idx just advances by
+            # the accepted count. Inactive slots stay frozen throughout.
+            cache = dict(cache, idx=jnp.where(active, idx0 + a, idx0))
+            if steps is not None:
+                # recurrent rollback: state after token a-1, per slot
+                rows = jnp.arange(S)
+                for name in ("ssm", "conv"):
+                    st = steps[name]                 # (nl, T, S, ...)
+                    sel = st[:, a - 1, rows]         # (nl, S, ...)
+                    m = active.reshape((1, -1) + (1,) * (sel.ndim - 2))
+                    cache[name] = jnp.where(m, sel, cache0[name])
+            new_state = dict(
+                state, cache=cache,
+                last_tok=jnp.where(active, last, state["last_tok"]),
+                active=active & ~done,
+                emitted=emitted)
+            toks = jnp.where(active[:, None] & (keep > 0), g, -1)
+            payload = jnp.concatenate(
+                [toks, done.astype(jnp.int32)[:, None]], axis=1)  # (S,k+2)
+            return new_state, payload
+
+        return verify
+
     def _next_keys(self, stream: int, count: int):
         noise = jax.random.fold_in(
             jax.random.fold_in(self._noise_base, stream), count)
@@ -508,8 +704,97 @@ class LMServer:
         ``tick()`` and kill every in-flight stream)."""
         reserved = sum(
             max(0, self._slot_budget[i] - int(self.alloc.n_owned[i]))
+            + self._fork_pending[i]
             for i, r in enumerate(self.slot_req) if r is not None)
         return self.alloc.free_count - reserved
+
+    # -- prefix caching (copy-on-write shared blocks) -------------------
+
+    def _match_prefix(self, prompt) -> _PrefixMatch:
+        """Look the prompt up in the prefix index. A FULL hit means shared
+        blocks cover positions ``0..L-2`` (``ceil((L-1)/bs)`` blocks):
+        prefill is skipped entirely and the first decode tick emits the
+        first token, writing position ``L-1`` itself (forking the last
+        shared block first when ``L-1`` falls inside it). A partial hit
+        covers ``m = K*bs`` positions; the suffix prefills as one chunk."""
+        if not self.prefix_cache:
+            return _NO_MATCH
+        L = len(prompt)
+        if L < 2:
+            return _NO_MATCH
+        ids = self.prefix_index.match(np.asarray(prompt, np.int32))
+        if not ids:
+            return _NO_MATCH
+        bs = self.block_size
+        need_full = blocks_for(L - 1, bs)
+        if len(ids) >= need_full:
+            return _PrefixMatch(tuple(ids[:need_full]), L - 1, True,
+                                1 if (L - 1) % bs else 0)
+        return _PrefixMatch(tuple(ids), len(ids) * bs, False, 0)
+
+    def _register_prefix(self, slot: int, req: Request) -> None:
+        """Index the slot's full prompt blocks so later admissions can map
+        them read-only. Decode writes never land in them (generated tokens
+        start at position L >= full-block end); a full-hit sharer's write
+        at L-1 forks first (copy-on-write guard)."""
+        if self.prefix_index is None:
+            return
+        n_full = len(req.prompt) // self.block_size
+        if n_full == 0 or int(self.alloc.lo[slot]) > 0:
+            return
+        ids = [int(b) for b in self.alloc.tables[slot, :n_full]]
+        if any(b == self.alloc.sentinel for b in ids):
+            return
+        self.prefix_index.insert_chain(np.asarray(req.prompt, np.int32),
+                                       ids)
+
+    def _release_slot(self, slot: int) -> None:
+        freed = self.alloc.release(slot) if self.alloc is not None else []
+        self._fork_pending[slot] = 0
+        if freed and self.prefix_index is not None:
+            self.prefix_index.evict_blocks(freed)
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Device-side page copy for a copy-on-write fork (every pool
+        leaf; layer dim leads, block dim is axis 1)."""
+        cache = self.state["cache"]
+        for leaf in lm_helpers.PAGE_POOL_LEAVES:
+            if leaf in cache:
+                cache[leaf] = cache[leaf].at[:, dst].set(cache[leaf][:, src])
+
+    def _cow_guard(self, slot: int, pos_lo: int, pos_hi: int) -> None:
+        """Before device writes at positions ``[pos_lo, pos_hi)`` of a
+        slot: fork shared blocks (the sharer gets a private copy — other
+        holders keep the original) and evict solely-owned but still-indexed
+        blocks from the prefix index (their content is about to diverge
+        from the indexed token chain)."""
+        if self.prefix_index is None or self.alloc is None:
+            return
+        bs = self.block_size
+        hi = max(pos_hi, pos_lo + 1)
+        for j in range(pos_lo // bs, (hi - 1) // bs + 1):
+            if j >= int(self.alloc.n_owned[slot]):
+                break
+            b = int(self.alloc.tables[slot, j])
+            if b == self.alloc.sentinel:
+                continue
+            if self.alloc.is_shared(b):
+                src, dst = self.alloc.fork_cow(slot, j)
+                self._copy_block(src, dst)
+            elif self.prefix_index.contains_block(b):
+                self.prefix_index.evict_blocks([b])
+        self._fork_pending[slot] = 0
+
+    def _maybe_trim(self, slot: int) -> None:
+        """Sliding-window models: free blocks wholly behind the attention
+        window mid-flight (the validity mask already hides them). Refcount-
+        aware — a shared prefix block outlives one slot's trim."""
+        w = self.model.cfg.sliding_window
+        if self.alloc is None or not w:
+            return
+        freed = self.alloc.trim_below(slot, self._slot_pos[slot] - w + 1)
+        if freed and self.prefix_index is not None:
+            self.prefix_index.evict_blocks(freed)
 
     def _take_admissible(self, n: int) -> List[Request]:
         """Pop up to ``n`` waiting requests FCFS. Under the paged layout,
@@ -535,6 +820,8 @@ class LMServer:
         admitting while slots free up and work waits."""
         if self.prefill_chunk is not None:
             return self._admit_chunked()
+        if self.prefix_cache:
+            return self._admit_prefix()
         retired: List[Request] = []
         while True:
             free = [i for i, r in enumerate(self.slot_req) if r is None]
@@ -566,6 +853,8 @@ class LMServer:
                         # reserved by _take_admissible: cannot fail
                         self.alloc.ensure(my_slots[j], len(r.prompt))
                         self._slot_budget[my_slots[j]] = self._block_budget(r)
+                    self._slot_poscap[my_slots[j]] = \
+                        len(r.prompt) + r.max_tokens
                 self.scheduler.record_admit(group)
                 self._sync_tables()
                 nk, sk = self._next_keys(1, self._prefill_count)
@@ -581,12 +870,90 @@ class LMServer:
                     r.t_first_token = t_host
                     self.scheduler.emit(r, int(payload[j, 0]))
                     if payload[j, 1]:
-                        if self.alloc is not None:
-                            self.alloc.release(my_slots[j])
+                        self._release_slot(my_slots[j])
                         retired.append(self.scheduler.retire(r))
                     else:
                         self.slot_req[my_slots[j]] = r
                         self._slot_pos[my_slots[j]] = len(r.prompt)
+
+    def _admit_prefix(self) -> List[Request]:
+        """Admission with prefix caching: requests are admitted ONE at a
+        time (each admission registers its prompt blocks before the next
+        is matched, so a wave of same-prefix arrivals shares within the
+        wave). Misses and partial hits prefill their unmatched suffix as a
+        single chunk step at ``pos0 = matched``; full hits attach with no
+        prefill. The head-of-line budget gate reserves the request's
+        lifetime budget MINUS its shared blocks (plus one block for a
+        deferred copy-on-write fork)."""
+        retired: List[Request] = []
+        while True:
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            if not free or not self.scheduler.waiting:
+                return retired
+            head = self.scheduler.waiting[0]
+            m = self._match_prefix(head.prompt)
+            need = self._block_budget(head) - len(m.block_ids) + m.fork_extra
+            if need > self._free_budget():
+                return retired
+            req = self.scheduler.waiting.popleft()
+            retired.extend(self._admit_one(req, free[0], m))
+
+    def _admit_one(self, req: Request, slot: int,
+                   m: _PrefixMatch) -> List[Request]:
+        L = len(req.prompt)
+        self._slot_budget[slot] = self._block_budget(req)
+        self._slot_poscap[slot] = L + req.max_tokens
+        self._fork_pending[slot] = 0
+        if m.block_ids:
+            self.alloc.share(slot, m.block_ids)
+            self.scheduler.metrics["prefix_hits"] += 1
+            self.scheduler.metrics["prefix_shared_blocks"] += \
+                len(m.block_ids)
+        self.scheduler.record_admit([req])
+        eos = -1 if req.eos_id is None else req.eos_id
+        if m.full_hit:
+            # no prefill at all: idx = L-1, emitted = 0; the next decode
+            # tick writes position L-1 (forking its shared block first)
+            # and emits the FIRST token — TTFT stamps there, on host
+            self.scheduler.metrics["prefix_full_hits"] += 1
+            self._fork_pending[slot] = m.fork_extra
+            self.slot_req[slot] = req
+            self._slot_pos[slot] = L - 1
+            self._sync_tables()
+            self.state = self._attach(
+                self.state, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(int(req.prompt[L - 1]), jnp.int32),
+                jnp.asarray(L - 1, jnp.int32), jnp.asarray(eos, jnp.int32),
+                jnp.asarray(req.max_tokens, jnp.int32))
+            return []
+        # miss (m.m == 0) or partial hit: one chunk step over the suffix,
+        # starting at the matched block boundary; attention families
+        # right-pad to a power of two to bound compile counts
+        self.alloc.ensure(slot, L)
+        self._sync_tables()
+        suffix = np.asarray(req.prompt[m.m:], np.int32)[None, :]
+        C = L - m.m
+        if self.pad_prefill and C > 1:
+            Cp = 1 << (C - 1).bit_length()
+            if Cp > C:
+                suffix = np.pad(suffix, ((0, 0), (0, Cp - C)))
+        nk, sk = self._next_keys(2, self._chunk_count)
+        self._chunk_count += 1
+        self.state, payload = self._chunk_last(
+            self._exec_params, self.state, jnp.asarray(suffix),
+            jnp.asarray(slot, jnp.int32), jnp.asarray(m.m, jnp.int32),
+            jnp.asarray(C, jnp.int32), jnp.asarray(eos, jnp.int32),
+            jnp.asarray(req.max_tokens, jnp.int32), nk, sk)
+        payload = np.asarray(jax.device_get(payload))
+        req.t_first_token = time.perf_counter()
+        self._slot_pos[slot] = L
+        self.scheduler.emit(req, int(payload[0, 0]))
+        if payload[0, 1]:
+            self._release_slot(slot)
+            return [self.scheduler.retire(req)]
+        self.slot_req[slot] = req
+        self._register_prefix(slot, req)
+        return []
 
     def _admit_chunked(self) -> List[Request]:
         """Chunked (piggybacked) prefill: waiting prompts claim a slot and
@@ -603,8 +970,10 @@ class LMServer:
             if not free:
                 break
             head = self.scheduler.waiting[0]
+            m = self._match_prefix(head.prompt)
             if self.alloc is not None and \
-                    self._block_budget(head) > self._free_budget():
+                    self._block_budget(head) - len(m.block_ids) + \
+                    m.fork_extra > self._free_budget():
                 break
             req = self.scheduler.waiting.popleft()
             slot = free[0]
@@ -613,10 +982,65 @@ class LMServer:
                 # chunk's worth at a time — queued prompts must not pin
                 # pool blocks they won't write for many ticks
                 self._slot_budget[slot] = self._block_budget(req)
+            self._slot_poscap[slot] = len(req.prompt) + req.max_tokens
+            self._fork_pending[slot] = 0
             self.slot_req[slot] = req
             self.scheduler.record_admit([req])
-            self.prefilling.append({"req": req, "slot": slot, "pos": 0})
+            if m.block_ids:
+                self.alloc.share(slot, m.block_ids)
+                self.scheduler.metrics["prefix_hits"] += 1
+                self.scheduler.metrics["prefix_shared_blocks"] += \
+                    len(m.block_ids)
+            if m.full_hit:
+                # skip the prefilling queue entirely (see _admit_one)
+                self.scheduler.metrics["prefix_full_hits"] += 1
+                self._fork_pending[slot] = m.fork_extra
+                L = len(req.prompt)
+                self._slot_pos[slot] = L - 1
+                self._sync_tables()
+                eos = -1 if req.eos_id is None else req.eos_id
+                self.state = self._attach(
+                    self.state, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(int(req.prompt[L - 1]), jnp.int32),
+                    jnp.asarray(L - 1, jnp.int32),
+                    jnp.asarray(eos, jnp.int32),
+                    jnp.asarray(req.max_tokens, jnp.int32))
+            else:
+                # chunks resume AFTER the shared prefix (pos0 = m.m)
+                self.prefilling.append(
+                    {"req": req, "slot": slot, "pos": m.m})
+        # late prefix re-match: a request claimed while its prefix donor
+        # was still mid-chunk finds the donor's blocks registered by the
+        # time its own FIRST chunk runs — match then, not just at claim
+        while self.prefilling:
+            e = self.prefilling[0]
+            req, slot = e["req"], e["slot"]
+            if not (self.prefix_cache and e["pos"] == 0
+                    and int(self.alloc.n_owned[slot]) == 0):
+                break
+            m = self._match_prefix(req.prompt)
+            if m.block_ids:
+                self.alloc.share(slot, m.block_ids)
+                self.scheduler.metrics["prefix_hits"] += 1
+                self.scheduler.metrics["prefix_shared_blocks"] += \
+                    len(m.block_ids)
+            if not m.full_hit:
+                e["pos"] = m.m
+                break
+            self.scheduler.metrics["prefix_full_hits"] += 1
+            self._fork_pending[slot] = m.fork_extra
+            L = len(req.prompt)
+            self._slot_pos[slot] = L - 1
+            self._sync_tables()
+            eos = -1 if req.eos_id is None else req.eos_id
+            self.state = self._attach(
+                self.state, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(int(req.prompt[L - 1]), jnp.int32),
+                jnp.asarray(L - 1, jnp.int32), jnp.asarray(eos, jnp.int32),
+                jnp.asarray(req.max_tokens, jnp.int32))
+            self.prefilling.pop(0)
         if not self.prefilling:
+            self.scheduler.metrics["prefilling"] = 0
             return retired
         # one chunk per tick, FCFS entry first (bounded per-tick latency)
         e = self.prefilling[0]
@@ -653,9 +1077,10 @@ class LMServer:
             self.scheduler.emit(req, int(payload[0, 0]))
             if payload[0, 1]:
                 self.slot_req[slot] = None
-                if self.alloc is not None:
-                    self.alloc.release(slot)
+                self._release_slot(slot)
                 retired.append(self.scheduler.retire(req))
+            else:
+                self._register_prefix(slot, req)
         self.scheduler.metrics["prefill_chunks"] += 1
         self.scheduler.metrics["prefilling"] = len(self.prefilling)
         return retired
@@ -663,19 +1088,25 @@ class LMServer:
     def tick(self) -> List[Request]:
         """Admit waiting requests (piggybacking one prefill chunk when
         chunked prefill is on), then decode one token for EVERY active slot
-        in a single jitted call."""
+        in a single jitted call — or, with ``spec_k``, verify ``k`` drafted
+        tokens per slot in a single jitted call."""
         done: List[Request] = list(self._admit())
         mid_prefill = {e["slot"] for e in self.prefilling}
         decode_slots = [i for i, r in enumerate(self.slot_req)
                         if r is not None and i not in mid_prefill]
-        if decode_slots:
+        if decode_slots and self.spec_k:
+            done.extend(self._spec_tick(decode_slots))
+        elif decode_slots:
             if self.alloc is not None:
                 cap_pos = self.alloc.max_blocks_per_slot * self.block_size
                 for i in decode_slots:
                     # this tick writes each slot's token at position
-                    # _slot_pos[i]; grow its table on block boundaries
-                    # (reserved at admission — cannot exhaust; writes past
-                    # the linear capacity drop on device, hence the clamp)
+                    # _slot_pos[i]: fork/unindex a shared block there, then
+                    # grow the table on block boundaries (reserved at
+                    # admission — cannot exhaust; writes past the linear
+                    # capacity drop on device, hence the clamp)
+                    self._cow_guard(i, self._slot_pos[i],
+                                    self._slot_pos[i] + 1)
                     self.alloc.ensure(i, min(self._slot_pos[i] + 1, cap_pos))
                 self._sync_tables()
             nk, sk = self._next_keys(0, self._tick_count)
@@ -683,20 +1114,83 @@ class LMServer:
             self.state, payload = self._decode_tick(
                 self._exec_params, self.state, nk, sk)
             payload = np.asarray(jax.device_get(payload))  # the ONE transfer
+            t_host = time.perf_counter()
             for i, (tok, is_done) in enumerate(payload):
                 req = self.slot_req[i]
                 if req is None or tok < 0:
                     continue
                 self._slot_pos[i] += 1
+                if req.t_first_token == 0.0:
+                    # full-prefix-hit admissions skip prefill entirely —
+                    # their FIRST token is this tick's, so TTFT stamps at
+                    # its host materialization, not at admission
+                    req.t_first_token = t_host
                 self.scheduler.emit(req, int(tok))
                 if is_done:
                     self.slot_req[i] = None
-                    if self.alloc is not None:
-                        self.alloc.release(i)
+                    self._release_slot(i)
                     done.append(self.scheduler.retire(req))
+                else:
+                    self._maybe_trim(i)
         self.scheduler.metrics["ticks"] += 1
         if self.prefill_chunk is not None:
             self.scheduler.metrics["prefilling"] = len(self.prefilling)
+        return done
+
+    def _spec_tick(self, decode_slots: List[int]) -> List[Request]:
+        """One speculative tick: host-side prompt-lookup drafts for every
+        decoding slot, ONE jitted verify over all ``k+1`` positions,
+        leading-ones acceptance (token-identical to greedy decode). Still
+        exactly one device→host transfer per tick — now ``(S, k+2)``."""
+        k = self.spec_k
+        drafts = np.zeros((self.n_slots, k), np.int32)
+        for i in decode_slots:
+            req = self.slot_req[i]
+            ctx = np.concatenate([np.asarray(req.prompt, np.int32),
+                                  np.asarray(req.tokens_out, np.int32)])
+            drafts[i] = _lookup_draft(ctx, k)
+        if self.alloc is not None:
+            cap_pos = self.alloc.max_blocks_per_slot * self.block_size
+            for i in decode_slots:
+                p0 = self._slot_pos[i]
+                # the verify writes positions [p0, p0+k]: fork/unindex
+                # shared blocks in that range, then map blocks up to the
+                # request's own position cap — accepted tokens always fit
+                # under it (the budget mask caps acceptance first), so
+                # drafted positions past it may drop on device, never KV
+                # the request will read
+                self._cow_guard(i, p0, p0 + k + 1)
+                self.alloc.ensure(i, min(
+                    p0 + 1 + k, max(self._slot_poscap[i], p0 + 1), cap_pos))
+            self._sync_tables()
+        nk, _ = self._next_keys(0, self._tick_count)
+        self._tick_count += 1
+        self.state, payload = self._verify_tick(
+            self._exec_params, self.state, jnp.asarray(drafts), nk)
+        payload = np.asarray(jax.device_get(payload))
+        t_host = time.perf_counter()
+        done: List[Request] = []
+        self.scheduler.metrics["spec_ticks"] += 1
+        for i in decode_slots:
+            req = self.slot_req[i]
+            is_done = payload[i, k + 1]
+            n_acc = 0
+            for t in payload[i, :k + 1]:
+                if t < 0:
+                    break
+                n_acc += 1
+                self._slot_pos[i] += 1
+                if req.t_first_token == 0.0:
+                    req.t_first_token = t_host
+                self.scheduler.emit(req, int(t))
+            self.scheduler.metrics["spec_slot_ticks"] += 1
+            self.scheduler.metrics["spec_accepted"] += n_acc
+            if is_done:
+                self.slot_req[i] = None
+                self._release_slot(i)
+                done.append(self.scheduler.retire(req))
+            else:
+                self._maybe_trim(i)
         return done
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
@@ -724,13 +1218,19 @@ class LMServer:
         self.state = resize_serving_state(self.model, self.state, self.cap,
                                           new_slots, keep)
         if self.alloc is not None:
-            self.alloc.remap_slots(keep, new_slots)
+            freed = self.alloc.remap_slots(keep, new_slots)
+            if freed and self.prefix_index is not None:
+                self.prefix_index.evict_blocks(freed)
             self._sync_tables()
         self.slot_req = [self.slot_req[i] for i in keep] + \
             [None] * (new_slots - len(keep))
         self._slot_pos = [self._slot_pos[i] for i in keep] + \
             [0] * (new_slots - len(keep))
         self._slot_budget = [self._slot_budget[i] for i in keep] + \
+            [0] * (new_slots - len(keep))
+        self._slot_poscap = [self._slot_poscap[i] for i in keep] + \
+            [0] * (new_slots - len(keep))
+        self._fork_pending = [self._fork_pending[i] for i in keep] + \
             [0] * (new_slots - len(keep))
         self.n_slots = new_slots
 
@@ -744,7 +1244,14 @@ class LMServer:
             raise RuntimeError(
                 "block pool resize requires cache_layout='paged'")
         from repro.runtime.elastic import resize_block_pool
+        # the allocator renumbers live blocks by compaction order; the
+        # prefix index must follow (shared/indexed blocks keep their
+        # refcounts, only their ids move)
+        old_live = np.sort(np.where(self.alloc.refcount > 0)[0])
         self.state = resize_block_pool(self.state, self.alloc, new_n_blocks)
+        if self.prefix_index is not None:
+            self.prefix_index.remap(
+                {int(b): i for i, b in enumerate(old_live)})
         self._sync_tables()
 
     @property

@@ -1,11 +1,12 @@
 """Block allocator behind the paged KV cache: allocation/free/table
 invariants (unit + hypothesis property tests over random admit/retire
-sequences), slot remapping and elastic pool resize."""
+sequences), refcounted sharing / copy-on-write forks / window trims, slot
+remapping, elastic pool resize, and the hash-chain prefix index."""
 
 import numpy as np
 import pytest
 
-from repro.runtime.paging import BlockAllocator, blocks_for
+from repro.runtime.paging import BlockAllocator, PrefixIndex, blocks_for
 from tests._hypothesis_compat import given, settings, st
 
 
@@ -117,7 +118,7 @@ def test_random_admit_retire_preserves_invariants(ops):
     for slot, n in ops:
         if n == 0:
             freed = a.release(slot)
-            assert freed == blocks_for(lens[slot], 4)
+            assert len(freed) == blocks_for(lens[slot], 4)
             lens[slot] = 0
         else:
             n = max(lens[slot], n)      # ensure() only grows
@@ -153,3 +154,172 @@ def test_alloc_after_retire_reuses_blocks(lengths, retire_every):
             a.release(0)
     a.release(0)
     assert a.free_count == 6
+
+
+# -- refcounted sharing / copy-on-write / trims -------------------------
+
+
+def test_share_bumps_refcounts_and_survives_donor_release():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=2)
+    a.ensure(0, 8)
+    ids = a.slot_blocks(0)
+    a.share(1, ids)
+    a.check_invariants()
+    assert all(a.is_shared(b) for b in ids)
+    freed = a.release(0)
+    assert freed == []                       # the sharer keeps them alive
+    a.check_invariants()
+    assert a.slot_blocks(1) == ids
+    assert sorted(a.release(1)) == sorted(ids)
+    assert a.free_count == 8
+
+
+def test_share_rejects_dead_blocks_and_full_tables():
+    a = BlockAllocator(n_blocks=4, block_size=4, n_slots=2,
+                       max_blocks_per_slot=2)
+    a.ensure(0, 8)
+    with pytest.raises(ValueError, match="dead block"):
+        a.share(1, [3])
+    a.share(1, a.slot_blocks(0))
+    with pytest.raises(ValueError, match="past"):
+        a.share(1, a.slot_blocks(0)[:1])
+
+
+def test_fork_cow_copies_exactly_one_block():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=2)
+    a.ensure(0, 8)
+    ids = a.slot_blocks(0)
+    a.share(1, ids)
+    used0 = a.used_count
+    src, dst = a.fork_cow(1, 0)
+    a.check_invariants()
+    assert a.used_count == used0 + 1         # exactly one new block
+    assert src == ids[0] and dst not in ids
+    assert a.refcount[src] == 1 and a.refcount[dst] == 1
+    assert a.slot_blocks(1) == [dst, ids[1]]
+    assert a.slot_blocks(0) == ids           # the other holder is untouched
+    # private / unmapped blocks need no fork
+    assert a.fork_cow(1, 0) is None
+    assert a.fork_cow(1, 5) is None
+
+
+def test_trim_below_is_refcount_aware():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=2)
+    a.ensure(0, 16)
+    ids = a.slot_blocks(0)
+    a.share(1, ids[:2])
+    # positions < 9 -> logical blocks 0,1 are wholly behind the window;
+    # both are shared, so the trim frees NOTHING
+    freed = a.trim_below(0, 9)
+    a.check_invariants()
+    assert freed == []
+    assert a.slot_blocks(0) == ids[2:]
+    # the second holder's trim drops the last references
+    freed = a.trim_below(1, 9)
+    assert sorted(freed) == sorted(ids[:2])
+    a.check_invariants()
+    # a trimmed slot keeps growing at the tail
+    a.ensure(0, 20)
+    a.check_invariants()
+    assert int(a.lo[0]) == 2 and int(a.n_owned[0]) == 5
+
+
+def test_resize_pool_preserves_shared_refcounts():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=2)
+    a.ensure(0, 8)
+    ids = a.slot_blocks(0)
+    a.share(1, ids)
+    old_ids, new_ids = a.resize_pool(4)
+    a.check_invariants()
+    renum = dict(zip([int(b) for b in old_ids], [int(b) for b in new_ids]))
+    for b in ids:
+        assert int(a.refcount[renum[b]]) == 2
+    assert a.slot_blocks(0) == a.slot_blocks(1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 3),
+                          st.integers(0, 31)),
+                min_size=1, max_size=80))
+def test_share_fork_trim_interleavings_preserve_invariants(ops):
+    """Property: any interleaving of grow/share/fork/trim/release/remap
+    keeps refcounts equal to live table references, never double-frees,
+    and every copy-on-write fork allocates exactly one block."""
+    a = BlockAllocator(n_blocks=24, block_size=4, n_slots=4,
+                       max_blocks_per_slot=8)
+    for op, slot, arg in ops:
+        if op == 0:      # grow
+            need = blocks_for(arg, 4)
+            if need <= 8 and need - int(a.n_owned[slot]) <= a.free_count:
+                a.ensure(slot, arg)
+        elif op == 1:    # share a donor's blocks into an empty slot
+            donor = arg % 4
+            blocks = a.slot_blocks(donor)
+            if donor != slot and int(a.n_owned[slot]) == 0 and blocks:
+                a.share(slot, blocks[: arg % len(blocks) + 1])
+        elif op == 2:    # copy-on-write fork of one mapped logical block
+            lo, hi = int(a.lo[slot]), int(a.n_owned[slot])
+            if hi > lo and a.free_count > 0:
+                used0 = a.used_count
+                r = a.fork_cow(slot, lo + arg % (hi - lo))
+                if r is not None:
+                    assert a.used_count == used0 + 1
+                    assert a.refcount[r[1]] == 1
+        elif op == 3:    # trim behind a sliding window
+            a.trim_below(slot, arg)
+        elif op == 4:    # release
+            a.release(slot)
+        else:            # identity remap still rewrites every row
+            assert a.remap_slots(list(range(4)), 4) == []
+        a.check_invariants()
+    for s in range(4):
+        a.release(s)
+    a.check_invariants()
+    assert a.free_count == 24
+
+
+# -- hash-chain prefix index --------------------------------------------
+
+
+def test_prefix_index_chain_match_and_divergence():
+    ix = PrefixIndex(4)
+    p = np.arange(12, dtype=np.int32)
+    ix.insert_chain(p, [5, 6, 7])
+    assert ix.match(p) == [5, 6, 7]
+    assert ix.match(p[:11]) == [5, 6]        # partial final block ignored
+    q = p.copy()
+    q[5] = 99                                # diverges inside block 1
+    assert ix.match(q) == [5]
+    assert ix.match(np.arange(100, 104, dtype=np.int32)) == []
+
+
+def test_prefix_index_keys_are_chained_not_per_block():
+    ix = PrefixIndex(4)
+    a_ = np.array([1, 2, 3, 4, 9, 9, 9, 9], np.int32)
+    b_ = np.array([5, 6, 7, 8, 9, 9, 9, 9], np.int32)
+    ix.insert_chain(a_, [0, 1])
+    # identical second-block TOKENS after a different first block: the
+    # chained key differs, so nothing matches
+    assert ix.match(b_) == []
+
+
+def test_prefix_index_first_insert_wins_and_eviction():
+    ix = PrefixIndex(4)
+    p = np.arange(8, dtype=np.int32)
+    ix.insert_chain(p, [0, 1])
+    ix.insert_chain(p, [2, 3])               # duplicate content: keep 0,1
+    assert ix.match(p) == [0, 1]
+    assert len(ix) == 2
+    ix.evict_blocks([0])
+    assert ix.match(p) == []                 # chain broken at block 0
+    assert not ix.contains_block(0) and ix.contains_block(1)
+
+
+def test_prefix_index_remap_follows_pool_resize():
+    ix = PrefixIndex(4)
+    p = np.arange(8, dtype=np.int32)
+    ix.insert_chain(p, [4, 6])
+    ix.remap({4: 0, 6: 1})
+    assert ix.match(p) == [0, 1]
+    ix.remap({0: 0})                         # block 1 freed by the resize
+    assert ix.match(p) == [0] and len(ix) == 1

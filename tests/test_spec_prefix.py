@@ -1,0 +1,242 @@
+"""Prefix-sharing KV cache + speculative decoding over the paged engine:
+token-exact parity vs the dense engine and the per-slot oracle (all 4
+model families), full-prefix-hit admission (no prefill, TTFT stamped at
+first-token host materialization), copy-on-write isolation between
+sharers, sliding-window block trims mid-flight, and error-corrected RRNS
+serving (exact parity at high SNR across differing noise streams,
+per-seed determinism at low SNR)."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import get_policy
+from repro.models import build_model
+from repro.models.lm import LMCallOptions
+from repro.runtime.server import LMServer, PerSlotLMServer, Request
+
+FAMILIES = ["qwen2-0.5b", "mixtral-8x7b", "mamba2-2.7b", "zamba2-2.7b"]
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg, get_policy("mirage"),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _shared_requests(cfg, n, prefix_len, total_len, max_tokens=4, seed=3):
+    """n prompts sharing their first ``prefix_len`` tokens."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size,
+                            total_len - prefix_len).astype(np.int32)
+        out.append(Request(rid=i, prompt=np.concatenate([prefix, tail]),
+                           max_tokens=max_tokens))
+    return out
+
+
+def _drain(server, reqs):
+    for r in reqs:
+        server.submit(r)
+    out = {r.rid: r.tokens_out for r in server.run_until_drained()}
+    if server.alloc is not None:
+        server.alloc.check_invariants()
+        assert server.alloc.used_count == 0
+    return out
+
+
+# --------------------------------------------------------------------------
+# parity: prefix-shared / speculative / both vs dense vs oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_prefix_and_spec_token_exact_across_families(arch):
+    """The acceptance gate: greedy decode with prefix sharing, with
+    speculative decoding, and with both at once emits exactly the dense
+    engine's (and the per-slot oracle's) tokens for every family —
+    attention, MoE+SWA, pure SSM (prefix inert, spec via the scanned
+    recurrence) and the hybrid."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, get_policy("mirage"),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    mk = lambda: _shared_requests(cfg, 4, 8, 12, max_tokens=4)
+    run = lambda **kw: LMServer(model, params, cap=24, batch_slots=2, **kw)
+
+    dense = _drain(run(), mk())
+    oracle = PerSlotLMServer(model, params, cap=24, batch_slots=2)
+    for r in mk():
+        oracle.submit(r)
+    orc = {r.rid: r.tokens_out for r in oracle.run_until_drained()}
+
+    sp = run(cache_layout="paged", block_size=4, prefix_cache=True)
+    pref = _drain(sp, mk())
+    sv = run(cache_layout="paged", block_size=4, spec_k=3)
+    spec = _drain(sv, mk())
+    both = _drain(run(cache_layout="paged", block_size=4, prefix_cache=True,
+                      spec_k=3), mk())
+
+    assert dense == orc and len(dense) == 4
+    assert pref == dense and spec == dense and both == dense
+    if model.kind != "mamba":
+        # the 8-token shared prefix = 2 full blocks actually got shared
+        assert sp.metrics["prefix_hits"] >= 1
+        assert sp.metrics["prefix_shared_blocks"] >= 2
+    assert sv.metrics["spec_ticks"] >= 1
+    assert sv.metrics["spec_accepted"] >= sv.metrics["spec_slot_ticks"]
+
+
+def test_prefix_spec_compose_with_chunked_prefill(served):
+    """All three serving features at once: chunked prefill resumes AFTER
+    the shared prefix, full hits skip the chunk queue, and verify ticks
+    leave mid-prefill slots frozen — still token-identical to dense."""
+    cfg, model, params = served
+    mk = lambda: _shared_requests(cfg, 5, 8, 13, max_tokens=5, seed=6)
+    dense = _drain(LMServer(model, params, cap=32, batch_slots=2), mk())
+    s = LMServer(model, params, cap=32, batch_slots=2, cache_layout="paged",
+                 block_size=4, prefill_chunk=4, prefix_cache=True, spec_k=3)
+    assert _drain(s, mk()) == dense
+    assert s.metrics["prefix_hits"] >= 1
+
+
+# --------------------------------------------------------------------------
+# full-prefix hit: no prefill, TTFT stamped at first-token materialization
+# --------------------------------------------------------------------------
+
+def test_full_prefix_hit_skips_prefill_and_stamps_ttft(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=2,
+                      cache_layout="paged", block_size=4, prefix_cache=True)
+    prompt = (np.arange(12) % cfg.vocab_size).astype(np.int32)
+    r0 = Request(rid=0, prompt=prompt.copy(), max_tokens=6)
+    r1 = Request(rid=1, prompt=prompt.copy(), max_tokens=6)
+    server.submit(r0)
+    server.tick()
+    prefills_before = server.metrics["prefill_batches"]
+    server.submit(r1)
+    server.tick()
+    # r1's whole prompt minus its last token was in shared blocks: admitted
+    # with NO prefill, its first token comes from the decode tick, and TTFT
+    # is stamped at that token's host materialization — not at admission
+    assert server.metrics["prefix_full_hits"] == 1
+    assert len(r1.tokens_out) == 1
+    assert r1.t_first_token >= r1.t_admit > 0
+    done = {r.rid: r for r in server.run_until_drained()}
+    assert len(done) == 2
+    # identical prompts under greedy -> identical continuations
+    assert done[0].tokens_out == done[1].tokens_out
+    server.alloc.check_invariants()
+    assert server.alloc.used_count == 0
+
+
+def test_cow_fork_isolates_sharers(served):
+    """Two requests sharing a prefix diverge after it; each must emit the
+    same tokens as when served alone (a sharer's decode writes must never
+    leak into the other's blocks)."""
+    cfg, model, params = served
+    mk = lambda: _shared_requests(cfg, 2, 8, 12, max_tokens=6, seed=11)
+    solo = {}
+    for r in mk():
+        solo.update(_drain(LMServer(model, params, cap=24, batch_slots=1),
+                           [r]))
+    shared = _drain(LMServer(model, params, cap=24, batch_slots=2,
+                             cache_layout="paged", block_size=4,
+                             prefix_cache=True), mk())
+    assert shared == solo
+
+
+# --------------------------------------------------------------------------
+# sliding-window trims
+# --------------------------------------------------------------------------
+
+def test_swa_trim_frees_behind_window_blocks():
+    """Mid-flight, an SWA slot's blocks wholly behind the attention window
+    are returned to the pool (the validity mask already hides them) — and
+    the stream still emits exactly the dense engine's tokens."""
+    cfg = get_config("mixtral-8x7b").reduced()   # sliding_window = 32
+    model = build_model(cfg, get_policy("mirage"),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    mk = lambda: _shared_requests(cfg, 1, 4, 8, max_tokens=34, seed=7)
+
+    def run(**kw):
+        server = LMServer(model, params, cap=48, batch_slots=1, **kw)
+        [r] = mk()
+        server.submit(r)
+        trimmed = 0
+        for _ in range(200):
+            if not server.scheduler.waiting and server.slot_req[0] is None:
+                break
+            server.tick()
+            if server.alloc is not None:
+                trimmed = max(trimmed, int(server.alloc.lo[0]))
+        return server, r.tokens_out, trimmed
+
+    _, dense, _ = run()
+    s, paged, trimmed = run(cache_layout="paged", block_size=4)
+    assert paged == dense and len(dense) == 34
+    assert trimmed >= 2                 # blocks actually freed mid-flight
+    s.alloc.check_invariants()
+    assert s.alloc.used_count == 0
+
+
+# --------------------------------------------------------------------------
+# error-corrected RRNS serving
+# --------------------------------------------------------------------------
+
+def test_rrns_high_snr_exact_parity_across_noise_streams():
+    """At high SNR the RRNS correction is exact, so engines drawing from
+    DIFFERENT noise-key streams (prefix admission uses the chunk stream;
+    spec verify advances the tick stream once per k+1 tokens) still emit
+    bit-identical greedy tokens."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    policy = get_policy("mirage_rrns", snr_db=60.0, noise_seed=7)
+    model = build_model(cfg, policy, LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    mk = lambda: _shared_requests(cfg, 3, 8, 12, max_tokens=4, seed=5)
+    run = lambda **kw: _drain(
+        LMServer(model, params, cap=24, batch_slots=2, **kw), mk())
+    dense = run()
+    assert run(cache_layout="paged", block_size=4,
+               prefix_cache=True) == dense
+    assert run(cache_layout="paged", block_size=4, spec_k=3) == dense
+
+
+def test_rrns_low_snr_per_seed_determinism():
+    """At serving SNR the guarantee is per-seed determinism: the same
+    noise_seed replays the identical token stream, prefix-shared and
+    speculative alike."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    policy = get_policy("mirage_rrns", snr_db=28.0, noise_seed=9)
+    model = build_model(cfg, policy, LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    mk = lambda: _shared_requests(cfg, 3, 8, 12, max_tokens=4, seed=8)
+    run = lambda **kw: _drain(
+        LMServer(model, params, cap=24, batch_slots=2, cache_layout="paged",
+                 block_size=4, **kw), mk())
+    assert run(prefix_cache=True) == run(prefix_cache=True)
+    assert run(spec_k=3) == run(spec_k=3)
+
+
+# --------------------------------------------------------------------------
+# knob validation
+# --------------------------------------------------------------------------
+
+def test_flag_validation(served):
+    cfg, model, params = served
+    with pytest.raises(ValueError, match="prefix_cache"):
+        LMServer(model, params, cap=24, batch_slots=2, prefix_cache=True)
+    with pytest.raises(ValueError, match="spec_k"):
+        LMServer(model, params, cap=24, batch_slots=2, spec_k=3)
+    with pytest.raises(ValueError, match="greedy"):
+        LMServer(model, params, cap=24, batch_slots=2, cache_layout="paged",
+                 spec_k=3, greedy=False)
+    with pytest.raises(ValueError, match="spec_k"):
+        LMServer(model, params, cap=24, batch_slots=2, cache_layout="paged",
+                 spec_k=-1)
