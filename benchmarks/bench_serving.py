@@ -151,6 +151,10 @@ def load_sweep(print_fn=print, arch: str = "qwen2-0.5b",
                  f"{lat['ttft_mean_s'] * 1e3:.2f},mean")
         print_fn(f"serving_load,rate{rate:g}_tpot_ms,"
                  f"{lat['tpot_mean_s'] * 1e3:.2f},mean")
+        for m in ("ttft", "tpot"):
+            for q in ("p50", "p95", "p99"):
+                print_fn(f"serving_load,rate{rate:g}_{m}_{q}_ms,"
+                         f"{lat[f'{m}_{q}_s'] * 1e3:.2f},{q}")
         print_fn(f"serving_load,rate{rate:g}_queue_ms,"
                  f"{lat['queue_mean_s'] * 1e3:.2f},mean")
 
@@ -414,6 +418,173 @@ def spec_sweep(print_fn=print, arch: str = "qwen2-0.5b",
     return results
 
 
+def obs_sweep(print_fn=print, arch: str = "qwen2-0.5b", slots: int = 4,
+              prompt_len: int = 12, max_tokens: int = 12,
+              n_requests: int = 8, repeats: int = 3,
+              snr_db: float = 12.0, noise_seed: int = 7,
+              enforce: bool = True):
+    """Observability overhead + analog-health correctness.
+
+    Overhead is measured PAIRED: the uninstrumented and fully instrumented
+    engines (tracer, registry snapshot per drain, health accumulators) are
+    built up front, then drained in adjacent off/on pairs and the overhead
+    is the median of the PAIRWISE deltas. The box's run-to-run drift is
+    several percent — larger than the gate — so only adjacent-pair
+    comparisons are meaningful.
+
+    Two policies, two bounds:
+
+      * ``mirage`` (the default production serving path): instrumentation
+        is the span tracer + metrics registry + health plumbing (a
+        deterministic backend has no record sites). Gate: < 2% overhead.
+      * ``mirage_rrns`` at low SNR (the worst case): instrumentation
+        additionally keeps exact fault-count reductions live next to every
+        GEMM's RRNS decode (~hundreds per tick). On the interpret-mode CPU
+        box each live reduction is ~µs of dispatch against a ~0.3 ms
+        GEMM+decode, so exact counting costs ~5-10% HERE; on real hardware
+        the same per-GEMM scalar sums are noise against the GEMM
+        arithmetic. Bound: < 15%, a regression tripwire (e.g. recording an
+        unreduced tensor), not a production gate.
+
+    Correctness (always asserted — these are deterministic):
+
+      * low-SNR run reports NONZERO corrected residue faults;
+      * the clean run (``snr_db=None``) reports exactly zero for both
+        corrected and uncorrected;
+      * both instrumented engines emit token-identical output to their
+        uninstrumented twins (same noise streams — the counters observe
+        the channel, they never perturb it).
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.precision import get_policy
+    from repro.models import build_model
+    from repro.models.lm import LMCallOptions
+    from repro.obs import trace as obs_trace
+    from repro.runtime.server import LMServer
+
+    cfg = get_config(arch).reduced()
+    opts = LMCallOptions(q_chunk=32, kv_chunk=32)
+    cap = prompt_len + max_tokens + 4
+
+    def paired(policy, n_req):
+        """Adjacent off/on drain pairs; returns medians + pairwise
+        overhead + last-drain tokens + the instrumented server.
+
+        ``n_req`` sizes the drain per policy: the deterministic engine is
+        several times faster than the RRNS one, and fixed per-drain costs
+        (the registry snapshot ≈ one Prometheus scrape, which production
+        scrapes at O(10 s) cadence, not per 0.1 s) must amortize over
+        comparable wall time to weigh them honestly."""
+        model = build_model(cfg, policy, opts)
+        params = model.init(jax.random.PRNGKey(0))
+        servers, rates, tokens = {}, {"off": [], "on": []}, {}
+        overheads = []
+        try:
+            for label, inst in (("off", False), ("on", True)):
+                obs_trace.configure(enabled=inst)
+                servers[label] = LMServer(model, params, cap=cap,
+                                          batch_slots=slots, instrument=inst)
+                _drain(servers[label], _requests(cfg, slots, prompt_len,
+                                                 max_tokens))      # warm jits
+            for _ in range(repeats):
+                for label, inst in (("off", False), ("on", True)):
+                    obs_trace.configure(enabled=inst)
+                    toks, dt, fin = _drain(
+                        servers[label],
+                        _requests(cfg, n_req, prompt_len, max_tokens))
+                    rates[label].append(toks / dt)
+                    tokens[label] = {r.rid: list(r.tokens_out) for r in fin}
+                    if inst:
+                        # the ONE host transfer per snapshot is part of the
+                        # instrumented cost — charge it inside the pair
+                        servers[label].scheduler.registry.snapshot()
+                overheads.append((rates["off"][-1] - rates["on"][-1])
+                                 / max(rates["off"][-1], 1e-9) * 100.0)
+        finally:
+            obs_trace.configure(enabled=False)
+        if tokens["on"] != tokens["off"]:
+            raise RuntimeError(
+                f"instrumentation changed the served tokens under "
+                f"{policy.mode} — counters and spans must observe the "
+                f"engine, never perturb it")
+        return (float(np.median(rates["off"])),
+                float(np.median(rates["on"])),
+                float(np.median(overheads)), servers["on"])
+
+    print_fn(f"# observability: {arch} slots={slots} requests={n_requests} "
+             f"pairs={repeats} (paired off/on drains)")
+    results = {}
+
+    # production path: deterministic backend, tracer + metrics only (4x
+    # the requests — see paired() on equalizing drain wall time)
+    off, on, overhead, _ = paired(get_policy("mirage"), n_requests * 4)
+    results["obs_off_tok_s"] = off
+    results["obs_on_tok_s"] = on
+    results["obs_overhead_pct"] = overhead
+    print_fn(f"serving_obs,decode_tok_s_obs_off,{off:.2f},policy=mirage")
+    print_fn(f"serving_obs,decode_tok_s_obs_on,{on:.2f},policy=mirage")
+    print_fn(f"serving_obs,overhead_pct,{overhead:.2f},gate_lt_2pct")
+
+    # worst case: RRNS fault counters live in every decode
+    noisy = get_policy("mirage_rrns", snr_db=snr_db, noise_seed=noise_seed)
+    off_r, on_r, overhead_r, server_on = paired(noisy, n_requests)
+    health_on = server_on.health_snapshot()
+    results["rrns_obs_off_tok_s"] = off_r
+    results["rrns_obs_on_tok_s"] = on_r
+    results["rrns_health_overhead_pct"] = overhead_r
+    results["token_parity"] = True          # paired() raised otherwise
+    print_fn(f"serving_obs,rrns_decode_tok_s_obs_off,{off_r:.2f},"
+             f"snr_db={snr_db:g}")
+    print_fn(f"serving_obs,rrns_decode_tok_s_obs_on,{on_r:.2f},"
+             f"snr_db={snr_db:g}")
+    print_fn(f"serving_obs,rrns_health_overhead_pct,{overhead_r:.2f},"
+             f"bound_lt_15pct")
+    print_fn(f"serving_obs,token_parity,1,instrumented_vs_uninstrumented")
+
+    results["rrns_corrected_low_snr"] = health_on.get("rrns_corrected", 0)
+    results["rrns_uncorrected_low_snr"] = health_on.get("rrns_uncorrected", 0)
+    print_fn(f"serving_obs,rrns_corrected_low_snr,"
+             f"{results['rrns_corrected_low_snr']},snr_db={snr_db:g}")
+    print_fn(f"serving_obs,rrns_uncorrected_low_snr,"
+             f"{results['rrns_uncorrected_low_snr']},snr_db={snr_db:g}")
+    if results["rrns_corrected_low_snr"] <= 0:
+        raise RuntimeError(
+            f"RRNS serving at snr_db={snr_db:g} reported zero corrected "
+            f"residue faults — the health counters are not wired through "
+            f"the decode step")
+
+    # clean channel: decode still votes, counters must stay exactly zero
+    clean = get_policy("mirage_rrns")
+    model_c = build_model(cfg, clean, opts)
+    server = LMServer(model_c, model_c.init(jax.random.PRNGKey(0)),
+                      cap=cap, batch_slots=slots)
+    _drain(server, _requests(cfg, slots, prompt_len, min(max_tokens, 4)))
+    health_c = server.health_snapshot()
+    results["rrns_corrected_clean"] = health_c.get("rrns_corrected", 0)
+    results["rrns_uncorrected_clean"] = health_c.get("rrns_uncorrected", 0)
+    print_fn(f"serving_obs,rrns_corrected_clean,"
+             f"{results['rrns_corrected_clean']},snr_db=None")
+    if any(v != 0 for v in health_c.values()):
+        raise RuntimeError(
+            f"clean-channel RRNS serving reported nonzero analog-health "
+            f"counters: {health_c}")
+
+    if enforce and overhead >= 2.0:
+        raise RuntimeError(
+            f"observability overhead regressed past the 2% acceptance gate "
+            f"on the production serving path: {overhead:.2f}% (instrumented "
+            f"{on:.2f} tok/s vs uninstrumented {off:.2f} tok/s)")
+    if enforce and overhead_r >= 15.0:
+        raise RuntimeError(
+            f"RRNS analog-health counter overhead regressed past the 15% "
+            f"bound: {overhead_r:.2f}% (instrumented {on_r:.2f} tok/s vs "
+            f"uninstrumented {off_r:.2f} tok/s) — is something recording "
+            f"an unreduced tensor per GEMM?")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -431,6 +602,10 @@ def main(argv=None):
                     help="skip the prefix-caching sweep")
     ap.add_argument("--skip-spec", action="store_true",
                     help="skip the speculative-decoding sweep")
+    ap.add_argument("--skip-obs", action="store_true",
+                    help="skip the observability overhead/health sweep")
+    ap.add_argument("--obs-snr-db", type=float, default=12.0,
+                    help="detector SNR for the observability health check")
     ap.add_argument("--spec-ks", type=int, nargs="+", default=[0, 2, 4])
     ap.add_argument("--overlaps", type=float, nargs="+",
                     default=[0.0, 0.5, 0.9])
@@ -501,6 +676,24 @@ def main(argv=None):
         if acc:
             print(f"# speculative decoding accepts {acc:.2f} tokens/tick "
                   f"at k={k_top} (token-identical to greedy)")
+    if not args.skip_obs:
+        # --quick keeps the (wall-clock-noisy) overhead gates
+        # informational; the full run enforces them
+        obs = obs_sweep(writer, arch=args.arch,
+                        slots=max(args.slots),
+                        prompt_len=args.prompt_len,
+                        max_tokens=(6 if args.quick else args.max_tokens),
+                        n_requests=(4 if args.quick else
+                                    max(args.slots) * args.requests_per_slot),
+                        repeats=3, snr_db=args.obs_snr_db,
+                        enforce=not args.quick)
+        print(f"# observability overhead {obs['obs_overhead_pct']:+.2f}% "
+              f"on the production path (gate < 2%), "
+              f"{obs['rrns_health_overhead_pct']:+.2f}% with RRNS fault "
+              f"counters (bound < 15%); {obs['rrns_corrected_low_snr']} "
+              f"corrected residue faults at {args.obs_snr_db:g} dB, 0 on "
+              f"the clean channel, tokens identical to the uninstrumented "
+              f"engine")
     if args.json:
         writer.write_json(args.json, argv=list(argv or sys.argv[1:]),
                           elapsed_s=round(time.time() - t0, 2))

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analog import device
+from repro.obs import health as obs_health
 
 
 def detector_sigma_levels(m: int, snr_db: float) -> float:
@@ -206,6 +207,8 @@ def burst_errors(residues: jax.Array, moduli: Sequence[int], rate: float,
     n = len(moduli)
     k_hit, k_pos, k_err = jax.random.split(key, 3)
     hit = jax.random.uniform(k_hit, residues.shape[1:]) < rate
+    if obs_health.active():
+        obs_health.record("burst_hits", jnp.sum(hit.astype(jnp.int32)))
     start = jax.random.randint(k_pos, residues.shape[1:], 0, n)
     outs = []
     for i, m in enumerate(moduli):
@@ -223,8 +226,16 @@ def apply_program_channel(residues: jax.Array, moduli: Sequence[int],
     """Program-side chain on the stationary operand: DAC -> shifter drift."""
     out = converter_quantize(residues, moduli, cfg.dac_bits)
     if cfg.phase_drift_sigma > 0:
-        out = phase_noise(out, moduli,
-                          (cfg.phase_drift_sigma,) * len(moduli), key)
+        drifted = phase_noise(out, moduli,
+                              (cfg.phase_drift_sigma,) * len(moduli), key)
+        if obs_health.active():
+            # per-channel count of residues the drift moved >= 1 level
+            # (zero under stationary weights: programming happens once at
+            # admission, outside any collection scope)
+            obs_health.record("drift_flips", jnp.sum(
+                (drifted != out).astype(jnp.int32),
+                axis=tuple(range(1, out.ndim))))
+        out = drifted
     return out
 
 
@@ -236,5 +247,13 @@ def apply_readout_channel(residues: jax.Array, moduli: Sequence[int],
     out = crosstalk_mix(residues, moduli, cfg.crosstalk, group_axis)
     sigmas = cfg.detector_sigmas(moduli)
     if any(s > 0 for s in sigmas):
-        out = phase_noise(out, moduli, sigmas, key)
+        noisy = phase_noise(out, moduli, sigmas, key)
+        if obs_health.active():
+            # per-channel count of residues the detector noise moved >= 1
+            # phase level this step (what the RRNS decode then has to
+            # correct — the two counters together give correction margin)
+            obs_health.record("detector_flips", jnp.sum(
+                (noisy != out).astype(jnp.int32),
+                axis=tuple(range(1, out.ndim))))
+        out = noisy
     return converter_quantize(out, moduli, cfg.adc_bits)

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rns
+from repro.obs import health as obs_health
 
 
 def default_redundant_moduli(k: int, r: int = 2) -> Tuple[int, ...]:
@@ -295,6 +296,20 @@ def rrns_decode(residues: jax.Array,
     zero = jnp.zeros((), best_val.dtype)
     decoded = jnp.where(any_legal, best_val, zero).astype(jnp.int32)
     corrected = jnp.where(any_legal, best_votes < float(S), True)
+    if obs_health.active():
+        # split the conflated flag for telemetry: repaired (a legal value
+        # won with dissent) vs unrepairable (no legal reconstruction —
+        # the output clamps to 0). Guarded: without an open collection
+        # scope these reductions are never traced. One fused reduction
+        # (cheaper than two chains in the op-dispatch-bound decode step):
+        # vot >= S implies legal, so legal - full_agreement = repaired and
+        # size - legal = unrepairable.
+        n = jnp.sum(jnp.stack([best_votes >= 0.0, best_votes >= float(S)])
+                    .astype(jnp.int32),
+                    axis=tuple(range(1, best_votes.ndim + 1)))
+        obs_health.record("rrns_corrected", n[0] - n[1])
+        obs_health.record("rrns_uncorrected",
+                          jnp.int32(best_votes.size) - n[0])
     return decoded, corrected
 
 
@@ -335,4 +350,9 @@ def rrns_decode_reference(residues: jax.Array,
     any_legal = jnp.any(legal, axis=0)
     decoded = jnp.where(any_legal, decoded, 0)
     corrected = jnp.where(any_legal, max_votes < S, True)
+    if obs_health.active():
+        obs_health.record("rrns_corrected", jnp.sum(
+            (any_legal & (max_votes < S)).astype(jnp.int32)))
+        obs_health.record("rrns_uncorrected",
+                          jnp.sum((~any_legal).astype(jnp.int32)))
     return decoded, corrected

@@ -60,6 +60,7 @@ from repro.analog import channel, rrns
 from repro.core import rns, stationary
 from repro.core.backends import grouped
 from repro.core.backends.base import register_fn
+from repro.obs import health as obs_health
 
 
 def _dims_tag(shapes) -> int:
@@ -150,6 +151,16 @@ def _analog_forward(x, w, policy, key, correct: bool, reference: bool = False):
             sig_col = jnp.asarray(sig, jnp.float32).reshape(-1, 1, 1, 1)
             noise = jax.random.normal(
                 k_det, (len(moduli), G, M, N)) * sig_col
+            if obs_health.active():
+                # the detector noise is applied INSIDE the kernel epilogue,
+                # so count flips from the pre-sampled draw: residues are
+                # integers, hence round(res + n) != res (mod m) exactly
+                # when round(n) % m != 0 — identical to the jnp path's
+                # after-vs-before count
+                mods = jnp.asarray(moduli, jnp.float32).reshape(-1, 1, 1, 1)
+                obs_health.record("detector_flips", jnp.sum(
+                    (jnp.mod(jnp.round(noise), mods) != 0).astype(jnp.int32),
+                    axis=(1, 2, 3)))
             res = kops.rns_group_matmul_channel(
                 xr, wr, moduli, noise, adc_bits=cfg.adc_bits,
                 interpret=policy.interpret)

@@ -43,6 +43,8 @@ import jax.numpy as jnp
 
 from repro.core import backends, bfp, stationary
 from repro.core.precision import MiragePolicy
+from repro.obs import health as obs_health
+from repro.obs import trace as obs_trace
 
 
 # --------------------------------------------------------------------------
@@ -141,7 +143,13 @@ def _forward_impl(x: jax.Array, w: jax.Array, policy: MiragePolicy,
             f"weight, or run an RNS-family mode")
     if key is None and backend.supports_noise:
         key = _ambient_subkey()
-    return backend.forward(x, w, policy, key=key)
+    # span around the dispatch: inside jit this runs at TRACE time, so the
+    # host duration is compile/dispatch cost — the value is the
+    # jax.profiler.TraceAnnotation it opens when the tracer has
+    # annotate=True, which names the backend's device ops in a profiler
+    # capture (launch/serve.py --profile-window)
+    with obs_trace.get_tracer().span(f"gemm.{policy.mode}"):
+        return backend.forward(x, w, policy, key=key)
 
 
 # --------------------------------------------------------------------------
@@ -194,3 +202,18 @@ def mirage_matmul_nograd(x, w, policy: MiragePolicy,
     per decode tick), stochastic backends draw a per-call subkey from it.
     """
     return _forward_impl(x, w, policy, key=key)
+
+
+def mirage_matmul_auto(x, w, policy: MiragePolicy) -> jax.Array:
+    """:func:`mirage_matmul`, except under an open analog-health scope.
+
+    ``custom_vjp`` traces its primal in a sub-trace whose intermediates
+    cannot legally reach the enclosing scope, so health records made inside
+    the differentiable op would leak. Health scopes are only opened by the
+    serving engine's forward-only steps (``repro.obs.health``), where the
+    custom backward is dead weight anyway — dispatch straight to the
+    forward impl there. Model GEMM call sites shared between training and
+    serving route through this."""
+    if obs_health.active():
+        return _forward_impl(x, w, policy)
+    return mirage_matmul(x, w, policy)

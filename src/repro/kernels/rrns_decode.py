@@ -29,6 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.obs import health as obs_health
+
 
 def _decode_kernel(wrow_ref, sub_ref, minv_ref, res_ref, dec_ref, vot_ref,
                    *, n_total: int, n_required: int, psi: float,
@@ -119,6 +121,18 @@ def _decode_flat(res_flat: jax.Array, tables, block_e: int,
     any_legal = vot >= 0.0
     decoded = jnp.where(any_legal, dec, 0.0).astype(jnp.int32)
     corrected = jnp.where(any_legal, vot < float(S), True)
+    if obs_health.active():
+        # same repaired/unrepairable split as rrns.rrns_decode, recorded
+        # here because the kernel epilogue is the only place the vote
+        # counts still exist. One fused reduction (vot >= S implies legal,
+        # so legal - full_agreement = repaired and E - legal =
+        # unrepairable): these sums stay live in the decode hot path and
+        # cost ~6% of decode throughput on the op-dispatch-bound
+        # interpret-mode box — see the bench_serving obs_sweep notes.
+        n = jnp.sum(jnp.stack([vot >= 0.0, vot >= float(S)])
+                    .astype(jnp.int32), axis=1)
+        obs_health.record("rrns_corrected", n[0] - n[1])
+        obs_health.record("rrns_uncorrected", jnp.int32(E) - n[0])
     return decoded, corrected
 
 

@@ -17,11 +17,22 @@ only; ``--shared-prefix N`` makes the synthetic prompts actually share
 their first N tokens so hits occur); ``--spec-k K`` self-drafts K tokens
 per tick and verifies them in one jitted step (paged + greedy only,
 token-identical to plain greedy decode).
+
+Observability: ``--metrics-port P`` serves the engine's metrics registry
+over HTTP (``/metrics`` Prometheus text, ``/metrics.json`` snapshot,
+``/trace`` Chrome trace; port 0 picks a free one); ``--trace-export F``
+enables the span tracer and writes a Chrome-trace JSON (load in
+chrome://tracing or Perfetto) at exit; ``--profile-window DIR`` wraps the
+run in a ``jax.profiler`` capture with GEMM-dispatch annotations;
+``--metrics-dump F`` writes the final registry snapshot as JSON (the CI
+artifact).
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
 import time
 
 import jax
@@ -31,6 +42,8 @@ from repro.configs import get_config
 from repro.core.precision import get_policy
 from repro.models import build_model
 from repro.models.lm import LMCallOptions
+from repro.obs import trace as obs_trace
+from repro.obs.http import MetricsServer
 from repro.runtime.server import LMServer, PerSlotLMServer, Request
 
 
@@ -72,6 +85,17 @@ def main(argv=None):
                     help="base seed for per-tick analog noise")
     ap.add_argument("--sample", action="store_true",
                     help="categorical sampling instead of greedy argmax")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus), /metrics.json and "
+                         "/trace over HTTP on this port (0 = pick free)")
+    ap.add_argument("--trace-export", default=None, metavar="FILE",
+                    help="enable the span tracer and write Chrome-trace "
+                         "JSON here at exit")
+    ap.add_argument("--profile-window", default=None, metavar="LOGDIR",
+                    help="capture a jax.profiler trace of the whole run "
+                         "into this directory")
+    ap.add_argument("--metrics-dump", default=None, metavar="FILE",
+                    help="write the final metrics snapshot as JSON")
     args = ap.parse_args(argv)
     if args.engine == "oracle" and args.sample:
         ap.error("--sample needs the batched engine (the per-slot oracle "
@@ -107,6 +131,19 @@ def main(argv=None):
     else:
         server = PerSlotLMServer(model, params, cap=cap,
                                  batch_slots=args.slots)
+    if args.trace_export:
+        obs_trace.configure(enabled=True)
+    tracer = obs_trace.get_tracer()
+    http_srv = None
+    if args.metrics_port is not None:
+        registry = getattr(server, "scheduler", None)
+        registry = registry.registry if registry is not None else None
+        http_srv = MetricsServer(port=args.metrics_port, registry=registry,
+                                 tracer=tracer)
+        http_srv.start()
+        print(f"metrics at {http_srv.url}/metrics (json: /metrics.json, "
+              f"trace: /trace)")
+
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab_size,
                           min(args.shared_prefix,
@@ -119,7 +156,10 @@ def main(argv=None):
             rid=rid,
             prompt=np.concatenate([shared, tail]),
             max_tokens=args.max_tokens))
-    finished = server.run_until_drained()
+    profile_cm = (obs_trace.profile_window(args.profile_window, tracer)
+                  if args.profile_window else contextlib.nullcontext())
+    with profile_cm:
+        finished = server.run_until_drained()
     dt = time.perf_counter() - t0
     tot_toks = sum(len(r.tokens_out) for r in finished)
     ttfts = [r.t_first_token - r.t_enqueue for r in finished]
@@ -142,8 +182,36 @@ def main(argv=None):
         print(f"  speculative k={args.spec_k}: {m['spec_accepted']} tokens "
               f"accepted over {m['spec_slot_ticks']} slot-ticks "
               f"({per:.2f}/tick)")
+    if getattr(server, "scheduler", None) is not None:
+        lat = server.scheduler.latency_summary()
+        print(f"  TTFT p50/p95/p99: {lat['ttft_p50_s']*1e3:.1f}/"
+              f"{lat['ttft_p95_s']*1e3:.1f}/{lat['ttft_p99_s']*1e3:.1f}ms; "
+              f"TPOT p50/p95/p99: {lat['tpot_p50_s']*1e3:.1f}/"
+              f"{lat['tpot_p95_s']*1e3:.1f}/{lat['tpot_p99_s']*1e3:.1f}ms")
+        health = server.health_snapshot()
+        if health:
+            print(f"  analog health: {health}")
     for r in finished[:3]:
         print(f"  req {r.rid}: {r.tokens_out[:8]}...")
+
+    if http_srv is not None:
+        # self-scrape: prove the exposition endpoint round-trips before exit
+        import urllib.request
+        with urllib.request.urlopen(f"{http_srv.url}/metrics",
+                                    timeout=5) as resp:
+            n_series = sum(1 for ln in resp.read().decode().splitlines()
+                           if ln and not ln.startswith("#"))
+        print(f"  scraped {n_series} series from {http_srv.url}/metrics")
+    if args.metrics_dump and getattr(server, "scheduler", None) is not None:
+        with open(args.metrics_dump, "w") as f:
+            json.dump(server.scheduler.registry.snapshot(), f, indent=2)
+        print(f"  metrics snapshot -> {args.metrics_dump}")
+    if args.trace_export:
+        tracer.export(args.trace_export)
+        print(f"  chrome trace ({tracer.n_recorded} spans) -> "
+              f"{args.trace_export}")
+    if http_srv is not None:
+        http_srv.stop()
     return 0
 
 

@@ -59,6 +59,10 @@ def main(argv=None):
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--trace-export", default=None, metavar="FILE",
+                    help="enable the span tracer (train.step / "
+                         "train.data_next / train.host_sync) and write a "
+                         "Chrome-trace JSON here at exit")
     args = ap.parse_args(argv)
 
     if args.distributed:
@@ -91,6 +95,10 @@ def main(argv=None):
         state, meta = ckpt.restore(state)
         print(f"resumed from step {int(state['step'])}")
 
+    if args.trace_export:
+        from repro.obs import trace as obs_trace
+        obs_trace.configure(enabled=True)
+
     t0 = time.time()
     if ckpt:
         state, metrics = fault_tolerant_train_loop(
@@ -104,6 +112,12 @@ def main(argv=None):
     print(f"trained {args.steps} steps in {dt:.1f}s "
           f"({args.steps / dt:.2f} steps/s); final loss "
           f"{float(metrics['loss']):.4f}")
+    if args.trace_export:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.get_tracer()
+        tracer.export(args.trace_export)
+        print(f"chrome trace ({tracer.n_recorded} spans) -> "
+              f"{args.trace_export}")
     return 0
 
 

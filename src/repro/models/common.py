@@ -19,7 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import mirage_matmul
+from repro.core.gemm import mirage_matmul_auto
 from repro.core.precision import MiragePolicy
 
 
@@ -53,7 +53,7 @@ def norm_init(d: int, norm_type: str = "rmsnorm"):
 
 def dense(p, x, policy: MiragePolicy):
     """The Mirage-quantized GEMM. x: (..., d_in) @ w: (d_in, d_out)."""
-    y = mirage_matmul(x, p["w"], policy)
+    y = mirage_matmul_auto(x, p["w"], policy)
     if "b" in p:
         y = y + p["b"]
     return y
@@ -91,7 +91,7 @@ def unembed(p, x, policy: MiragePolicy):
     weight side itself — even under weight-stationary quantization."""
     if policy.assume_quantized_weights:
         policy = policy.replace(assume_quantized_weights=False)
-    return mirage_matmul(x, p["emb"].T, policy)
+    return mirage_matmul_auto(x, p["emb"].T, policy)
 
 
 def norm(p, x, eps: float = 1e-5, norm_type: str = "rmsnorm"):

@@ -18,6 +18,7 @@ from repro.configs.base import ModelConfig
 from repro.core.precision import MiragePolicy
 from repro.models import attention, common
 from repro.models.lm import LMCallOptions
+from repro.obs import health as obs_health
 
 
 class EncDec:
@@ -95,9 +96,10 @@ class EncDec:
             hh = hh + common.mlp(lp["mlp"], n2, self.policy, "gelu", opt=self.opt)
             return hh.astype(opt.carry), None
 
+        body = obs_health.lifted(body)
         if opt.remat:
             body = jax.checkpoint(body, prevent_cse=False)
-        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+        h, _ = obs_health.lifting_scan(body, h, params["enc_layers"])
         return common.norm(params["enc_norm"], h, cfg.norm_eps, cfg.norm_type)
 
     def _decoder(self, params, tokens, enc_out, collect_cache=False):
@@ -130,9 +132,10 @@ class EncDec:
             hh = hh.astype(self.opt.carry)
             return hh, (sk, sv, xk, xv) if collect_cache else None
 
+        body = obs_health.lifted(body)
         if opt.remat and not collect_cache:
             body = jax.checkpoint(body, prevent_cse=False)
-        h, caches = jax.lax.scan(body, h, params["dec_layers"])
+        h, caches = obs_health.lifting_scan(body, h, params["dec_layers"])
         h = common.norm(params["final_norm"], h, cfg.norm_eps, cfg.norm_type)
         return h, caches
 
@@ -214,9 +217,10 @@ class EncDec:
             hh = hh + common.mlp(lp["mlp"], n2, self.policy, "gelu", opt=self.opt)
             return hh, (sk, sv)
 
-        h, (sks, svs) = jax.lax.scan(
-            body, h, (params["dec_layers"], cache["self_k"], cache["self_v"],
-                      cache["cross_k"], cache["cross_v"]))
+        h, (sks, svs) = obs_health.lifting_scan(
+            obs_health.lifted(body), h,
+            (params["dec_layers"], cache["self_k"], cache["self_v"],
+             cache["cross_k"], cache["cross_v"]))
         cache = dict(cache, self_k=sks, self_v=svs, idx=idx + 1)
         h = common.norm(params["final_norm"], h, cfg.norm_eps, cfg.norm_type)
         logits = common.dense(params["lm_head"], h, self.policy)

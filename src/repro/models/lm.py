@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core import gemm
 from repro.core.precision import MiragePolicy
 from repro.models import attention, common, mamba2, moe
+from repro.obs import health as obs_health
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,10 +72,28 @@ def _layer_noise_scoped(body):
     scope's per-call-site counter alone would hand every layer the same
     noise realization per GEMM site; folding the index restores per-layer
     independent draws. No-op when no scope is open (training, deterministic
-    serving)."""
+    serving).
+
+    Also lifts analog-health records (``repro.obs.health``) out of the
+    body as extra stacked outputs — a scan body's tracers cannot reach the
+    enclosing scope directly — so every scan over a body wrapped here MUST
+    run through ``obs_health.lifting_scan``, which folds the stack back
+    into the outer scope."""
     def wrapped(carry, xs):
         with gemm.fold_noise_scope(xs[-1]):
             return body(carry, xs)
+    return obs_health.lifted(wrapped)
+
+
+def _cond_suppressed(fn):
+    """Run a ``lax.cond`` branch with health collection suppressed: a
+    branch trace has no output channel a wrapper can widen (cond demands
+    identical pytrees from both branches, and the identity branch records
+    nothing), so GEMMs in the hybrid family's shared block go uncounted
+    rather than leak branch tracers into the enclosing scope."""
+    def wrapped(args):
+        with obs_health.suppressed():
+            return fn(args)
     return wrapped
 
 
@@ -93,7 +112,6 @@ def chunked_ce(h: jax.Array, labels: jax.Array, head_fn, chunk: int):
     hc = h.reshape(nch, chunk, -1)
     lc = labels.reshape(nch, chunk)
 
-    @functools.partial(jax.checkpoint, prevent_cse=False)
     def body(acc, xs):
         hh, ll = xs
         logits = head_fn(hh).astype(jnp.float32)
@@ -106,7 +124,10 @@ def chunked_ce(h: jax.Array, labels: jax.Array, head_fn, chunk: int):
             0.0))
         return acc + ce, None
 
-    total, _ = jax.lax.scan(body, jnp.zeros(()), (hc, lc))
+    # lift INSIDE the checkpoint: the head GEMM's health records must exit
+    # through the remat's real output channel, not the thread-local
+    body = jax.checkpoint(obs_health.lifted(body), prevent_cse=False)
+    total, _ = obs_health.lifting_scan(body, jnp.zeros(()), (hc, lc))
     return total / T
 
 
@@ -242,8 +263,8 @@ class LM:
                 cat = jnp.concatenate([a, hh], axis=-1)
                 w_cat = jnp.concatenate(
                     [lp["attn"]["o"]["w"], lp["mlp"]["down"]["w"]], axis=0)
-                from repro.core.gemm import mirage_matmul
-                return h + mirage_matmul(cat, w_cat, policy), aux
+                from repro.core.gemm import mirage_matmul_auto
+                return h + mirage_matmul_auto(cat, w_cat, policy), aux
             m = common.mlp(lp["mlp"], n1, policy, opt=self.opt)
             return h + a + m, aux
         h = h + a
@@ -323,7 +344,7 @@ class LM:
         body = _layer_noise_scoped(body)
         if self.opt.remat:
             body = jax.checkpoint(body, prevent_cse=False)
-        (h, aux), _ = jax.lax.scan(
+        (h, aux), _ = obs_health.lifting_scan(
             body, (h, aux0),
             (params["layers"], jnp.arange(cfg.n_layers)))
         return h, aux, n_prefix
@@ -520,13 +541,13 @@ class LM:
                         return v, shk_, shv_
 
                     hh, shk, shv = jax.lax.cond(
-                        (idx + 1) % cfg.attn_every == 0, do_shared,
+                        (idx + 1) % cfg.attn_every == 0, _cond_suppressed(do_shared),
                         lambda args: args, (hh, shk, shv))
                 return (hh, aux, shk, shv), (st, cv)
 
             shk = cache.get("shared_k", jnp.zeros((1,), jnp.float32))
             shv = cache.get("shared_v", jnp.zeros((1,), jnp.float32))
-            (h, aux, shk, shv), (ssm, conv) = jax.lax.scan(
+            (h, aux, shk, shv), (ssm, conv) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), (h, aux0, shk, shv),
                 (params["layers"], jnp.arange(cfg.n_layers)))
             cache["ssm"], cache["conv"] = ssm, conv
@@ -559,7 +580,7 @@ class LM:
                     vv = jnp.pad(vv, ((0, 0), (0, pad_n), (0, 0), (0, 0)))
                 return (hh, aux), (kk, vv)
 
-            (h, aux), (ks, vs) = jax.lax.scan(
+            (h, aux), (ks, vs) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), (h, aux0),
                 (params["layers"], jnp.arange(cfg.n_layers)))
             cache["k"], cache["v"] = ks, vs
@@ -631,13 +652,13 @@ class LM:
                                                    self.policy, opt=self.opt), shk_, shv_)
 
                     hh, shk, shv = jax.lax.cond(
-                        (li + 1) % cfg.attn_every == 0, do_shared,
+                        (li + 1) % cfg.attn_every == 0, _cond_suppressed(do_shared),
                         lambda args: args, (hh, shk, shv))
                 return (hh, shk, shv), (ssm_st, conv_st)
 
             shk = cache.get(shk_key, jnp.zeros((1,), jnp.float32))
             shv = cache.get(shv_key, jnp.zeros((1,), jnp.float32))
-            (h, shk, shv), (ssm, conv) = jax.lax.scan(
+            (h, shk, shv), (ssm, conv) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), (h, shk, shv),
                 (params["layers"], cache["ssm"], cache["conv"],
                  jnp.arange(cfg.n_layers)))
@@ -659,7 +680,7 @@ class LM:
                     lp, hh, n1, a, jnp.zeros((), jnp.float32))
                 return hh, (ck, cv)
 
-            h, (ks, vs) = jax.lax.scan(
+            h, (ks, vs) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), h,
                 (params["layers"], cache[k_key], cache[v_key],
                  jnp.arange(cfg.n_layers)))
@@ -709,8 +730,10 @@ class LM:
                         conv)
                     return (ssm, conv), (o[:, 0], ssm, conv)
 
-                (_, _), (o_seq, ssm_steps, conv_steps) = jax.lax.scan(
-                    tok_step, (ssm_st, conv_st), jnp.moveaxis(n1, 1, 0))
+                (_, _), (o_seq, ssm_steps, conv_steps) = \
+                    obs_health.lifting_scan(
+                        obs_health.lifted(tok_step), (ssm_st, conv_st),
+                        jnp.moveaxis(n1, 1, 0))
                 hh = hh + jnp.moveaxis(o_seq, 0, 1)
                 if cfg.attn_every:
                     app = (li + 1) // cfg.attn_every - 1
@@ -743,13 +766,13 @@ class LM:
                                                    opt=self.opt), shk_, shv_)
 
                     hh, shk, shv = jax.lax.cond(
-                        (li + 1) % cfg.attn_every == 0, do_shared,
+                        (li + 1) % cfg.attn_every == 0, _cond_suppressed(do_shared),
                         lambda args: args, (hh, shk, shv))
                 return (hh, shk, shv), (ssm_steps, conv_steps)
 
             shk = cache.get("shared_kp", jnp.zeros((1,), jnp.float32))
             shv = cache.get("shared_vp", jnp.zeros((1,), jnp.float32))
-            (h, shk, shv), (ssm_steps, conv_steps) = jax.lax.scan(
+            (h, shk, shv), (ssm_steps, conv_steps) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), (h, shk, shv),
                 (params["layers"], cache["ssm"], cache["conv"],
                  jnp.arange(cfg.n_layers)))
@@ -774,7 +797,7 @@ class LM:
                     lp, hh, n1, a, jnp.zeros((), jnp.float32))
                 return hh, (ck, cv)
 
-            h, (ks, vs) = jax.lax.scan(
+            h, (ks, vs) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), h,
                 (params["layers"], cache["kp"], cache["vp"],
                  jnp.arange(cfg.n_layers)))
@@ -860,13 +883,13 @@ class LM:
                                                    opt=self.opt), shk_, shv_)
 
                     hh, shk, shv = jax.lax.cond(
-                        (li + 1) % cfg.attn_every == 0, do_shared,
+                        (li + 1) % cfg.attn_every == 0, _cond_suppressed(do_shared),
                         lambda args: args, (hh, shk, shv))
                 return (hh, shk, shv), (st2[0], cv2[0])
 
             shk = cache.get("shared_kp", jnp.zeros((1,), jnp.float32))
             shv = cache.get("shared_vp", jnp.zeros((1,), jnp.float32))
-            (h, shk, shv), (ssm, conv) = jax.lax.scan(
+            (h, shk, shv), (ssm, conv) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), (h, shk, shv),
                 (params["layers"], ssm0, conv0, jnp.arange(cfg.n_layers)))
             cache = dict(cache,
@@ -890,7 +913,7 @@ class LM:
                 hh, aux = self._post_attn_combine(lp, hh, n1, a, aux)
                 return (hh.astype(self.opt.carry), aux), (kp, vp)
 
-            (h, _), (kps, vps) = jax.lax.scan(
+            (h, _), (kps, vps) = obs_health.lifting_scan(
                 _layer_noise_scoped(body), (h, aux0),
                 (params["layers"], cache["kp"], cache["vp"],
                  jnp.arange(cfg.n_layers)))

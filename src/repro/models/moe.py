@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.precision import MiragePolicy
 from repro.models import common
+from repro.obs import health as obs_health
 
 
 def moe_init(key, d_model: int, n_experts: int, d_ff: int):
@@ -40,9 +41,31 @@ def moe_init(key, d_model: int, n_experts: int, d_ff: int):
 
 def _expert_ffn(gate_w, up_w, down_w, buf, policy: MiragePolicy):
     """buf: (C, d) for one expert."""
-    from repro.core.gemm import mirage_matmul
-    h = jax.nn.silu(mirage_matmul(buf, gate_w, policy)) * mirage_matmul(buf, up_w, policy)
-    return mirage_matmul(h, down_w, policy)
+    from repro.core.gemm import mirage_matmul_auto
+    h = (jax.nn.silu(mirage_matmul_auto(buf, gate_w, policy))
+         * mirage_matmul_auto(buf, up_w, policy))
+    return mirage_matmul_auto(h, down_w, policy)
+
+
+def _expert_ffn_vmapped(gate_w, up_w, down_w, buffers, policy):
+    """Expert FFNs vmapped over E. Health records inside the vmap body are
+    batch tracers that cannot reach the enclosing scope, so when one is
+    open they leave the body as per-expert outputs and their sums are
+    re-recorded one level up (same lift as ``obs_health.lifting_scan``)."""
+    if not obs_health.active():
+        return jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None))(
+            gate_w, up_w, down_w, buffers, policy)
+
+    def one(gw, uw, dw, buf):
+        with obs_health.collect() as hc:
+            out = _expert_ffn(gw, uw, dw, buf, policy)
+        return out, dict(hc.values)
+
+    out, h = jax.vmap(one, in_axes=(0, 0, 0, 0))(gate_w, up_w, down_w,
+                                                 buffers)
+    for name, v in h.items():
+        obs_health.record(name, jnp.sum(v, axis=0))
+    return out
 
 
 def moe_apply(p, x, policy: MiragePolicy, *, n_experts: int,
@@ -91,7 +114,7 @@ def moe_apply(p, x, policy: MiragePolicy, *, n_experts: int,
     buffers = common.constrain(buffers, opt, buf_roles)   # EP all-to-all here
 
     # --- expert FFNs (vmapped over E; Mirage GEMMs inside) ---
-    out_buffers = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None))(
+    out_buffers = _expert_ffn_vmapped(
         p["gate"], p["up"], p["down"], buffers, policy)            # (E, C, d)
     out_buffers = common.constrain(out_buffers, opt, buf_roles)
 
@@ -163,8 +186,7 @@ def _moe_local(xf, router_w, gate_w, up_w, down_w, *, E, K, C, model_axis,
     buffers = jnp.zeros((E_loc, C + 1, d), xf.dtype)
     buffers = buffers.at[e_flat, pos_flat].set(src)[:, :C, :]
 
-    out_buffers = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None))(
-        gate_w, up_w, down_w, buffers, policy)
+    out_buffers = _expert_ffn_vmapped(gate_w, up_w, down_w, buffers, policy)
     out_buffers = jnp.concatenate(
         [out_buffers, jnp.zeros((E_loc, 1, d), out_buffers.dtype)], axis=1)
     gathered = out_buffers[e_flat, pos_flat].reshape(-1, K, d)
@@ -214,8 +236,15 @@ def moe_apply_ep(p, x, policy: MiragePolicy, *, n_experts: int,
 
     fn = functools.partial(_moe_local, E=E, K=K, C=C, model_axis=tp_ax,
                            dp_axes=dp, policy=policy)
+
+    def fn_no_health(*args):
+        # shard_map body tracers cannot reach the enclosing health scope
+        # (same wall as lax.cond branches) — suppress rather than leak
+        with obs_health.suppressed():
+            return fn(*args)
+
     out, aux = shard_map(
-        fn, mesh=mesh,
+        fn_no_health, mesh=mesh,
         in_specs=(P(dp, None), P(None, None), P(tp_ax, None, None),
                   P(tp_ax, None, None), P(tp_ax, None, None)),
         out_specs=(P(dp, None), P()),

@@ -1,0 +1,223 @@
+"""Analog-health telemetry: device-side fault counters for the RRNS path.
+
+Mirage's whole pitch is high-precision analog compute DESPITE noise; the
+counters here make that tradeoff observable while serving. The problem they
+solve: RRNS correction events happen deep inside jitted decode/verify steps
+(the majority decode runs per GEMM per layer per tick), so host-side
+instrumentation cannot see them, and returning them per tick would add a
+device→host transfer to the hot loop.
+
+Mechanism — a trace-time collection scope, the telemetry twin of
+``repro.core.gemm.noise_key_scope``:
+
+  * the serving engine's jitted step functions open :func:`collect` around
+    the model call; the scope is a thread-local visible while JAX TRACES
+    the step (tracing runs the Python body once);
+  * instrumented library code (``analog/rrns.py`` decode,
+    ``analog/channel.py`` stages, the ``mirage_rrns`` backend's Pallas
+    paths) calls :func:`record` with small traced summaries (scalar fault
+    counts, per-channel flip vectors). With no scope open ``record`` is a
+    no-op and — crucially — the summary is never even computed, because
+    every call site guards on :func:`active`;
+  * the step folds the collected values into device-resident accumulators
+    carried in the engine state (:func:`fold` — elementwise add), so the
+    counters ride the existing state donation and NEVER travel to host on
+    a tick. A snapshot (``LMServer.health_snapshot``) fetches the whole
+    accumulator dict with ONE ``jax.device_get``.
+
+:func:`spec` derives the accumulator structure from the policy alone (an
+over-approximation is fine: keys that never get recorded just stay zero;
+recorded keys missing from the spec are dropped — the spec is the contract
+for what a given policy CAN report). Counters are int32: at the reduced
+serving shapes a counter would take ~2^31 corrected faults to wrap, far
+beyond any run this repo performs; a production deployment would widen to
+int64 under ``jax_enable_x64``.
+
+Token-parity invariant: recording only ADDS reductions next to the decode
+— it never feeds back into the value path, so an instrumented engine is
+token-identical to the uninstrumented one (tested in
+``tests/test_obs.py``; the bench enforces it on a live RRNS run).
+
+Inner transformations: values traced inside a ``lax.scan`` body (the models
+stack layers with scan) or a ``jax.checkpoint`` belong to that inner trace
+and may NOT escape to the enclosing jit through the thread-local — JAX
+raises ``UnexpectedTracerError``. The scan chokepoints therefore wrap their
+bodies with :func:`lifted` (records inside the body drain into a NESTED
+scope and leave the body as extra stacked outputs) and run through
+:func:`lifting_scan` (sums the stacked per-iteration values over the scan
+axis and re-records them one trace level up). The pair composes — a lifted
+scan inside a lifted scan re-records level by level. Branch traces
+(``lax.cond``) have no output channel a wrapper can widen without tracing
+both branches twice, so GEMMs under a cond guard open :func:`suppressed`
+instead — those sites record nothing rather than crash (only the hybrid
+family's shared attention block, documented there).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+_SCOPE = threading.local()
+
+
+class HealthCollector:
+    """Accumulates traced contributions recorded while the scope is open."""
+
+    def __init__(self):
+        self.values: Dict[str, jnp.ndarray] = {}
+
+    def add(self, name: str, value) -> None:
+        v = jnp.asarray(value)
+        cur = self.values.get(name)
+        self.values[name] = v if cur is None else cur + v
+
+
+def active() -> bool:
+    """True when a :func:`collect` scope is open on this thread. Call
+    sites guard their summary computation on this so a disabled engine
+    (training, benchmarks, non-analog serving) traces ZERO extra ops."""
+    stack = getattr(_SCOPE, "stack", None)
+    return bool(stack) and stack[-1] is not None
+
+
+def record(name: str, value) -> None:
+    """Add ``value`` (scalar or per-channel vector, int32) into the
+    innermost open collection scope; no-op without one."""
+    stack = getattr(_SCOPE, "stack", None)
+    if stack and stack[-1] is not None:
+        stack[-1].add(name, value)
+
+
+@contextlib.contextmanager
+def collect():
+    """Open a collection scope; yields the :class:`HealthCollector`."""
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    c = HealthCollector()
+    stack.append(c)
+    try:
+        yield c
+    finally:
+        stack.pop()
+
+
+@contextlib.contextmanager
+def suppressed():
+    """Disable collection inside the block even when an outer scope is
+    open. For call sites inside branch traces (``lax.cond``) whose
+    intermediates cannot legally reach the enclosing scope."""
+    stack = getattr(_SCOPE, "stack", None)
+    if stack is None:
+        stack = _SCOPE.stack = []
+    stack.append(None)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+# --------------------------------------------------------------------------
+# Crossing inner transformations (lax.scan / jax.checkpoint)
+# --------------------------------------------------------------------------
+
+def lifted(body):
+    """Wrap a ``lax.scan`` body so health values recorded inside it leave
+    the body as extra stacked outputs: ``(carry, ys)`` becomes ``(carry,
+    (ys, {name: value}))`` when a scope is active (unchanged otherwise).
+    Apply BEFORE ``jax.checkpoint`` so the lift rides the remat's real
+    output channel. Must be paired with :func:`lifting_scan`."""
+    def wrapped(carry, xs):
+        if not active():
+            return body(carry, xs)
+        with collect() as hc:
+            carry, ys = body(carry, xs)
+        return carry, (ys, dict(hc.values))
+    return wrapped
+
+
+def lifting_scan(body, init, xs, **kwargs):
+    """``jax.lax.scan`` for a :func:`lifted` body: unpacks the stacked
+    health outputs, sums them over the scan axis and re-records the totals
+    into the enclosing scope, then returns the plain ``(carry, ys)``."""
+    import jax
+
+    if not active():
+        return jax.lax.scan(body, init, xs, **kwargs)
+    carry, (ys, lifted_h) = jax.lax.scan(body, init, xs, **kwargs)
+    for name, v in lifted_h.items():
+        record(name, jnp.sum(v, axis=0))
+    return carry, ys
+
+
+# --------------------------------------------------------------------------
+# Accumulator structure
+# --------------------------------------------------------------------------
+
+def spec(policy) -> Dict[str, Tuple[int, ...]]:
+    """Accumulator shapes a policy's serving path can record.
+
+    Keys:
+      rrns_corrected     faults a decode subset-vote repaired (legal value
+                         found, but >= 1 subset disagreed)
+      rrns_uncorrected   decodes with NO legal reconstruction (output
+                         clamped to 0 — the correction radius was exceeded)
+      detector_flips     per-channel count of residues moved >= 1 phase
+                         level by detector noise (readout side)
+      drift_flips        per-channel count from programming drift (program
+                         side; zero under stationary weights, which program
+                         once at admission outside the tick)
+      burst_hits         correlated burst events injected by the channel
+
+    Returns {} for policies whose backend is deterministic AND
+    non-correcting — the engine then carries no health state at all.
+    """
+    from repro.analog import rrns as rrns_mod
+    from repro.analog.channel import AnalogChannelConfig
+    from repro.core import backends
+
+    try:
+        backend = backends.resolve(policy)
+    except KeyError:
+        return {}
+    if not backend.supports_noise:
+        return {}
+    correct = policy.mode in ("mirage_rrns", "mirage_rrns_ref")
+    moduli = (rrns_mod.rrns_moduli(policy) if correct
+              else tuple(policy.moduli))
+    cfg = AnalogChannelConfig.from_policy(policy)
+    out: Dict[str, Tuple[int, ...]] = {}
+    if correct:
+        out["rrns_corrected"] = ()
+        out["rrns_uncorrected"] = ()
+    if any(s > 0 for s in cfg.detector_sigmas(moduli)):
+        out["detector_flips"] = (len(moduli),)
+    if cfg.phase_drift_sigma > 0:
+        out["drift_flips"] = (len(moduli),)
+    if cfg.burst_rate > 0:
+        out["burst_hits"] = ()
+    return out
+
+
+def init(spec_: Dict[str, Tuple[int, ...]]) -> Dict[str, jnp.ndarray]:
+    """Zeroed device accumulators for a spec."""
+    return {k: jnp.zeros(shape, jnp.int32)
+            for k, shape in sorted(spec_.items())}
+
+
+def fold(health: Dict[str, jnp.ndarray],
+         collected: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Add a step's collected contributions into the accumulators.
+
+    Iterates the ACCUMULATOR keys: spec'd keys nothing recorded stay
+    unchanged; recorded keys outside the spec are dropped (the spec is the
+    policy's declared surface — see :func:`spec`)."""
+    out = {}
+    for k, v in health.items():
+        c = collected.get(k)
+        out[k] = v if c is None else v + c.astype(v.dtype)
+    return out

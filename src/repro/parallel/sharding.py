@@ -248,6 +248,10 @@ def serve_state_shardings(mesh: Mesh, cfg: ModelConfig, abstract_state):
         if name.startswith("cache/"):
             return NamedSharding(mesh, cache_spec(mesh, cfg,
                                                   name[len("cache/"):], shape))
+        if name.startswith("health/"):
+            # engine-wide analog-fault accumulators (scalars / per-channel
+            # vectors): tiny, replicated — never sharded over slots
+            return NamedSharding(mesh, P())
         if not shape:
             return NamedSharding(mesh, P())
         return NamedSharding(

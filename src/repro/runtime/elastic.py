@@ -92,8 +92,12 @@ def resize_serving_state(model, state, cap: int, new_slots: int,
     else:
         new_cache = model.init_cache(new_slots, cap, per_slot_idx=True)
     new_state = {"cache": new_cache}
+    # "health" is the engine's pool-wide analog-fault accumulator dict —
+    # not per-slot state; it survives a resize unchanged
+    if "health" in state:
+        new_state["health"] = state["health"]
     for k, v in state.items():
-        if k == "cache":
+        if k in ("cache", "health"):
             continue
         new_state[k] = jnp.zeros((new_slots,) + v.shape[1:], v.dtype)
     if keep:
@@ -113,7 +117,7 @@ def resize_serving_state(model, state, cap: int, new_slots: int,
             new_state["cache"] = lm_helpers.cache_insert(
                 new_cache, lm_helpers.cache_extract(cache, src), dst)
         for k, v in state.items():
-            if k == "cache":
+            if k in ("cache", "health"):
                 continue
             new_state[k] = new_state[k].at[dst].set(v[src])
     return new_state
@@ -205,11 +209,16 @@ def fault_tolerant_train_loop(model, train_cfg, state, data, n_steps: int,
     guard = guard or PreemptionGuard(install=False)
     straggler = straggler or StragglerMitigator()
     metrics = {}
+    from repro.obs import trace as obs_trace
+    tr = obs_trace.get_tracer()
     for _ in range(n_steps):
-        batch = next(data)
+        with tr.span("train.data_next"):
+            batch = next(data)
         t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch)
-        _jax.block_until_ready(metrics["loss"])
+        with tr.span("train.step"):
+            state, metrics = step_fn(state, batch)
+        with tr.span("train.host_sync"):
+            _jax.block_until_ready(metrics["loss"])
         step = int(state["step"])
         straggler.record(step, time.perf_counter() - t0)
         if ckpt_every and step % ckpt_every == 0:

@@ -99,6 +99,24 @@ class BlockAllocator:
     def used_count(self) -> int:
         return self.n_blocks - len(self._free)
 
+    @property
+    def occupancy(self) -> float:
+        """In-use fraction of the whole pool."""
+        return self.used_count / self.n_blocks
+
+    @property
+    def fragmentation(self) -> float:
+        """Free holes inside the live region — the span ``[0, hwm)`` up to
+        the highest live block id — as a fraction of that span. 0 means
+        the live blocks sit compacted at the front (the state the lowest-id
+        free heap converges to after retirements); high values mean an
+        elastic pool shrink (``resize_pool``) would have to move blocks."""
+        live = np.flatnonzero(self.refcount > 0)
+        if live.size == 0:
+            return 0.0
+        hwm = int(live[-1]) + 1
+        return (hwm - live.size) / hwm
+
     def can_fit(self, n_positions: int) -> bool:
         return blocks_for(n_positions, self.block_size) <= self.free_count
 

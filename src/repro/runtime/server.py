@@ -87,6 +87,8 @@ decode) and as the benchmark baseline.
 from __future__ import annotations
 
 import collections
+import collections.abc
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -97,6 +99,9 @@ import numpy as np
 
 from repro.core import gemm
 from repro.models import lm as lm_helpers
+from repro.obs import health as obs_health
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 from repro.runtime.paging import blocks_for
 
 
@@ -178,6 +183,79 @@ def pick_bucket(length: int, buckets: Sequence[int]) -> int:
                      f"{buckets[-1]}")
 
 
+class _SchedulerMetrics(collections.abc.MutableMapping):
+    """Dict-shaped view over registry-backed counters.
+
+    The Scheduler's metrics were a plain dict; every ``metrics["x"] += 1``
+    site now lands in a :class:`repro.obs.metrics.Counter`
+    (``serve_<x>_total``), so the host loop, the JSON snapshot and the
+    Prometheus scrape share ONE source of truth while the call sites keep
+    their dict shape.
+
+    ``prefilling`` is not a counter: it is DERIVED from the engine's
+    in-flight chunked-prefill list through a callback bound by
+    :class:`LMServer`. The old code stored it and updated it on some code
+    paths only (reset in ``_admit_chunked`` but also assigned in ``tick``),
+    so the gauge could go stale; deriving it makes staleness impossible.
+    Writes to it are ignored. Without an engine bound it reads 0.
+    """
+
+    _COUNTERS = (
+        ("completed", "requests retired"),
+        ("tokens", "tokens emitted by retired requests"),
+        ("ticks", "engine ticks run"),
+        ("admitted", "requests admitted into slots"),
+        ("prefill_batches", "bucketed prefill batches launched"),
+        # chunked prefill: total chunk steps run
+        ("prefill_chunks", "chunked-prefill steps run"),
+        # prefix caching: admissions that reused shared blocks, the
+        # subset that skipped prefill entirely, and total blocks mapped
+        # read-only instead of being prefilled
+        ("prefix_hits", "admissions that mapped shared prefix blocks"),
+        ("prefix_full_hits", "admissions that skipped prefill entirely"),
+        ("prefix_shared_blocks", "blocks mapped read-only at admission"),
+        # copy-on-write forks resolved by the guard before a shared-block
+        # write (prefix sharing's write-path cost)
+        ("cow_forks", "copy-on-write block forks"),
+        # speculative decoding: verify ticks run, per-slot verify
+        # steps, and tokens accepted (accepted/spec_slot_ticks is the
+        # mean accepted-tokens-per-tick the benchmark gates on)
+        ("spec_ticks", "speculative verify ticks run"),
+        ("spec_slot_ticks", "per-slot speculative verify steps"),
+        ("spec_accepted", "draft tokens accepted"),
+    )
+
+    def __init__(self, registry: MetricsRegistry):
+        self._counters = {
+            name: registry.counter(f"serve_{name}_total", help=help_)
+            for name, help_ in self._COUNTERS}
+        self._prefilling_fn: Optional[Callable[[], int]] = None
+
+    def bind_prefilling(self, fn: Callable[[], int]) -> None:
+        self._prefilling_fn = fn
+
+    def __getitem__(self, key: str) -> int:
+        if key == "prefilling":
+            fn = self._prefilling_fn
+            return int(fn()) if fn is not None else 0
+        return int(self._counters[key].value)
+
+    def __setitem__(self, key: str, value: int) -> None:
+        if key == "prefilling":
+            return  # derived from the engine's in-flight list; see class doc
+        self._counters[key].set(value)
+
+    def __delitem__(self, key: str) -> None:
+        raise TypeError("scheduler metrics keys are fixed")
+
+    def __iter__(self):
+        yield from self._counters
+        yield "prefilling"
+
+    def __len__(self) -> int:
+        return len(self._counters) + 1
+
+
 class Scheduler:
     """FCFS admission + retirement bookkeeping + per-request latency metrics.
 
@@ -185,30 +263,31 @@ class Scheduler:
     lifecycle (enqueue → admit → stream tokens → retire); the engine owns
     the device state. ``on_token`` is the streaming hook: called once per
     materialized token, in emission order.
+
+    Metrics live in ``registry`` (a private
+    :class:`repro.obs.metrics.MetricsRegistry` unless one is passed — pass
+    the process-wide ``repro.obs.get_registry()`` to expose them over
+    ``launch/serve.py --metrics-port``); ``self.metrics`` is a dict-shaped
+    view over the same instruments for the host loop and existing callers.
     """
 
-    def __init__(self, on_token: Optional[Callable[[Request, int], None]] = None):
+    def __init__(self, on_token: Optional[Callable[[Request, int], None]] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.waiting: collections.deque[Request] = collections.deque()
         self.finished: List[Request] = []
         self.on_token = on_token
-        self.metrics: Dict[str, Any] = {
-            "completed": 0, "tokens": 0, "ticks": 0,
-            "admitted": 0, "prefill_batches": 0,
-            # chunked prefill: total chunk steps run, and the gauge of
-            # requests admitted but still streaming their prompt (these are
-            # no longer "waiting" yet hold a slot — queue accounting must
-            # count them or occupancy reads wrong)
-            "prefill_chunks": 0, "prefilling": 0,
-            # prefix caching: admissions that reused shared blocks, the
-            # subset that skipped prefill entirely, and total blocks mapped
-            # read-only instead of being prefilled
-            "prefix_hits": 0, "prefix_full_hits": 0,
-            "prefix_shared_blocks": 0,
-            # speculative decoding: verify ticks run, per-slot verify
-            # steps, and tokens accepted (accepted/spec_slot_ticks is the
-            # mean accepted-tokens-per-tick the benchmark gates on)
-            "spec_ticks": 0, "spec_slot_ticks": 0, "spec_accepted": 0,
-        }
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.metrics: _SchedulerMetrics = _SchedulerMetrics(self.registry)
+        self._h_ttft = self.registry.histogram(
+            "serve_ttft_seconds", help="time to first token (enqueue→host)")
+        self._h_tpot = self.registry.histogram(
+            "serve_tpot_seconds", help="mean time per output token after "
+                                       "the first, per retired request")
+        self._h_queue = self.registry.histogram(
+            "serve_queue_seconds", help="enqueue→admission wait")
+        self.registry.gauge_fn(
+            "serve_queue_depth", lambda: len(self.waiting),
+            help="requests waiting for admission")
 
     def submit(self, req: Request) -> None:
         req.t_enqueue = time.perf_counter()
@@ -237,19 +316,29 @@ class Scheduler:
         req.t_done = time.perf_counter()
         self.metrics["completed"] += 1
         self.metrics["tokens"] += len(req.tokens_out)
+        self._h_ttft.observe(req.ttft)
+        self._h_tpot.observe(req.tpot)
+        self._h_queue.observe(req.queue_time)
         self.finished.append(req)
         return req
 
     def latency_summary(self) -> Dict[str, float]:
+        """Means + exact p50/p95/p99 tails over every retired request (the
+        registry histograms expose bucket-interpolated estimates of the
+        same distributions for live scraping; these are the exact values
+        the benchmark rows record)."""
+        keys = [f"{m}_{s}_s" for m in ("ttft", "tpot")
+                for s in ("mean", "p50", "p95", "p99")] + ["queue_mean_s"]
         done = self.finished
         if not done:
-            return {"ttft_mean_s": 0.0, "tpot_mean_s": 0.0,
-                    "queue_mean_s": 0.0}
-        return {
-            "ttft_mean_s": float(np.mean([r.ttft for r in done])),
-            "tpot_mean_s": float(np.mean([r.tpot for r in done])),
-            "queue_mean_s": float(np.mean([r.queue_time for r in done])),
-        }
+            return {k: 0.0 for k in keys}
+        out = {"queue_mean_s": float(np.mean([r.queue_time for r in done]))}
+        for name, arr in (("ttft", np.asarray([r.ttft for r in done])),
+                          ("tpot", np.asarray([r.tpot for r in done]))):
+            out[f"{name}_mean_s"] = float(arr.mean())
+            for q in (50, 95, 99):
+                out[f"{name}_p{q}_s"] = float(np.percentile(arr, q))
+        return out
 
 
 class LMServer:
@@ -280,7 +369,8 @@ class LMServer:
                  n_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
-                 spec_k: int = 0):
+                 spec_k: int = 0,
+                 instrument: bool = True):
         self.model = model
         self.params = params
         self.cap = cap
@@ -368,6 +458,23 @@ class LMServer:
         self.scheduler = scheduler or Scheduler(on_token=on_token)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
 
+        # analog-health accumulators: shapes derive from the policy alone
+        # (empty for deterministic backends → no "health" state key, no
+        # collection scope, zero change to those paths).
+        # ``instrument=False`` builds the UNINSTRUMENTED engine — the
+        # overhead/parity comparator benchmarks measure against.
+        self._health_spec = obs_health.spec(model.policy) if instrument \
+            else {}
+        if self._health_spec:
+            from repro.analog import rrns as rrns_mod
+            self._health_moduli = (
+                rrns_mod.rrns_moduli(model.policy)
+                if model.policy.mode in ("mirage_rrns", "mirage_rrns_ref")
+                else tuple(model.policy.moduli))
+        else:
+            self._health_moduli = ()
+        self._bound_registry: Optional[MetricsRegistry] = None
+
         seed = model.policy.noise_seed if model.policy.noise_seed is not None \
             else 0
         # distinct streams: fold(base, 0) -> decode ticks, fold(base, 1) ->
@@ -400,6 +507,7 @@ class LMServer:
             self._exec_params = params
 
         self.state = self._init_state(batch_slots)
+        self._bind_observability()
         self._decode_tick = jax.jit(self._make_tick_fn())
         self._prefill_insert = jax.jit(self._make_prefill_fn())
         # prefix-cache misses/partial hits prefill through the chunk step
@@ -425,7 +533,7 @@ class LMServer:
         else:
             cache = self.model.init_cache(n_slots, self.cap,
                                           per_slot_idx=True)
-        return {
+        state = {
             "cache": cache,
             "last_tok": jnp.zeros((n_slots,), jnp.int32),
             "active": jnp.zeros((n_slots,), bool),
@@ -433,6 +541,12 @@ class LMServer:
             "eos": jnp.full((n_slots,), -1, jnp.int32),
             "max_tok": jnp.zeros((n_slots,), jnp.int32),
         }
+        if self._health_spec:
+            # pool-wide (NOT per-slot) analog-fault accumulators; every
+            # jitted step folds its traced contributions in, so the values
+            # live on device until health_snapshot() fetches them
+            state["health"] = obs_health.init(self._health_spec)
+        return state
 
     def _sync_tables(self) -> None:
         """Mirror the allocator's block tables to the device cache leaf
@@ -441,13 +555,27 @@ class LMServer:
             self.state["cache"]["bt"] = jnp.asarray(self.alloc.tables)
             self.alloc.dirty = False
 
+    def _health_scope(self):
+        """Collection scope for a jitted step's model call — a real
+        collector when this policy has health counters, else a shared
+        null context (``active()`` stays False → record sites trace
+        nothing)."""
+        if self._health_spec:
+            return obs_health.collect()
+        return contextlib.nullcontext(None)
+
+    def _fold_health(self, new_state, state, hc):
+        if hc is not None:
+            new_state["health"] = obs_health.fold(state["health"], hc.values)
+        return new_state
+
     def _make_tick_fn(self):
         model, greedy = self.model, self.greedy
 
         def tick(params, state, noise_key, sample_key):
             cache0 = state["cache"]
             idx0 = cache0["idx"]
-            with gemm.noise_key_scope(noise_key):
+            with gemm.noise_key_scope(noise_key), self._health_scope() as hc:
                 logits, cache = model.decode_step(
                     params, cache0, state["last_tok"][:, None])
             logits = logits[:, -1, :]
@@ -477,6 +605,7 @@ class LMServer:
                 active=active & ~done,
                 emitted=emitted,
             )
+            self._fold_health(new_state, state, hc)
             # the tick's single device->host payload: (S, 2) [token|-1, done]
             payload = jnp.stack(
                 [jnp.where(active, tok, -1), done.astype(jnp.int32)], axis=-1)
@@ -489,7 +618,7 @@ class LMServer:
 
         def prefill_insert(params, state, tokens, lens, slots, eos, max_tok,
                            noise_key, sample_key):
-            with gemm.noise_key_scope(noise_key):
+            with gemm.noise_key_scope(noise_key), self._health_scope() as hc:
                 logits, new_cache = model.prefill(params, tokens, cap,
                                                   lens=lens)
             logits = logits[:, -1, :]
@@ -511,6 +640,7 @@ class LMServer:
                 eos=state["eos"].at[slots].set(eos, mode="drop"),
                 max_tok=state["max_tok"].at[slots].set(max_tok, mode="drop"),
             )
+            self._fold_health(state, state, hc)
             payload = jnp.stack([tok, done0.astype(jnp.int32)], axis=-1)
             return state, payload
 
@@ -525,14 +655,14 @@ class LMServer:
         model, greedy = self.model, self.greedy
 
         def chunk_mid(params, state, tokens, slot, pos0, true_len, noise_key):
-            with gemm.noise_key_scope(noise_key):
+            with gemm.noise_key_scope(noise_key), self._health_scope() as hc:
                 _, cache = model.prefill_chunk(
                     params, state["cache"], tokens, slot, pos0, true_len)
-            return dict(state, cache=cache)
+            return self._fold_health(dict(state, cache=cache), state, hc)
 
         def chunk_last(params, state, tokens, slot, pos0, true_len, eos,
                        max_tok, noise_key, sample_key):
-            with gemm.noise_key_scope(noise_key):
+            with gemm.noise_key_scope(noise_key), self._health_scope() as hc:
                 logits, cache = model.prefill_chunk(
                     params, state["cache"], tokens, slot, pos0, true_len)
             logits = logits[:, -1, :]
@@ -550,6 +680,7 @@ class LMServer:
                 eos=state["eos"].at[slot].set(eos),
                 max_tok=state["max_tok"].at[slot].set(max_tok),
             )
+            self._fold_health(state, state, hc)
             payload = jnp.stack(
                 [tok, jnp.reshape(done0, (1,)).astype(jnp.int32)], axis=-1)
             return state, payload
@@ -589,7 +720,7 @@ class LMServer:
             S = idx0.shape[0]
             tokens = jnp.concatenate(
                 [state["last_tok"][:, None], drafts], axis=1)   # (S, k+1)
-            with gemm.noise_key_scope(noise_key):
+            with gemm.noise_key_scope(noise_key), self._health_scope() as hc:
                 logits, cache, steps = model.verify_step(
                     params, cache0, tokens)
             g = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (S, k+1)
@@ -635,6 +766,7 @@ class LMServer:
                 last_tok=jnp.where(active, last, state["last_tok"]),
                 active=active & ~done,
                 emitted=emitted)
+            self._fold_health(new_state, state, hc)
             toks = jnp.where(active[:, None] & (keep > 0), g, -1)
             payload = jnp.concatenate(
                 [toks, done.astype(jnp.int32)[:, None]], axis=1)  # (S,k+2)
@@ -781,6 +913,7 @@ class LMServer:
             if self.alloc.is_shared(b):
                 src, dst = self.alloc.fork_cow(slot, j)
                 self._copy_block(src, dst)
+                self.scheduler.metrics["cow_forks"] += 1
             elif self.prefix_index.contains_block(b):
                 self.prefix_index.evict_blocks([b])
         self._fork_pending[slot] = 0
@@ -859,12 +992,14 @@ class LMServer:
                 self._sync_tables()
                 nk, sk = self._next_keys(1, self._prefill_count)
                 self._prefill_count += 1
-                self.state, payload = self._prefill_insert(
-                    self._exec_params, self.state, jnp.asarray(tokens),
-                    jnp.asarray(lens), jnp.asarray(slots), jnp.asarray(eos),
-                    jnp.asarray(max_tok), nk, sk)
-                # TTFT is stamped only once the token bytes are on host
-                payload = np.asarray(jax.device_get(payload))
+                with obs_trace.get_tracer().span(
+                        "serve.prefill_batch", {"bucket": Lb, "batch": B}):
+                    self.state, payload = self._prefill_insert(
+                        self._exec_params, self.state, jnp.asarray(tokens),
+                        jnp.asarray(lens), jnp.asarray(slots),
+                        jnp.asarray(eos), jnp.asarray(max_tok), nk, sk)
+                    # TTFT is stamped only once the token bytes are on host
+                    payload = np.asarray(jax.device_get(payload))
                 t_host = time.perf_counter()
                 for j, r in enumerate(group):
                     r.t_first_token = t_host
@@ -1040,7 +1175,6 @@ class LMServer:
                 jnp.asarray(req.max_tokens, jnp.int32))
             self.prefilling.pop(0)
         if not self.prefilling:
-            self.scheduler.metrics["prefilling"] = 0
             return retired
         # one chunk per tick, FCFS entry first (bounded per-tick latency)
         e = self.prefilling[0]
@@ -1062,15 +1196,18 @@ class LMServer:
         args = (self._exec_params, self.state, jnp.asarray(toks),
                 jnp.asarray(slot, jnp.int32), jnp.asarray(pos, jnp.int32),
                 jnp.asarray(take, jnp.int32))
+        tr = obs_trace.get_tracer()
         if not last:
-            self.state = self._chunk_mid(*args, nk)
+            with tr.span("serve.chunk", {"take": take}):
+                self.state = self._chunk_mid(*args, nk)
             e["pos"] = pos + take
         else:
             eos = -1 if req.eos_id is None else req.eos_id
-            self.state, payload = self._chunk_last(
-                *args, jnp.asarray(eos, jnp.int32),
-                jnp.asarray(req.max_tokens, jnp.int32), nk, sk)
-            payload = np.asarray(jax.device_get(payload))
+            with tr.span("serve.chunk", {"take": take, "last": True}):
+                self.state, payload = self._chunk_last(
+                    *args, jnp.asarray(eos, jnp.int32),
+                    jnp.asarray(req.max_tokens, jnp.int32), nk, sk)
+                payload = np.asarray(jax.device_get(payload))
             req.t_first_token = time.perf_counter()
             self.prefilling.pop(0)
             self._slot_pos[slot] = len(req.prompt)
@@ -1082,7 +1219,6 @@ class LMServer:
             else:
                 self._register_prefix(slot, req)
         self.scheduler.metrics["prefill_chunks"] += 1
-        self.scheduler.metrics["prefilling"] = len(self.prefilling)
         return retired
 
     def tick(self) -> List[Request]:
@@ -1090,7 +1226,19 @@ class LMServer:
         chunked prefill is on), then decode one token for EVERY active slot
         in a single jitted call — or, with ``spec_k``, verify ``k`` drafted
         tokens per slot in a single jitted call."""
-        done: List[Request] = list(self._admit())
+        if self.scheduler.registry is not self._bound_registry:
+            self._bind_observability()
+        tr = obs_trace.get_tracer()
+        t_tick = time.perf_counter()
+        with tr.span("serve.tick"):
+            done = self._tick_body(tr)
+        self.scheduler.metrics["ticks"] += 1
+        self._h_tick.observe(time.perf_counter() - t_tick)
+        return done
+
+    def _tick_body(self, tr) -> List[Request]:
+        with tr.span("serve.admit"):
+            done: List[Request] = list(self._admit())
         mid_prefill = {e["slot"] for e in self.prefilling}
         decode_slots = [i for i, r in enumerate(self.slot_req)
                         if r is not None and i not in mid_prefill]
@@ -1111,9 +1259,12 @@ class LMServer:
                 self._sync_tables()
             nk, sk = self._next_keys(0, self._tick_count)
             self._tick_count += 1
-            self.state, payload = self._decode_tick(
-                self._exec_params, self.state, nk, sk)
-            payload = np.asarray(jax.device_get(payload))  # the ONE transfer
+            with tr.span("serve.decode", {"slots": len(decode_slots)}):
+                self.state, payload = self._decode_tick(
+                    self._exec_params, self.state, nk, sk)
+            with tr.span("serve.host_sync"):
+                # the ONE transfer
+                payload = np.asarray(jax.device_get(payload))
             t_host = time.perf_counter()
             for i, (tok, is_done) in enumerate(payload):
                 req = self.slot_req[i]
@@ -1132,9 +1283,6 @@ class LMServer:
                     done.append(self.scheduler.retire(req))
                 else:
                     self._maybe_trim(i)
-        self.scheduler.metrics["ticks"] += 1
-        if self.prefill_chunk is not None:
-            self.scheduler.metrics["prefilling"] = len(self.prefilling)
         return done
 
     def _spec_tick(self, decode_slots: List[int]) -> List[Request]:
@@ -1165,9 +1313,12 @@ class LMServer:
             self._sync_tables()
         nk, _ = self._next_keys(0, self._tick_count)
         self._tick_count += 1
-        self.state, payload = self._verify_tick(
-            self._exec_params, self.state, jnp.asarray(drafts), nk)
-        payload = np.asarray(jax.device_get(payload))
+        tr = obs_trace.get_tracer()
+        with tr.span("serve.verify", {"slots": len(decode_slots), "k": k}):
+            self.state, payload = self._verify_tick(
+                self._exec_params, self.state, jnp.asarray(drafts), nk)
+        with tr.span("serve.host_sync"):
+            payload = np.asarray(jax.device_get(payload))
         t_host = time.perf_counter()
         done: List[Request] = []
         self.scheduler.metrics["spec_ticks"] += 1
@@ -1254,8 +1405,86 @@ class LMServer:
                 {int(b): i for i, b in enumerate(old_live)})
         self._sync_tables()
 
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    def _bind_observability(self) -> None:
+        """Attach engine-derived gauges and the analog-health collector to
+        the CURRENT scheduler's registry. Idempotent per registry and
+        re-run lazily whenever ``self.scheduler`` is swapped for a fresh
+        one (the serving benchmark does this between load points), so the
+        exposition always reflects the live scheduler."""
+        reg = self.scheduler.registry
+        self._bound_registry = reg
+        m = self.scheduler.metrics
+        # the satellite fix: "prefilling" is derived from the in-flight
+        # list in exactly one place — here — instead of being assigned on
+        # some code paths and reset on others
+        m.bind_prefilling(lambda: len(self.prefilling))
+        reg.gauge_fn("serve_prefilling", lambda: len(self.prefilling),
+                     help="requests admitted but still streaming their "
+                          "prompt (chunked prefill in flight)")
+        reg.gauge_fn("serve_slots_active",
+                     lambda: sum(r is not None for r in self.slot_req),
+                     help="slots holding a live request")
+        reg.gauge_fn("serve_prefix_hit_rate",
+                     lambda: (m["prefix_hits"] / m["admitted"])
+                     if m["admitted"] else 0.0,
+                     help="fraction of admissions that mapped shared "
+                          "prefix blocks")
+        reg.gauge_fn("serve_spec_accept_per_slot_tick",
+                     lambda: (m["spec_accepted"] / m["spec_slot_ticks"])
+                     if m["spec_slot_ticks"] else 0.0,
+                     help="mean draft tokens accepted per per-slot "
+                          "verify step")
+        self._h_tick = reg.histogram(
+            "serve_tick_seconds", help="engine tick walltime (admit + "
+                                       "decode/verify + host sync)")
+        if self.alloc is not None:
+            alloc = self.alloc
+            reg.gauge_fn("serve_block_pool_in_use",
+                         lambda: alloc.used_count,
+                         help="page-pool blocks with refcount > 0")
+            reg.gauge_fn("serve_block_pool_occupancy",
+                         lambda: alloc.occupancy,
+                         help="in-use fraction of the page pool")
+            reg.gauge_fn("serve_block_pool_fragmentation",
+                         lambda: alloc.fragmentation,
+                         help="free holes inside the live block region as "
+                              "a fraction of that region (0 = compact)")
+        if self._health_spec:
+            reg.add_collector(self._collect_health)
+
+    def health_snapshot(self) -> Dict[str, Any]:
+        """Current analog-health counters as plain ints/lists. Costs ONE
+        ``jax.device_get`` of the accumulator dict — never called from the
+        tick path; the registry collector invokes it once per scrape.
+        Empty for deterministic backends."""
+        h = self.state.get("health")
+        if h is None:
+            return {}
+        h = jax.device_get(h)
+        return {k: (int(v) if np.ndim(v) == 0 else
+                    [int(x) for x in np.asarray(v)])
+                for k, v in h.items()}
+
+    def _collect_health(self, reg) -> None:
+        for name, val in self.health_snapshot().items():
+            if isinstance(val, list):
+                g = reg.gauge(f"serve_health_{name}",
+                              help="per-channel analog fault counter",
+                              label_names=("channel",))
+                for mod, v in zip(self._health_moduli, val):
+                    g.labels(str(mod)).set(v)
+            else:
+                reg.gauge(f"serve_health_{name}",
+                          help="analog fault counter").set(val)
+
     @property
     def metrics(self) -> Dict[str, Any]:
+        if self.scheduler.registry is not self._bound_registry:
+            self._bind_observability()
         return self.scheduler.metrics
 
 

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import grad_compress
 from repro.optim.optimizers import clip_by_global_norm, make_optimizer
 from repro.optim.schedules import constant
@@ -155,17 +157,36 @@ class StepTimer:
 
 def train_loop(model, train_cfg: TrainConfig, state, data_iter, n_steps: int,
                checkpointer=None, ckpt_every: int = 0, log_every: int = 10,
-               log_fn=print):
-    """Single-host training loop with checkpoint/restart + straggler hooks."""
+               log_fn=print, registry=None):
+    """Single-host training loop with checkpoint/restart + straggler hooks.
+
+    Observability: each phase of the loop opens a tracer span
+    (``train.data_next`` / ``train.step`` / ``train.host_sync`` — free when
+    the tracer is disabled) and step latency/count land in ``registry``
+    (default: the process registry) as ``train_step_seconds`` /
+    ``train_steps_total``."""
+    reg = registry if registry is not None else obs_metrics.get_registry()
+    h_step = reg.histogram("train_step_seconds",
+                           "walltime per optimizer step (dispatch + sync)")
+    c_steps = reg.counter("train_steps_total", "optimizer steps completed")
+    g_slow = reg.gauge("train_slow_steps", "straggler-flagged steps so far")
+    tr = obs_trace.get_tracer()
     step_fn = jax.jit(make_train_step(model, train_cfg))
     timer = StepTimer()
     metrics = {}
     for i in range(n_steps):
-        batch = next(data_iter)
+        with tr.span("train.data_next"):
+            batch = next(data_iter)
         t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch)
-        jax.block_until_ready(metrics["loss"])
-        slow = timer.record(time.perf_counter() - t0)
+        with tr.span("train.step", {"i": i}):
+            state, metrics = step_fn(state, batch)
+        with tr.span("train.host_sync"):
+            jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        slow = timer.record(dt)
+        h_step.observe(dt)
+        c_steps.inc()
+        g_slow.set(timer.slow_steps)
         step = int(state["step"])
         if log_every and (i % log_every == 0 or i == n_steps - 1):
             log_fn(f"step {step}: loss={float(metrics['loss']):.4f} "
