@@ -585,6 +585,154 @@ def obs_sweep(print_fn=print, arch: str = "qwen2-0.5b", slots: int = 4,
     return results
 
 
+# ---------------------------------------------------------------------------
+# meshed serving: TP decode scaling + block-locality gate (subprocess)
+# ---------------------------------------------------------------------------
+
+def _mesh_child(cfg_json: str) -> int:
+    """Child-process body for ``mesh_sweep``: serve one deterministic
+    request stream on the requested mesh and print a single
+    ``MESH_CHILD_RESULT {json}`` line. Runs in its own process because the
+    forced-host-platform device count must be set before jax initializes."""
+    import jax
+
+    from repro.launch.mesh import make_debug_mesh
+    from repro.runtime.server import LMServer
+
+    c = json.loads(cfg_json)
+    cfg, model, params, cap = _build(c["arch"], c["policy"],
+                                     c["prompt_len"], c["max_tokens"])
+    mesh = (make_debug_mesh(c["mesh_data"], c["mesh_model"])
+            if c["mesh_data"] * c["mesh_model"] > 1 else None)
+    server = LMServer(model, params, cap=cap, batch_slots=c["slots"],
+                      buckets=(16,), cache_layout="paged",
+                      block_size=c["block_size"], n_blocks=c["n_blocks"],
+                      mesh=mesh, block_placement=c["placement"])
+    if c.get("warmup", True):
+        server.warmup()               # measure decode, not compile
+    reqs = _requests(cfg, c["n_requests"], c["prompt_len"], c["max_tokens"])
+    for r in reqs:
+        server.submit(r)
+    a = server.alloc
+    finished, remote_peak = [], 0.0
+    t0 = time.perf_counter()
+    # tick manually so remote_fraction is sampled while refs are LIVE
+    # (after the drain every slot has released and the fraction reads 0)
+    for _ in range(10_000):
+        if not server.scheduler.waiting and \
+                all(r is None for r in server.slot_req):
+            break
+        finished.extend(server.tick())
+        remote_peak = max(remote_peak, a.remote_fraction())
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens_out) for r in finished)
+    out = {
+        "tok_s": toks / max(dt, 1e-9),
+        "tokens": sorted((r.rid, list(map(int, r.tokens_out)))
+                         for r in finished),
+        "n_shards": a.n_shards,
+        "local": a.local_allocs,
+        "spilled": a.spilled_allocs,
+        "remote_fraction": remote_peak,
+    }
+    print("MESH_CHILD_RESULT " + json.dumps(out))
+    return 0
+
+
+def _spawn_mesh_child(child_cfg: dict, timeout: int = 1200) -> dict:
+    import os
+    import subprocess
+
+    env = dict(os.environ)
+    n_dev = max(child_cfg["mesh_data"] * child_cfg["mesh_model"], 1)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serving",
+         "--mesh-child", json.dumps(child_cfg)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"mesh child {child_cfg} failed:\n{proc.stdout}\n{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("MESH_CHILD_RESULT "):
+            return json.loads(line[len("MESH_CHILD_RESULT "):])
+    raise RuntimeError(f"mesh child emitted no result line:\n{proc.stdout}")
+
+
+def mesh_sweep(print_fn=print, arch: str = "qwen2-0.5b",
+               policy: str = "mirage", slots: int = 4,
+               block_size: int = 16, n_blocks: int = 32,
+               tp_list=(1, 2, 4), prompt_len: int = 12,
+               max_tokens: int = 16, n_requests: int = 6,
+               enforce: bool = True):
+    """Meshed-serving rows (each point is a fresh subprocess with its own
+    forced device count):
+
+      * ``tp{t}_tok_s`` — decode throughput of the paged engine at
+        model-parallel degree t (t=1 is the single-device baseline). On the
+        forced HOST platform the shards share physical cores, so wall-clock
+        SCALING is informational — the row exists so a real multi-chip run
+        of the same artifact shows the curve.
+      * locality gate (deterministic, enforced): on a data=2 mesh the
+        locality placement must strictly reduce spilled allocations AND
+        remote-gather fraction vs round_robin, at identical emitted tokens
+        — placement is bookkeeping, never semantics.
+    """
+    base = dict(arch=arch, policy=policy, slots=slots,
+                block_size=block_size, n_blocks=n_blocks,
+                prompt_len=prompt_len, max_tokens=max_tokens,
+                n_requests=n_requests, placement="locality")
+    print_fn(f"# meshed serving: {arch} policy={policy} slots={slots} "
+             f"blocks={n_blocks} requests={n_requests}")
+    results = {}
+    tok0 = None
+    for t in tp_list:
+        r = _spawn_mesh_child(dict(base, mesh_data=1, mesh_model=t))
+        results[f"tp{t}_tok_s"] = r["tok_s"]
+        print_fn(f"serving_mesh,tp{t}_tok_s,{r['tok_s']:.2f},"
+                 f"decode+prefill tok/s at model={t} (host-platform "
+                 f"scaling informational)")
+        if tok0 is None:
+            tok0 = r["tokens"]
+        elif enforce and r["tokens"] != tok0:
+            raise RuntimeError(
+                f"meshed engine at tp={t} diverged from the tp=1 greedy "
+                f"token stream")
+
+    loc = _spawn_mesh_child(dict(base, mesh_data=2, mesh_model=1))
+    rr = _spawn_mesh_child(dict(base, mesh_data=2, mesh_model=1,
+                                placement="round_robin"))
+    results.update(locality_spilled=loc["spilled"], rr_spilled=rr["spilled"],
+                   locality_remote=loc["remote_fraction"],
+                   rr_remote=rr["remote_fraction"])
+    print_fn(f"serving_mesh,locality_spilled_allocs,{loc['spilled']},"
+             f"data=2 mesh, locality placement ({loc['local']} local)")
+    print_fn(f"serving_mesh,round_robin_spilled_allocs,{rr['spilled']},"
+             f"data=2 mesh, round_robin placement ({rr['local']} local)")
+    print_fn(f"serving_mesh,locality_remote_fraction,"
+             f"{loc['remote_fraction']:.3f},peak live refs homed off-shard")
+    print_fn(f"serving_mesh,round_robin_remote_fraction,"
+             f"{rr['remote_fraction']:.3f},peak live refs homed off-shard")
+    print_fn(f"serving_mesh,locality_tok_s,{loc['tok_s']:.2f},"
+             f"throughput with locality placement")
+    print_fn(f"serving_mesh,round_robin_tok_s,{rr['tok_s']:.2f},"
+             f"throughput with round_robin placement")
+    if enforce:
+        if loc["tokens"] != rr["tokens"]:
+            raise RuntimeError(
+                "block placement changed the emitted token stream — "
+                "placement must be pure bookkeeping")
+        if loc["n_shards"] > 1 and not (
+                loc["spilled"] < rr["spilled"]
+                and loc["remote_fraction"] <= rr["remote_fraction"]):
+            raise RuntimeError(
+                f"locality placement did not beat round_robin: spilled "
+                f"{loc['spilled']} vs {rr['spilled']}, remote fraction "
+                f"{loc['remote_fraction']:.3f} vs "
+                f"{rr['remote_fraction']:.3f}")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -604,6 +752,13 @@ def main(argv=None):
                     help="skip the speculative-decoding sweep")
     ap.add_argument("--skip-obs", action="store_true",
                     help="skip the observability overhead/health sweep")
+    ap.add_argument("--skip-mesh", action="store_true",
+                    help="skip the meshed-serving sweep")
+    ap.add_argument("--mesh-tp", type=int, nargs="+", default=[1, 2, 4],
+                    help="model-parallel degrees for the mesh sweep")
+    ap.add_argument("--mesh-child", default=None, metavar="JSON",
+                    help="internal: run one meshed serving measurement "
+                         "in-process and print its result line")
     ap.add_argument("--obs-snr-db", type=float, default=12.0,
                     help="detector SNR for the observability health check")
     ap.add_argument("--spec-ks", type=int, nargs="+", default=[0, 2, 4])
@@ -619,6 +774,8 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--json", default=None, metavar="PATH")
     args = ap.parse_args(argv)
+    if args.mesh_child is not None:
+        return _mesh_child(args.mesh_child)
     if args.quick:
         args.slots = [1, 4]
         args.rates = [64.0]
@@ -626,6 +783,7 @@ def main(argv=None):
         args.max_tokens = 8
         args.long_len = 96
         args.prefix_len = 192
+        args.mesh_tp = [1, 2]
 
     from benchmarks.emit import BenchWriter
 
@@ -694,6 +852,20 @@ def main(argv=None):
               f"corrected residue faults at {args.obs_snr_db:g} dB, 0 on "
               f"the clean channel, tokens identical to the uninstrumented "
               f"engine")
+    if not args.skip_mesh:
+        mesh = mesh_sweep(writer, arch=args.arch, policy=args.policy,
+                          slots=max(args.slots),
+                          block_size=args.block_size,
+                          tp_list=tuple(args.mesh_tp),
+                          prompt_len=args.prompt_len,
+                          max_tokens=args.max_tokens,
+                          n_requests=max(args.slots) *
+                          args.requests_per_slot,
+                          enforce=True)  # all mesh gates are deterministic
+        print(f"# meshed serving: locality spills "
+              f"{mesh['locality_spilled']} vs round_robin "
+              f"{mesh['rr_spilled']} on a data=2 mesh "
+              f"(tokens identical across placements and TP degrees)")
     if args.json:
         writer.write_json(args.json, argv=list(argv or sys.argv[1:]),
                           elapsed_s=round(time.time() - t0, 2))

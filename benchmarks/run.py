@@ -115,6 +115,14 @@ def main(argv=None):
             # bench_serving run enforces them)
             bench_serving.obs_sweep(slots=2, n_requests=4, max_tokens=6,
                                     repeats=2, enforce=False)
+            # meshed serving: TP token parity + the locality-vs-round-robin
+            # placement gate (spilled allocs, peak remote fraction). The
+            # children run in subprocesses with forced host devices, so
+            # this process keeps its single-device view. All gates are
+            # deterministic (token equality / allocation counts), so they
+            # stay enforced even at CI scale.
+            bench_serving.mesh_sweep(slots=4, tp_list=(1, 2), max_tokens=8,
+                                     n_requests=6, enforce=True)
         if want("roofline"):
             roofline_section()
     elapsed = time.time() - t0

@@ -200,6 +200,8 @@ def analyze_cell(arch_id: str, shape_name: str, multi_pod: bool,
     # kept as auxiliary evidence. Primary numbers come from the loop-aware
     # HLO analyzer (launch/hlo_analysis.py) over the compiled text.
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: list of per-program dicts
+        cost = cost[0] if cost else {}
     ca_flops = float(cost.get("flops", 0.0))
     ca_bytes = float(cost.get("bytes accessed", 0.0))
 

@@ -78,6 +78,24 @@ def main(argv=None):
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: self-draft this many tokens "
                          "per tick, verify in one step (paged + greedy)")
+    ap.add_argument("--mesh-data", type=int, default=1,
+                    help="data-parallel mesh axis: shard slots (and paged "
+                         "block pools) over this many devices")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="tensor-parallel mesh axis: Megatron-shard the "
+                         "GEMMs over this many devices")
+    ap.add_argument("--block-placement", choices=("locality", "round_robin"),
+                    default="locality",
+                    help="paged-pool block placement under a data-sharded "
+                         "mesh: prefer same-shard blocks per slot "
+                         "(locality) or rotate blindly (round_robin, the "
+                         "baseline the benchmark gates against)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile every (bucket, batch) prefill shape "
+                         "plus tick/verify before traffic")
+    ap.add_argument("--pipeline-depth", type=int, default=0,
+                    help="overlap up to this many bucketed prefills with "
+                         "decode on a worker thread (0 = synchronous)")
     ap.add_argument("--snr-db", type=float, default=None,
                     help="serve through the analog channel at this SNR "
                          "(use with --policy mirage_rns_noisy/mirage_rrns)")
@@ -109,6 +127,23 @@ def main(argv=None):
         ap.error("--prefix-cache / --spec-k require --cache-layout paged")
     if args.spec_k and args.sample:
         ap.error("--spec-k verifies against greedy argmax; drop --sample")
+    if args.engine == "oracle" and (args.mesh_data > 1 or args.mesh_model > 1
+                                    or args.warmup or args.pipeline_depth):
+        ap.error("--mesh-data/--mesh-model/--warmup/--pipeline-depth need "
+                 "the batched engine")
+
+    mesh = None
+    if args.mesh_data > 1 or args.mesh_model > 1:
+        need = args.mesh_data * args.mesh_model
+        if len(jax.devices()) < need:
+            ap.error(
+                f"mesh {args.mesh_data}x{args.mesh_model} needs {need} "
+                f"devices but only {len(jax.devices())} are visible; on a "
+                f"CPU box set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+        from repro.launch.mesh import make_debug_mesh
+        mesh = make_debug_mesh(n_data=args.mesh_data,
+                               n_model=args.mesh_model)
 
     cfg = get_config(args.arch).reduced()
     overrides = {}
@@ -127,7 +162,19 @@ def main(argv=None):
                           n_blocks=args.n_blocks,
                           prefill_chunk=args.prefill_chunk,
                           prefix_cache=args.prefix_cache,
-                          spec_k=args.spec_k)
+                          spec_k=args.spec_k,
+                          mesh=mesh,
+                          pipeline_depth=args.pipeline_depth,
+                          block_placement=args.block_placement)
+        if mesh is not None:
+            print(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
+                  f"({len(mesh.devices.flat)} devices); allocator shards="
+                  f"{server.alloc.n_shards if server.alloc else 1} "
+                  f"placement={args.block_placement}")
+        if args.warmup:
+            w = server.warmup()
+            print(f"warmup: {w['compiled']:.0f} shapes compiled in "
+                  f"{w['seconds']:.1f}s")
     else:
         server = PerSlotLMServer(model, params, cap=cap,
                                  batch_slots=args.slots)
@@ -172,6 +219,12 @@ def main(argv=None):
         print(f"  paged KV: block_size={a.block_size}, pool={a.n_blocks} "
               f"blocks, peak in use {a.peak_in_use} "
               f"({a.peak_in_use / a.n_blocks:.0%})")
+        if a.n_shards > 1:
+            print(f"  block locality ({a.placement}): "
+                  f"{a.local_allocs} local / {a.spilled_allocs} spilled "
+                  f"allocs; remote-gather fraction "
+                  f"{a.remote_fraction():.2f}; free by shard "
+                  f"{a.free_by_shard()}")
     m = server.metrics
     if args.prefix_cache:
         print(f"  prefix cache: {m['prefix_hits']} hits "
@@ -212,6 +265,8 @@ def main(argv=None):
               f"{args.trace_export}")
     if http_srv is not None:
         http_srv.stop()
+    if hasattr(server, "close"):
+        server.close()
     return 0
 
 

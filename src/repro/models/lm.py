@@ -405,7 +405,19 @@ class LM:
         attention validity mask instead, so paged SWA capacity is ``cap``
         positions rather than ``min(cap, window)``. SSM recurrent state
         (``ssm``/``conv``) is O(1) per slot and stays dense under both
-        layouts."""
+        layouts.
+
+        Under a mesh (``parallel.sharding.cache_spec``) the pools shard on
+        the BLOCK dim over the data axis, so the page gathers in
+        ``attention.attn_decode_step`` / ``attn_chunk_step`` /
+        ``attn_verify_step`` (``cache_k[block_tables]``) cross shards
+        whenever a slot's table points at a block homed on another data
+        shard — GSPMD inserts the collective. The host-side
+        ``runtime.paging.BlockAllocator`` keeps those gathers local by
+        preferring blocks from the slot's home shard (``shard_of_block = b
+        // per_shard``, matching XLA's contiguous-chunk layout); its
+        ``remote_fraction()`` gauge is the observable for how often the
+        gather actually crosses shards."""
         if layout not in ("dense", "paged"):
             raise ValueError(f"unknown cache layout {layout!r}")
         paged = layout == "paged"

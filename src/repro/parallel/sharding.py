@@ -95,9 +95,15 @@ _PARAM_RULES = (
     (r"moe/router/w$",         ("fsdp", None)),
     (r"moe/(gate|up)$",        ("ep", "fsdp", "tp_if_no_ep")),
     (r"moe/down$",             ("ep", "tp_if_no_ep", "fsdp")),
-    (r"mamba/in_proj/w$",      ("fsdp", "tp")),
-    (r"mamba/out_proj/w$",     ("tp", "fsdp")),
-    (r"mamba/conv_w$",         (None, "tp")),
+    # Mamba2 projections: the in_proj output is SPLIT into uneven z|x|B|C|dt
+    # segments and the conv output re-sliced at the same offsets — those
+    # boundaries never align with TP shard boundaries, which trips the same
+    # multi-axis-mesh SPMD miscompilation as within-head rope sharding (see
+    # param_spec). FSDP over the data axis stays; TP stays off until the
+    # block grows shard-aligned segment layouts.
+    (r"mamba/in_proj/w$",      ("fsdp", None)),
+    (r"mamba/out_proj/w$",     (None, "fsdp")),
+    (r"mamba/conv_w$",         (None, None)),
     (r"frontend_proj/(fc1|fc2)?/?w$", ("fsdp", "tp")),
     (r"frontend_proj/w$",      ("fsdp", "tp")),
     (r"shared/proj/w$",        ("fsdp", "tp")),
@@ -125,6 +131,15 @@ def param_spec(mesh: Mesh, cfg: ModelConfig, pathstr: str,
         lead_none = 1
         core = shape[1:]
 
+    # Hybrid (zamba-style) stacks run their shared block inside a lax.cond
+    # nested in the layer scan; ANY sharded array reaching that cond (even
+    # contraction-only fsdp specs, or lm_head sharding propagated backward
+    # through the scan) hits the same multi-axis-mesh SPMD miscompilation
+    # as within-head rope sharding — silently wrong numerics, ~1e0 off.
+    # Until the cond is restructured, hybrid params replicate wholesale.
+    if cfg.family == "hybrid" or pathstr.startswith("shared/"):
+        return P(*([None] * len(shape)))
+
     roles: Optional[Tuple[Any, ...]] = None
     for pat, r in _PARAM_RULES:
         if re.search(pat, pathstr):
@@ -135,6 +150,17 @@ def param_spec(mesh: Mesh, cfg: ModelConfig, pathstr: str,
         return P(*([None] * len(shape)))
 
     ep_ok = cfg.n_experts > 0 and cfg.n_experts % tp_size(mesh) == 0
+    # q/k/v projections: shard the head-concat dim over TP only when every
+    # shard holds WHOLE heads. A within-head split is legal GSPMD, but
+    # rope's split/concat on the head_dim then crosses shard boundaries and
+    # XLA's SPMD partitioner miscompiles it on 2-axis meshes (observed on
+    # the CPU backend, jax 0.4.37: silently wrong numerics, ~1e0 off). GQA
+    # archs hit this whenever n_kv_heads < tp; replicating the kv
+    # projection there matches standard Megatron practice anyway.
+    if re.search(r"(attn|self_attn|cross_attn)/(q|k|v)/(w|b)$", pathstr):
+        hd = cfg.resolved_head_dim
+        if hd and (core[-1] // hd) % max(tp_size(mesh), 1) != 0:
+            roles = tuple(None if r == "tp" else r for r in roles)
     resolved = []
     for role in roles:
         if role == "fsdp":
@@ -211,7 +237,10 @@ def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
     if leaf in ("kp", "vp", "shared_kp", "shared_vp"):
         nl, NB, bs, kv, hd = shape
         b_ax = dp if NB % _axsize(mesh, dp) == 0 else None
-        return _fit(mesh, shape, (None, b_ax, None, "model", None))
+        # shared_* pools feed the hybrid family's cond-nested shared block:
+        # no tp there (see param_spec hybrid note)
+        kv_ax = None if leaf.startswith("shared_") else "model"
+        return _fit(mesh, shape, (None, b_ax, None, kv_ax, None))
     if leaf in ("k", "v", "self_k", "self_v", "cross_k", "cross_v",
                 "shared_k", "shared_v"):
         nl, B, S, kv, hd = shape
@@ -219,16 +248,35 @@ def cache_spec(mesh: Mesh, cfg: ModelConfig, name: str,
         # SP: if batch can't use the data axis, shard the sequence dim there
         s_ax = None if b_ax is not None else (
             "data" if S % _axsize(mesh, "data") == 0 else None)
-        return _fit(mesh, shape, (None, b_ax, s_ax, "model", None))
+        kv_ax = None if leaf.startswith("shared_") else "model"
+        return _fit(mesh, shape, (None, b_ax, s_ax, kv_ax, None))
     if leaf == "ssm":
+        # head dim stays unsharded: the mamba decode step re-slices its
+        # conv channels at segment boundaries that never align with TP
+        # shards (same SPMD miscompilation family as within-head rope;
+        # see param_spec)
         nl, B, H, Pd, N = shape
         b_ax = dp if B % _axsize(mesh, dp) == 0 else None
-        return _fit(mesh, shape, (None, b_ax, "model", None, None))
+        return _fit(mesh, shape, (None, b_ax, None, None, None))
     if leaf == "conv":
         nl, B, K, C = shape
         b_ax = dp if B % _axsize(mesh, dp) == 0 else None
-        return _fit(mesh, shape, (None, b_ax, None, "model"))
+        return _fit(mesh, shape, (None, b_ax, None, None))
     return P(*([None] * len(shape)))
+
+
+def serve_block_shards(mesh: Mesh, n_blocks: int, n_slots: int) -> int:
+    """How many contiguous chunks the paged pools' BLOCK dim and the slot
+    dim actually split into over dp — the serving allocator's locality
+    geometry (``BlockAllocator(n_shards=...)``). XLA splits a sharded dim
+    into equal contiguous chunks, so block ``b`` lives on shard
+    ``b // (n_blocks // d)`` and slot ``s`` on ``s // (n_slots // d)``.
+    Returns 1 whenever either dim can't take the axis (``cache_spec`` /
+    ``_fit`` then replicate it and locality has no meaning)."""
+    d = _axsize(mesh, dp_axes(mesh))
+    if d > 1 and n_blocks % d == 0 and n_slots % d == 0:
+        return d
+    return 1
 
 
 def serve_state_shardings(mesh: Mesh, cfg: ModelConfig, abstract_state):
@@ -241,6 +289,12 @@ def serve_state_shardings(mesh: Mesh, cfg: ModelConfig, abstract_state):
     is safe because pool leaves shard on the BLOCK dim (cache_spec), so a
     shared block has one home and every reader gathers from it."""
     dp = dp_axes(mesh)
+    # hybrid decode runs its shared block under lax.cond inside the tick;
+    # sharded state reaching it miscompiles on multi-axis meshes (see
+    # param_spec) — the whole serving state replicates for that family
+    if cfg.family == "hybrid":
+        return jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), abstract_state)
 
     def one(path, leaf):
         name = _path_str(path)

@@ -130,9 +130,12 @@ def resize_block_pool(state, allocator, new_n_blocks: int):
     :class:`repro.runtime.paging.BlockAllocator` — its ``resize_pool``
     renumbers the live blocks and rewrites every table; this moves the page
     ARRAYS to match. Refcounts move with the renumbering, so blocks shared
-    across slots stay shared at their new ids (the server remaps its prefix
-    index by the same compaction order). Raises if the live blocks don't
-    fit the new pool."""
+    across slots stay shared at their new ids. Under a sharded allocator
+    the compaction is shard-preserving, so the renumbering is NOT simple
+    sorted order — the explicit ``(old_ids, new_ids)`` map is returned
+    alongside the new state so the caller can remap its prefix index by
+    the same permutation. Raises if the live blocks don't fit the new
+    pool."""
     import jax.numpy as jnp
 
     from repro.models import lm as lm_helpers
@@ -151,7 +154,7 @@ def resize_block_pool(state, allocator, new_n_blocks: int):
         cache[k] = nv
     cache["bt"] = jnp.asarray(allocator.tables)
     allocator.dirty = False
-    return dict(state, cache=cache)
+    return dict(state, cache=cache), old_ids, new_ids
 
 
 def elastic_restore(ckpt: Checkpointer, abstract_state, shardings,

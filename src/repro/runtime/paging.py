@@ -18,22 +18,37 @@ those positions). The :class:`PrefixIndex` maps hash-chained full-block
 token prefixes to live block ids so admission can find reusable blocks in
 O(prompt blocks).
 
+Blocks are ALSO the unit of device **placement**: under a
+``jax.sharding.Mesh`` the page pools shard their block dim over the
+``data`` axis (``parallel.sharding.cache_spec``), i.e. the ``data``-shard
+of physical block ``b`` is ``b // (n_blocks // n_shards)`` (XLA splits a
+sharded dim into equal contiguous chunks). Slots shard over the same axis,
+so a slot's page-gather decode is LOCAL exactly when its table references
+blocks homed on its own shard. The allocator therefore keeps **per-shard
+free lists** and prefers same-shard blocks for each slot (``placement=
+"locality"``), falling back to a remote shard only when the home shard
+runs dry (counted in :attr:`BlockAllocator.spilled_allocs`);
+``placement="round_robin"`` is the locality-blind baseline the serving
+benchmark gates against. With ``n_shards=1`` (the single-device default)
+all of this degrades to the original one-heap behavior bit-for-bit.
+
 Split of responsibilities:
 
-  * the **allocator** (this module) is host-side bookkeeping: a lowest-id
-    free heap, per-slot tables, refcounts, alloc/share/fork/free/defrag. It
-    owns the authoritative ``tables`` array and mirrors it to the device
-    cache leaf ``bt`` (the server syncs lazily via
-    :attr:`BlockAllocator.dirty`);
+  * the **allocator** (this module) is host-side bookkeeping: lowest-id
+    free heaps (one per shard), per-slot tables, refcounts,
+    alloc/share/fork/free/defrag. It owns the authoritative ``tables``
+    array and mirrors it to the device cache leaf ``bt`` (the server syncs
+    lazily via :attr:`BlockAllocator.dirty`);
   * the **device** side only ever sees jittable arrays: the page pools and
     the ``(slots, max_blocks)`` int32 table whose unmapped entries hold the
     OOB sentinel ``n_blocks`` — scatter-writes through a sentinel drop on
     device, gathers clamp and are hidden by the position validity mask.
 
-Freed blocks re-enter a min-heap, so reuse prefers LOW physical ids: after a
-burst retires, the live region compacts toward the front of the pool
-(defrag-on-retirement), which is what makes :meth:`resize_pool` (elastic
-pool shrink/grow, ``runtime.elastic.resize_block_pool``) cheap.
+Freed blocks re-enter their home shard's min-heap, so reuse prefers LOW
+physical ids within each shard: after a burst retires, the live region
+compacts toward the front of every shard's range (defrag-on-retirement),
+which is what makes :meth:`resize_pool` (elastic pool shrink/grow,
+``runtime.elastic.resize_block_pool``) cheap.
 """
 
 from __future__ import annotations
@@ -51,8 +66,10 @@ def blocks_for(n_positions: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-heap block allocator with per-slot block tables and per-block
-    refcounts (shared read-only blocks for copy-on-write prefix caching).
+    """Free-heap block allocator with per-slot block tables, per-block
+    refcounts (shared read-only blocks for copy-on-write prefix caching)
+    and per-shard free lists (block-locality placement under data-sharded
+    page pools).
 
     A slot's mapped logical blocks form the contiguous range ``[lo, hi)``
     of its table row (``lo > 0`` after :meth:`trim_below` dropped
@@ -62,42 +79,88 @@ class BlockAllocator:
     ``tests/test_paging.py``):
       * ``refcount[b]`` equals the number of table entries referencing
         ``b`` across all slots (shared blocks count once per slot);
-      * a block is on the free heap iff its refcount is zero;
+      * a block is on a free heap iff its refcount is zero, and it sits on
+        its OWN shard's heap (``shard_of_block``);
       * within one slot the mapped entries are distinct block ids; entries
-        outside ``[lo, hi)`` hold the sentinel ``n_blocks``.
+        outside ``[lo, hi)`` hold the sentinel ``n_blocks``;
+      * with ``placement="locality"`` a block allocated while its home
+        shard had free blocks is local (spills only happen on exhaustion).
     """
 
+    PLACEMENTS = ("locality", "round_robin")
+
     def __init__(self, n_blocks: int, block_size: int, n_slots: int,
-                 max_blocks_per_slot: Optional[int] = None):
+                 max_blocks_per_slot: Optional[int] = None,
+                 n_shards: int = 1, placement: str = "locality"):
         if n_blocks < 1 or block_size < 1:
             raise ValueError(f"bad pool geometry: n_blocks={n_blocks} "
                              f"block_size={block_size}")
+        if n_shards < 1 or n_blocks % n_shards:
+            raise ValueError(
+                f"n_shards={n_shards} must divide n_blocks={n_blocks} "
+                f"(XLA splits the sharded block dim into equal contiguous "
+                f"chunks)")
+        if placement not in self.PLACEMENTS:
+            raise ValueError(f"unknown placement {placement!r} "
+                             f"(expected one of {self.PLACEMENTS})")
         self.n_blocks = int(n_blocks)
         self.block_size = int(block_size)
         self.n_slots = int(n_slots)
         self.max_blocks_per_slot = int(max_blocks_per_slot or n_blocks)
+        self.n_shards = int(n_shards)
+        self.placement = placement
         self.sentinel = self.n_blocks
-        self._free: List[int] = list(range(self.n_blocks))
-        heapq.heapify(self._free)
+        self._per_shard = self.n_blocks // self.n_shards
+        # one lowest-id min-heap per shard; shard k owns the contiguous id
+        # range [k * per_shard, (k+1) * per_shard)
+        self._free: List[List[int]] = [
+            list(range(k * self._per_shard, (k + 1) * self._per_shard))
+            for k in range(self.n_shards)]
+        for h in self._free:
+            heapq.heapify(h)
         self.tables = np.full((self.n_slots, self.max_blocks_per_slot),
                               self.sentinel, np.int32)
         self.refcount = np.zeros((self.n_blocks,), np.int64)
         self.n_owned = np.zeros((self.n_slots,), np.int64)   # hi watermark
         self.lo = np.zeros((self.n_slots,), np.int64)        # first mapped
         self.peak_in_use = 0
+        # placement telemetry: how many allocations landed on the owning
+        # slot's home shard vs spilled to a remote one (round_robin counts
+        # the same way, so the benchmark compares policies directly)
+        self.local_allocs = 0
+        self.spilled_allocs = 0
+        self._rr = 0                 # round_robin rotation cursor
         # host->device table sync flag: the server pushes ``tables`` to the
         # cache's ``bt`` leaf only when this is set (and clears it)
         self.dirty = True
+
+    # -- shard geometry --------------------------------------------------
+
+    def shard_of_block(self, block: int) -> int:
+        """The ``data``-shard holding physical block ``block`` (the pool's
+        block dim is split into equal contiguous chunks)."""
+        return int(block) // self._per_shard
+
+    def shard_of_slot(self, slot: int) -> int:
+        """The ``data``-shard holding ``slot``'s row of the stacked state
+        (same contiguous-chunk rule on the slot dim). Robust to slot counts
+        that don't divide evenly (locality then degrades gracefully)."""
+        return min(int(slot) * self.n_shards // max(self.n_slots, 1),
+                   self.n_shards - 1)
 
     # -- queries ---------------------------------------------------------
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        return sum(len(h) for h in self._free)
+
+    def free_by_shard(self) -> List[int]:
+        """Free-list depth per shard (the per-shard observability gauge)."""
+        return [len(h) for h in self._free]
 
     @property
     def used_count(self) -> int:
-        return self.n_blocks - len(self._free)
+        return self.n_blocks - self.free_count
 
     @property
     def occupancy(self) -> float:
@@ -117,6 +180,20 @@ class BlockAllocator:
         hwm = int(live[-1]) + 1
         return (hwm - live.size) / hwm
 
+    def remote_fraction(self) -> float:
+        """Fraction of live (slot, block) table references whose block is
+        homed on a DIFFERENT shard than the slot — each such reference is a
+        cross-shard page gather every decode tick (the collective GSPMD
+        inserts). 0.0 means fully local decode."""
+        total = remote = 0
+        for s in range(self.n_slots):
+            home = self.shard_of_slot(s)
+            for b in self.tables[s, self.lo[s]:self.n_owned[s]]:
+                total += 1
+                if self.shard_of_block(int(b)) != home:
+                    remote += 1
+        return remote / total if total else 0.0
+
     def can_fit(self, n_positions: int) -> bool:
         return blocks_for(n_positions, self.block_size) <= self.free_count
 
@@ -130,15 +207,41 @@ class BlockAllocator:
 
     # -- mutation --------------------------------------------------------
 
-    def _pop_free(self) -> int:
-        if not self._free:
+    def _pop_free(self, home: int) -> int:
+        """Pop one free block for a slot homed on shard ``home``.
+
+        ``locality``: the home shard's lowest free id, spilling to the
+        remote shard with the deepest free list (ties -> lowest shard)
+        only when home is dry. ``round_robin``: rotate across shards
+        regardless of home (the placement-blind baseline). Both count
+        local vs spilled against ``home`` so the policies are comparable.
+        """
+        if not any(self._free):
             raise RuntimeError(
                 f"block pool exhausted ({self.n_blocks} blocks of "
                 f"{self.block_size}); grow n_blocks or admit less")
-        return heapq.heappop(self._free)
+        if self.placement == "round_robin" and self.n_shards > 1:
+            for d in range(self.n_shards):
+                k = (self._rr + d) % self.n_shards
+                if self._free[k]:
+                    self._rr = (k + 1) % self.n_shards
+                    break
+        elif self._free[home]:
+            k = home
+        else:
+            k = max(range(self.n_shards), key=lambda j: len(self._free[j]))
+        if k == home:
+            self.local_allocs += 1
+        else:
+            self.spilled_allocs += 1
+        return heapq.heappop(self._free[k])
+
+    def _push_free(self, block: int) -> None:
+        heapq.heappush(self._free[self.shard_of_block(block)], block)
 
     def ensure(self, slot: int, n_positions: int) -> None:
-        """Grow ``slot``'s table until it covers ``n_positions`` tokens.
+        """Grow ``slot``'s table until it covers ``n_positions`` tokens,
+        preferring blocks homed on the slot's own shard.
 
         Raises :class:`RuntimeError` on pool exhaustion and
         :class:`ValueError` when the slot's table itself is full (the
@@ -150,13 +253,14 @@ class BlockAllocator:
                 f"slot {slot} needs {need} blocks for {n_positions} "
                 f"positions but tables hold {self.max_blocks_per_slot} "
                 f"(capacity {self.max_blocks_per_slot * self.block_size})")
-        if need - self.n_owned[slot] > len(self._free):
+        if need - self.n_owned[slot] > self.free_count:
             # atomic: a failed grow leaves the slot untouched
             raise RuntimeError(
                 f"block pool exhausted ({self.n_blocks} blocks of "
                 f"{self.block_size}); grow n_blocks or admit less")
+        home = self.shard_of_slot(slot)
         while self.n_owned[slot] < need:
-            b = heapq.heappop(self._free)
+            b = self._pop_free(home)
             self.tables[slot, self.n_owned[slot]] = b
             self.refcount[b] = 1
             self.n_owned[slot] += 1
@@ -186,14 +290,16 @@ class BlockAllocator:
 
     def fork_cow(self, slot: int, logical: int) -> Optional[Tuple[int, int]]:
         """Copy-on-write fork: give ``slot`` a private copy of its logical
-        block ``logical`` if that block is shared. Returns ``(src, dst)``
-        physical ids so the caller can copy the page rows on device, or
-        ``None`` when no fork is needed (unmapped / already private).
-        Raises :class:`RuntimeError` if the pool has no free block."""
+        block ``logical`` if that block is shared. The copy prefers the
+        slot's home shard (a fork is the one chance to bring a remote
+        shared block local). Returns ``(src, dst)`` physical ids so the
+        caller can copy the page rows on device, or ``None`` when no fork
+        is needed (unmapped / already private). Raises
+        :class:`RuntimeError` if the pool has no free block."""
         b = int(self.tables[slot, logical])
         if b == self.sentinel or self.refcount[b] <= 1:
             return None
-        nb = self._pop_free()
+        nb = self._pop_free(self.shard_of_slot(slot))
         self.refcount[b] -= 1
         self.refcount[nb] = 1
         self.tables[slot, logical] = nb
@@ -209,17 +315,17 @@ class BlockAllocator:
         self.refcount[b] -= 1
         assert self.refcount[b] >= 0, f"double free of block {b}"
         if self.refcount[b] == 0:
-            heapq.heappush(self._free, b)
+            self._push_free(b)
             freed.append(b)
         self.tables[slot, logical] = self.sentinel
         self.dirty = True
 
     def release(self, slot: int) -> List[int]:
         """Drop all of ``slot``'s references; blocks whose refcount hits
-        zero return to the pool (defrag-on-retirement: the min-heap hands
-        low ids back first). Returns the list of block ids actually FREED
-        (shared blocks survive in their other holders' tables) so the
-        caller can evict them from the prefix index."""
+        zero return to their home shard's heap (defrag-on-retirement: each
+        min-heap hands low ids back first). Returns the list of block ids
+        actually FREED (shared blocks survive in their other holders'
+        tables) so the caller can evict them from the prefix index."""
         freed: List[int] = []
         for j in range(int(self.lo[slot]), int(self.n_owned[slot])):
             self._drop_entry(slot, j, freed)
@@ -245,7 +351,10 @@ class BlockAllocator:
         """Elastic slot-count change: compact the kept slots' table rows to
         the front (row ``i`` <- old row ``keep[i]``), release everything
         else. Mirrors ``elastic.resize_serving_state`` slot compaction.
-        Returns the block ids freed by the dropped slots."""
+        Returns the block ids freed by the dropped slots. Kept slots may
+        change home shard (their row index moved): their existing blocks
+        keep their ids — locality degrades to a remote gather, never to an
+        error — and future growth prefers the NEW home."""
         keep = list(keep)
         if len(keep) > new_slots:
             raise ValueError(f"{len(keep)} kept slots do not fit {new_slots}")
@@ -267,39 +376,77 @@ class BlockAllocator:
         return freed
 
     def resize_pool(self, new_n_blocks: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Elastic pool resize with compaction: live blocks (refcount > 0)
-        are renumbered ``0..live-1`` in increasing old-id order. Returns
-        ``(old_ids, new_ids)`` so the caller can move the page-array rows
-        (``new_pages[:, new_ids] = old_pages[:, old_ids]``); tables are
-        rewritten in place (sentinel value changes with the pool size) and
-        refcounts move with the renumbering, so shared blocks stay shared."""
+        """Elastic pool resize with shard-preserving compaction: live
+        blocks (refcount > 0) keep their SHARD and compact toward the
+        front of that shard's new id range, in increasing old-id order —
+        a block that decoded locally before the resize still decodes
+        locally after it. A shard whose live blocks outgrow its new range
+        overflows into other shards' free space (lowest shard first);
+        single-shard pools reduce to the original global renumbering.
+        Returns ``(old_ids, new_ids)`` (aligned arrays, arbitrary order)
+        so the caller can move the page-array rows
+        (``new_pages[:, new_ids] = old_pages[:, old_ids]``) and remap a
+        prefix index; tables are rewritten in place (sentinel value
+        changes with the pool size) and refcounts move with the
+        renumbering, so shared blocks stay shared."""
+        new_n_blocks = int(new_n_blocks)
+        if new_n_blocks < 1 or new_n_blocks % self.n_shards:
+            raise ValueError(
+                f"new_n_blocks={new_n_blocks} must be a positive multiple "
+                f"of n_shards={self.n_shards}")
         used = np.sort(np.where(self.refcount > 0)[0])
         if len(used) > new_n_blocks:
             raise ValueError(f"{len(used)} blocks in use do not fit a pool "
                              f"of {new_n_blocks}")
+        new_per = new_n_blocks // self.n_shards
+        fill = [0] * self.n_shards          # next free offset per new shard
+        old_ids = [int(b) for b in used]
+        new_ids: List[Optional[int]] = [None] * len(old_ids)
+        overflow: List[int] = []            # indexes into old_ids
+        for i, b in enumerate(old_ids):
+            k = self.shard_of_block(b)
+            if fill[k] < new_per:
+                new_ids[i] = k * new_per + fill[k]
+                fill[k] += 1
+            else:
+                overflow.append(i)
+        for i in overflow:                  # spill into remaining capacity
+            k = next(j for j in range(self.n_shards) if fill[j] < new_per)
+            new_ids[i] = k * new_per + fill[k]
+            fill[k] += 1
         old_to_new = np.full((self.n_blocks,), new_n_blocks, np.int64)
-        old_to_new[used] = np.arange(len(used))
+        old_to_new[np.asarray(old_ids, np.int64)] = \
+            np.asarray(new_ids, np.int64)
         new_refcount = np.zeros((new_n_blocks,), np.int64)
-        new_refcount[:len(used)] = self.refcount[used]
+        new_refcount[np.asarray(new_ids, np.int64)] = self.refcount[used]
         mapped = self.tables < self.sentinel
         new_tables = np.full_like(self.tables, new_n_blocks)
         new_tables[mapped] = old_to_new[self.tables[mapped]]
-        old_ids, new_ids = used, np.arange(len(used))
-        self.n_blocks = int(new_n_blocks)
+        self.n_blocks = new_n_blocks
         self.sentinel = self.n_blocks
+        self._per_shard = new_per
         self.tables = new_tables.astype(np.int32)
         self.refcount = new_refcount
-        self._free = [b for b in range(self.n_blocks) if new_refcount[b] == 0]
-        heapq.heapify(self._free)
+        self._free = [[b for b in range(k * new_per, (k + 1) * new_per)
+                       if new_refcount[b] == 0]
+                      for k in range(self.n_shards)]
+        for h in self._free:
+            heapq.heapify(h)
         self.peak_in_use = min(self.peak_in_use, self.n_blocks)
         self.dirty = True
-        return old_ids, new_ids
+        return (np.asarray(old_ids, np.int64),
+                np.asarray(new_ids, np.int64))
 
     # -- integrity -------------------------------------------------------
 
     def check_invariants(self) -> None:
-        free = set(self._free)
-        assert len(free) == len(self._free), "duplicate ids on the free heap"
+        free_all: List[int] = []
+        for k, h in enumerate(self._free):
+            assert all(self.shard_of_block(b) == k for b in h), \
+                f"shard {k} heap holds a foreign block"
+            free_all.extend(h)
+        free = set(free_all)
+        assert len(free) == len(free_all), "duplicate ids on the free heaps"
         refs = np.zeros((self.n_blocks,), np.int64)
         for s in range(self.n_slots):
             lo, hi = int(self.lo[s]), int(self.n_owned[s])
@@ -320,7 +467,7 @@ class BlockAllocator:
         assert np.array_equal(refs, self.refcount), \
             "refcount != live table references"
         zero = {b for b in range(self.n_blocks) if self.refcount[b] == 0}
-        assert free == zero, "free heap != zero-refcount blocks"
+        assert free == zero, "free heaps != zero-refcount blocks"
 
 
 class PrefixIndex:

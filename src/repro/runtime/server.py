@@ -79,6 +79,42 @@ exactly those positions before any gather reads them; SSM/conv recurrent
 state rolls back by selecting the per-step stacked state at the accepted
 position.
 
+**Meshed serving** (``mesh=jax.sharding.Mesh(...)``): the engine runs
+dp×tp-sharded end to end. Params place with
+:func:`repro.parallel.sharding.param_shardings`, the whole state pytree
+(stacked/paged cache, per-slot control vectors, health accumulators) with
+:func:`repro.parallel.sharding.serve_state_shardings`, and every jitted
+step is built with those shardings as ``in_shardings``/``out_shardings``
+and the state argument **donated** — per-tick device state never round-
+trips or copies; the packed payload is the one replicated output the host
+reads. Under a meshed PAGED cache the pools shard their block dim over
+``data`` and the allocator becomes shard-aware (per-shard free lists,
+same-shard-first placement — see :mod:`repro.runtime.paging`), so decode
+page-gathers stay local instead of becoming all-to-alls. Token streams are
+identical to the single-device engine under greedy decode (the per-slot
+computation and the tick/prefill noise-key schedule do not depend on the
+mesh), including ``mirage_rrns`` on the same noise-seed.
+
+**Pipelined prefill** (``pipeline_depth=N``): whole-prompt bucketed
+prefill splits into a slot-independent *compute* half (forward pass +
+token selection — params and prompt tokens only) and a cheap donated
+*scatter* half (insert into the live state). A daemon worker thread runs
+computes from a queue while the decode loop keeps ticking; the decode
+thread applies finished scatters at the next tick. Admission stops
+claiming slots once ``N`` prefills are in flight (bounded backpressure),
+so a compile storm or a wave of long prompts can never buffer unboundedly
+ahead of token emission. Token-identical to the synchronous path for
+deterministic backends (per-slot decode depends only on the slot's own
+history); noisy backends draw a differently-interleaved — still valid —
+per-tick key stream because admission timing shifts.
+
+**AOT warmup** (:meth:`LMServer.warmup`): compile every (bucket, batch)
+prefill shape plus the tick/verify/chunk steps before traffic by running
+the REAL jitted steps against the idle state with out-of-bounds slot ids
+(scatters drop device-side; the few touched control leaves are snapshot/
+restored), so a warmed drain triggers zero compiles
+(:meth:`LMServer.compile_counts` is the assertion hook).
+
 :class:`PerSlotLMServer` is the seed's slot-at-a-time loop, retained only
 as the parity oracle (token-exact vs the batched engine under greedy
 decode) and as the benchmark baseline.
@@ -90,6 +126,8 @@ import collections
 import collections.abc
 import contextlib
 import dataclasses
+import queue
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -341,6 +379,80 @@ class Scheduler:
         return out
 
 
+class _PrefillPipeline:
+    """Prefill/decode overlap for :class:`LMServer` (``pipeline_depth``).
+
+    A daemon worker thread runs the slot-independent half of bucketed
+    prefill (``_prefill_compute``: the whole forward pass + token
+    selection, reading only the never-donated exec params) while the
+    decode loop keeps ticking; the decode thread applies the cheap donated
+    scatter when a compute lands. Backpressure is the ``depth`` bound on
+    jobs in flight — admission stops claiming slots past it, so prefill
+    compilation or a wave of long prompts can never buffer unboundedly
+    ahead of token emission. Single producer, single worker: both queues
+    are FIFO, so jobs complete and scatter in submission order (the FCFS
+    key schedule stays deterministic). JAX dispatch is thread-safe.
+    """
+
+    _STALL_S = 300.0
+
+    def __init__(self, server: "LMServer", depth: int):
+        self.server = server
+        self.depth = int(depth)
+        self.inflight = 0      # submitted, not yet scattered (decode thread)
+        self._in: queue.Queue = queue.Queue()
+        self._out: queue.Queue = queue.Queue()
+        self._thread = threading.Thread(
+            target=self._worker, name="lmserver-prefill", daemon=True)
+        self._thread.start()
+
+    @property
+    def full(self) -> bool:
+        return self.inflight >= self.depth
+
+    def submit(self, job: Dict[str, Any]) -> None:
+        self.inflight += 1
+        self._in.put(job)
+
+    def _worker(self) -> None:
+        srv = self.server
+        while True:
+            job = self._in.get()
+            if job is None:
+                return
+            try:
+                out = srv._prefill_compute(
+                    srv._exec_params, jnp.asarray(job["tokens"]),
+                    jnp.asarray(job["lens"]), job["nk"], job["sk"])
+                self._out.put((job, out, None))
+            except BaseException as e:    # re-raised on the decode thread
+                self._out.put((job, None, e))
+
+    def collect(self, block: bool) -> List[Tuple[Dict[str, Any], Any, Any]]:
+        """Finished jobs, oldest first: everything already done, plus —
+        when ``block`` (nothing else can make progress) — wait for at
+        least one."""
+        items: List[Tuple[Dict[str, Any], Any, Any]] = []
+        while True:
+            try:
+                if block and not items:
+                    items.append(self._out.get(timeout=self._STALL_S))
+                else:
+                    items.append(self._out.get_nowait())
+            except queue.Empty:
+                if block and not items:
+                    raise RuntimeError(
+                        f"prefill pipeline made no progress for "
+                        f"{self._STALL_S:.0f}s (worker dead?)")
+                break
+        self.inflight -= len(items)
+        return items
+
+    def close(self) -> None:
+        self._in.put(None)
+        self._thread.join(timeout=10.0)
+
+
 class LMServer:
     """Continuous-batching serving engine (the deployment path).
 
@@ -370,13 +482,27 @@ class LMServer:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
                  spec_k: int = 0,
-                 instrument: bool = True):
+                 instrument: bool = True,
+                 mesh=None,
+                 pipeline_depth: int = 0,
+                 block_placement: str = "locality"):
         self.model = model
         self.params = params
         self.cap = cap
         self.greedy = greedy
         self.n_slots = batch_slots
         cfg = model.cfg
+        self.mesh = mesh
+        if pipeline_depth < 0:
+            raise ValueError(f"pipeline_depth must be >= 0, got "
+                             f"{pipeline_depth}")
+        if pipeline_depth and (prefill_chunk is not None or prefix_cache):
+            raise ValueError(
+                "pipeline_depth overlaps whole-prompt bucketed prefill with "
+                "decode; chunked prefill already interleaves by construction "
+                "and prefix matching is ordered host state — combine with "
+                "neither")
+        self.pipeline_depth = int(pipeline_depth)
         self.cache_len = min(cap, cfg.sliding_window or cap)
         if cache_layout not in ("dense", "paged"):
             raise ValueError(f"unknown cache_layout {cache_layout!r}")
@@ -416,9 +542,19 @@ class LMServer:
             # default pool = slots * ceil(cap/bs): no memory saving but never
             # exhausts; pass a smaller n_blocks (sized to the live-token
             # budget of the workload) to realize the paged win
+            nb = n_blocks if n_blocks is not None else batch_slots * mb
+            # under a mesh the pool's block dim and the slot dim shard over
+            # ``data`` (cache_spec): tell the allocator the shard geometry
+            # so it can keep each slot's page-gathers on its own shard
+            if mesh is not None:
+                from repro.parallel import sharding as shard_rules
+                n_shards = shard_rules.serve_block_shards(
+                    mesh, nb, batch_slots)
+            else:
+                n_shards = 1
             self.alloc: Optional["BlockAllocator"] = BlockAllocator(
-                n_blocks if n_blocks is not None else batch_slots * mb,
-                block_size, batch_slots, mb)
+                nb, block_size, batch_slots, mb,
+                n_shards=n_shards, placement=block_placement)
         else:
             self.alloc = None
         # prefix caching needs pages to share AND skippable prefill: SSM /
@@ -508,18 +644,105 @@ class LMServer:
 
         self.state = self._init_state(batch_slots)
         self._bind_observability()
-        self._decode_tick = jax.jit(self._make_tick_fn())
-        self._prefill_insert = jax.jit(self._make_prefill_fn())
-        # prefix-cache misses/partial hits prefill through the chunk step
-        # (one call at pos0 = matched length), so both features share fns
-        if self.prefill_chunk is not None or self.prefix_cache:
+        self._place_on_mesh()
+        self._build_steps()
+        self._pipe: Optional[_PrefillPipeline] = \
+            _PrefillPipeline(self, self.pipeline_depth) \
+            if self.pipeline_depth else None
+
+    # ------------------------------------------------------------------
+    # mesh placement + jitted-step construction
+    # ------------------------------------------------------------------
+
+    def _place_on_mesh(self) -> None:
+        """Compute the engine's NamedShardings from the existing rules
+        (:mod:`repro.parallel.sharding`) and place params + state. Param
+        leaves the path rules don't recognize (e.g. stationary-residue
+        sub-trees) replicate; cache leaves follow ``cache_spec`` (paged
+        pools shard the BLOCK dim over ``data``, tables/control vectors
+        the slot dim). No-op without a mesh."""
+        if self.mesh is None:
+            self._param_sh = None
+            self._state_sh = None
+            return
+        from repro.parallel import sharding as shard_rules
+        cfg = self.model.cfg
+        self._param_sh = shard_rules.param_shardings(
+            self.mesh, cfg, self._exec_params)
+        self._state_sh = shard_rules.serve_state_shardings(
+            self.mesh, cfg, self.state)
+        self._exec_params = jax.device_put(self._exec_params, self._param_sh)
+        self.state = jax.device_put(self.state, self._state_sh)
+
+    def _build_steps(self) -> None:
+        """(Re)build every jitted step. Under a mesh each step pins
+        ``in_shardings`` for params/state, emits state with its own
+        shardings and the packed payload replicated, and DONATES the state
+        argument — the tick-to-tick state never copies; every call site
+        reassigns ``self.state`` from the step's output. Re-run after any
+        elastic resize (the state tree and its shardings changed)."""
+        mesh = self.mesh
+        want_chunks = self.prefill_chunk is not None or self.prefix_cache
+
+        if mesh is None:
+            self._decode_tick = jax.jit(self._make_tick_fn())
+            self._prefill_insert = jax.jit(self._make_prefill_fn())
+            self._prefill_compute = jax.jit(self._make_prefill_compute_fn())
+            self._prefill_scatter = jax.jit(self._make_prefill_scatter_fn())
+            # prefix-cache misses/partial hits prefill through the chunk
+            # step (one call at pos0 = matched length), so both share fns
+            if want_chunks:
+                mid, last = self._make_chunk_fns()
+                self._chunk_mid = jax.jit(mid)
+                self._chunk_last = jax.jit(last)
+            if self.prefix_cache:
+                self._attach = jax.jit(self._make_attach_fn())
+            if self.spec_k:
+                self._verify_tick = jax.jit(self._make_verify_fn())
+            return
+
+        from jax.sharding import NamedSharding, PartitionSpec
+        rep = NamedSharding(mesh, PartitionSpec())
+        ps, ss = self._param_sh, self._state_sh
+
+        def sharded(fn, n_rest, has_params=True, payload=True):
+            """jit ``fn(params?, state, rest...)`` with placed + donated
+            state; ``rest`` args (tokens, keys, scalars) stay unspecified —
+            the compiler replicates the small host-built arrays."""
+            in_sh = ([ps] if has_params else []) + [ss] + [None] * n_rest
+            out_sh = (ss, rep) if payload else ss
+            return jax.jit(fn, in_shardings=tuple(in_sh),
+                           out_shardings=out_sh,
+                           donate_argnums=(1 if has_params else 0,))
+
+        self._decode_tick = sharded(self._make_tick_fn(), 2)
+        self._prefill_insert = sharded(self._make_prefill_fn(), 7)
+        # pipeline halves: compute reads only params (never donated, so the
+        # worker thread can run it concurrently with decode); scatter is
+        # the donated state update
+        self._prefill_compute = jax.jit(
+            self._make_prefill_compute_fn(),
+            in_shardings=(ps, None, None, None, None))
+        self._prefill_scatter = sharded(self._make_prefill_scatter_fn(), 6,
+                                        has_params=False)
+        if want_chunks:
             mid, last = self._make_chunk_fns()
-            self._chunk_mid = jax.jit(mid)
-            self._chunk_last = jax.jit(last)
+            self._chunk_mid = sharded(mid, 5, payload=False)
+            self._chunk_last = sharded(last, 8)
         if self.prefix_cache:
-            self._attach = jax.jit(self._make_attach_fn())
+            self._attach = sharded(self._make_attach_fn(), 5,
+                                   has_params=False, payload=False)
         if self.spec_k:
-            self._verify_tick = jax.jit(self._make_verify_fn())
+            self._verify_tick = sharded(self._make_verify_fn(), 2)
+
+    def _refresh_placement(self) -> None:
+        """After an elastic resize changed the state tree: recompute
+        shardings, re-place, and rebuild the jitted steps (their
+        in_shardings/donation bind to the old tree). No-op without a
+        mesh — unsharded jits re-trace on the new shapes by themselves."""
+        if self.mesh is not None:
+            self._place_on_mesh()
+            self._build_steps()
 
     # ------------------------------------------------------------------
     # device-side step functions
@@ -550,9 +773,14 @@ class LMServer:
 
     def _sync_tables(self) -> None:
         """Mirror the allocator's block tables to the device cache leaf
-        (lazily — only after alloc/free/remap changed them)."""
+        (lazily — only after alloc/free/remap changed them). Under a mesh
+        the table is placed with its own sharding up front so the donated
+        steps never reshard it."""
         if self.alloc is not None and self.alloc.dirty:
-            self.state["cache"]["bt"] = jnp.asarray(self.alloc.tables)
+            bt = jnp.asarray(self.alloc.tables)
+            if self.mesh is not None:
+                bt = jax.device_put(bt, self._state_sh["cache"]["bt"])
+            self.state["cache"]["bt"] = bt
             self.alloc.dirty = False
 
     def _health_scope(self):
@@ -613,11 +841,14 @@ class LMServer:
 
         return tick
 
-    def _make_prefill_fn(self):
+    def _make_prefill_compute_fn(self):
+        """The slot-independent half of bucketed prefill: forward pass +
+        token selection from params and prompt tokens alone — nothing it
+        reads or writes belongs to the live engine state, which is what
+        lets the pipeline worker run it on another thread mid-decode."""
         model, cap, greedy = self.model, self.cap, self.greedy
 
-        def prefill_insert(params, state, tokens, lens, slots, eos, max_tok,
-                           noise_key, sample_key):
+        def prefill_compute(params, tokens, lens, noise_key, sample_key):
             with gemm.noise_key_scope(noise_key), self._health_scope() as hc:
                 logits, new_cache = model.prefill(params, tokens, cap,
                                                   lens=lens)
@@ -627,6 +858,17 @@ class LMServer:
             else:
                 tok = jax.random.categorical(sample_key, logits
                                              ).astype(jnp.int32)
+            hvals = hc.values if hc is not None else {}
+            return tok, new_cache, hvals
+
+        return prefill_compute
+
+    def _make_prefill_scatter_fn(self):
+        """The state half: insert a computed prefill into the live stacked
+        state (jitted scatter) and derive the admission payload."""
+
+        def prefill_scatter(state, tok, new_cache, hvals, slots, eos,
+                            max_tok):
             # instant retirement: the prefill token already hit EOS or the
             # whole budget was one token — never occupy a slot
             done0 = ((eos >= 0) & (tok == eos)) | (max_tok <= 1)
@@ -640,9 +882,27 @@ class LMServer:
                 eos=state["eos"].at[slots].set(eos, mode="drop"),
                 max_tok=state["max_tok"].at[slots].set(max_tok, mode="drop"),
             )
-            self._fold_health(state, state, hc)
+            if self._health_spec:
+                state["health"] = obs_health.fold(state["health"], hvals)
             payload = jnp.stack([tok, done0.astype(jnp.int32)], axis=-1)
             return state, payload
+
+        return prefill_scatter
+
+    def _make_prefill_fn(self):
+        """Synchronous prefill = compute ∘ scatter traced into ONE jit —
+        the op graph is identical to the pre-split monolith, so the
+        single-jit path stays bit-exact while the pipeline reuses the
+        same halves as two jits."""
+        compute = self._make_prefill_compute_fn()
+        scatter = self._make_prefill_scatter_fn()
+
+        def prefill_insert(params, state, tokens, lens, slots, eos, max_tok,
+                           noise_key, sample_key):
+            tok, new_cache, hvals = compute(params, tokens, lens,
+                                            noise_key, sample_key)
+            return scatter(state, tok, new_cache, hvals, slots, eos,
+                           max_tok)
 
         return prefill_insert
 
@@ -951,6 +1211,8 @@ class LMServer:
         requests retired AT admission (prefill token was EOS / one-token
         budget) — their slots are immediately reusable, so the loop keeps
         admitting while slots free up and work waits."""
+        if self._pipe is not None:
+            return self._admit_pipelined()
         if self.prefill_chunk is not None:
             return self._admit_chunked()
         if self.prefix_cache:
@@ -1010,6 +1272,97 @@ class LMServer:
                     else:
                         self.slot_req[my_slots[j]] = r
                         self._slot_pos[my_slots[j]] = len(r.prompt)
+
+    def _admit_pipelined(self) -> List[Request]:
+        """Pipelined whole-prompt admission: claim slots/blocks and hand
+        the bucketed prefill COMPUTE to the worker thread; apply finished
+        scatters here. Slots claimed at enqueue sit in ``self.prefilling``
+        (decode excludes them, the gauge counts them, drain waits on
+        them). Backpressure: stop claiming once ``pipeline_depth`` jobs
+        are in flight. Noise/sample keys are assigned at enqueue in FCFS
+        order — the same stream-1 counter schedule the sync path uses."""
+        retired: List[Request] = []
+        pipe = self._pipe
+        while not pipe.full:
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            if not free or not self.scheduler.waiting:
+                break
+            reqs = self._take_admissible(len(free))
+            if not reqs:
+                break
+            groups: Dict[int, List[Request]] = {}
+            for r in reqs:
+                groups.setdefault(self._bucket(len(r.prompt)), []).append(r)
+            # one take may submit a few groups past the depth bound; the
+            # outer loop re-checks before claiming any further requests
+            for Lb, group in sorted(groups.items()):
+                B = len(group)
+                Bp = 1 << (B - 1).bit_length()
+                tokens = np.zeros((Bp, Lb), np.int32)
+                lens = np.ones((Bp,), np.int32)
+                slots = np.full((Bp,), self.n_slots, np.int32)
+                eos = np.full((Bp,), -1, np.int32)
+                max_tok = np.ones((Bp,), np.int32)
+                my_slots = []
+                for j, r in enumerate(group):
+                    tokens[j, :len(r.prompt)] = r.prompt
+                    lens[j] = len(r.prompt)
+                    slots[j] = free.pop(0)
+                    my_slots.append(int(slots[j]))
+                    eos[j] = -1 if r.eos_id is None else r.eos_id
+                    max_tok[j] = r.max_tokens
+                    if self.alloc is not None:
+                        self.alloc.ensure(my_slots[j], len(r.prompt))
+                        self._slot_budget[my_slots[j]] = \
+                            self._block_budget(r)
+                    self._slot_poscap[my_slots[j]] = \
+                        len(r.prompt) + r.max_tokens
+                    # claim the slot now; decode skips it via prefilling
+                    self.slot_req[my_slots[j]] = r
+                self.scheduler.record_admit(group)
+                nk, sk = self._next_keys(1, self._prefill_count)
+                self._prefill_count += 1
+                job = {"group": group, "my_slots": my_slots,
+                       "tokens": tokens, "lens": lens, "slots": slots,
+                       "eos": eos, "max_tok": max_tok, "nk": nk, "sk": sk}
+                for j, r in enumerate(group):
+                    self.prefilling.append(
+                        {"req": r, "slot": my_slots[j], "pos": 0,
+                         "job": job})
+                pipe.submit(job)
+        # apply finished computes; block for one when nothing else can
+        # make progress (no decodable slot) and work is in flight
+        mid = {e["slot"] for e in self.prefilling}
+        can_decode = any(r is not None and i not in mid
+                         for i, r in enumerate(self.slot_req))
+        block = not can_decode and pipe.inflight > 0
+        for job, out, err in pipe.collect(block=block):
+            if err is not None:
+                raise err
+            tok, new_cache, hvals = out
+            self._sync_tables()
+            with obs_trace.get_tracer().span(
+                    "serve.prefill_scatter",
+                    {"batch": len(job["group"])}):
+                self.state, payload = self._prefill_scatter(
+                    self.state, tok, new_cache, hvals,
+                    jnp.asarray(job["slots"]), jnp.asarray(job["eos"]),
+                    jnp.asarray(job["max_tok"]))
+                payload = np.asarray(jax.device_get(payload))
+            t_host = time.perf_counter()
+            self.prefilling = [e for e in self.prefilling
+                               if e["job"] is not job]
+            for j, r in enumerate(job["group"]):
+                s = job["my_slots"][j]
+                r.t_first_token = t_host
+                self.scheduler.emit(r, int(payload[j, 0]))
+                if payload[j, 1]:
+                    self.slot_req[s] = None
+                    self._release_slot(s)
+                    retired.append(self.scheduler.retire(r))
+                else:
+                    self._slot_pos[s] = len(r.prompt)
+        return retired
 
     def _admit_prefix(self) -> List[Request]:
         """Admission with prefix caching: requests are admitted ONE at a
@@ -1353,6 +1706,143 @@ class LMServer:
             finished.extend(self.tick())
         return finished
 
+    # ------------------------------------------------------------------
+    # AOT warmup
+    # ------------------------------------------------------------------
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Per-step jit-cache sizes — the no-recompile assertion hook:
+        snapshot after :meth:`warmup`, drain traffic, snapshot again;
+        equal dicts mean the drain hit only warmed shapes."""
+        out: Dict[str, int] = {}
+        for name in ("_decode_tick", "_prefill_insert", "_prefill_compute",
+                     "_prefill_scatter", "_chunk_mid", "_chunk_last",
+                     "_attach", "_verify_tick"):
+            fn = getattr(self, name, None)
+            if fn is not None and hasattr(fn, "_cache_size"):
+                out[name.lstrip("_")] = int(fn._cache_size())
+        return out
+
+    def warmup(self) -> Dict[str, float]:
+        """AOT-compile every (bucket, batch) prefill shape plus the
+        tick/verify/chunk steps before traffic, by running the REAL jitted
+        steps against the idle state (donation-compatible — no state
+        copies):
+
+          * prefill warms target out-of-bounds slot ids, so every scatter
+            drops device-side;
+          * tick/verify on the all-inactive state are state-preserving by
+            design (the active mask freezes idx/recurrent state; garbage
+            KV lands where admission overwrites it);
+          * chunk/attach warms touch one slot's control leaves and
+            recurrent state — those few small leaves are snapshot before
+            and restored after, which is also why warmup requires an IDLE
+            engine.
+
+        Warmup keys come from their own stream (3): the real tick/prefill
+        counters are untouched, so a warmed engine emits the exact token
+        streams of a cold one, including under per-tick analog noise.
+
+        Attention families pad prompts to the configured buckets and
+        batches to powers of two, so coverage is complete; exact-length
+        families (SSM kind) are warmed at the bucket lengths only — other
+        prompt lengths still compile on first arrival. Records
+        ``serve_warmup_seconds`` / ``serve_warmup_compiled`` gauges and
+        returns ``{"seconds": ..., "compiled": ...}``."""
+        if self.scheduler.waiting or self.prefilling or \
+                any(r is not None for r in self.slot_req):
+            raise RuntimeError(
+                "warmup requires an idle engine — run it before traffic")
+        t0 = time.perf_counter()
+        before = sum(self.compile_counts().values())
+        nk, sk = self._next_keys(3, 0)
+        cache = self.state["cache"]
+        saved = jax.device_get({
+            "state": {k: v for k, v in self.state.items() if k != "cache"},
+            "cache": {k: cache[k] for k in ("idx", "ssm", "conv")
+                      if k in cache}})
+
+        # every (bucket, batch) prefill shape admission can produce:
+        # batches pad to powers of two up to the first pow2 >= n_slots
+        batches, b = [], 1
+        while b < self.n_slots:
+            batches.append(b)
+            b <<= 1
+        batches.append(b)
+        oob = self.n_slots
+        for Lb in self.buckets:
+            for B in batches:
+                tokens = jnp.zeros((B, Lb), jnp.int32)
+                lens = jnp.ones((B,), jnp.int32)
+                slots = jnp.full((B,), oob, jnp.int32)
+                eos = jnp.full((B,), -1, jnp.int32)
+                mt = jnp.ones((B,), jnp.int32)
+                if self._pipe is not None:
+                    tok, nc, hv = self._prefill_compute(
+                        self._exec_params, tokens, lens, nk, sk)
+                    self.state, _ = self._prefill_scatter(
+                        self.state, tok, nc, hv, slots, eos, mt)
+                else:
+                    self.state, _ = self._prefill_insert(
+                        self._exec_params, self.state, tokens, lens, slots,
+                        eos, mt, nk, sk)
+        self.state, _ = self._decode_tick(self._exec_params, self.state,
+                                          nk, sk)
+        if self.spec_k:
+            drafts = jnp.zeros((self.n_slots, self.spec_k), jnp.int32)
+            self.state, _ = self._verify_tick(self._exec_params, self.state,
+                                              drafts, nk)
+        z = jnp.asarray(0, jnp.int32)
+        if self.prefill_chunk is not None or self.prefix_cache:
+            sizes = set()
+            if self.prefill_chunk is not None:
+                sizes.add(self.prefill_chunk)
+            if self.prefix_cache and self.pad_prefill:
+                # _admit_one pads the unmatched suffix to a power of two
+                c = 1
+                while c < self.buckets[-1]:
+                    sizes.add(c)
+                    c <<= 1
+                sizes.add(c)
+            for C in sorted(sizes):
+                toks = jnp.zeros((1, C), jnp.int32)
+                if self.prefill_chunk is not None and C == self.prefill_chunk:
+                    self.state = self._chunk_mid(
+                        self._exec_params, self.state, toks, z, z,
+                        jnp.asarray(C, jnp.int32), nk)
+                self.state, _ = self._chunk_last(
+                    self._exec_params, self.state, toks, z, z,
+                    jnp.asarray(C, jnp.int32), jnp.asarray(-1, jnp.int32),
+                    jnp.asarray(1, jnp.int32), nk, sk)
+        if self.prefix_cache:
+            self.state = self._attach(self.state, z, z, z,
+                                      jnp.asarray(-1, jnp.int32),
+                                      jnp.asarray(1, jnp.int32))
+        # restore the touched control/recurrent leaves; the next sharded
+        # call re-places the (uncommitted) restored arrays via in_shardings
+        self.state = dict(self.state,
+                          **{k: jnp.asarray(v)
+                             for k, v in saved["state"].items()})
+        self.state["cache"] = dict(self.state["cache"],
+                                   **{k: jnp.asarray(v)
+                                      for k, v in saved["cache"].items()})
+        dt = time.perf_counter() - t0
+        compiled = sum(self.compile_counts().values()) - before
+        reg = self.scheduler.registry
+        reg.gauge("serve_warmup_seconds",
+                  help="AOT warmup walltime (compile every serving shape "
+                       "before traffic)").set(dt)
+        reg.gauge("serve_warmup_compiled",
+                  help="jit entries compiled by warmup").set(compiled)
+        return {"seconds": dt, "compiled": float(compiled)}
+
+    def close(self) -> None:
+        """Stop the prefill pipeline worker thread (idempotent; the engine
+        itself needs no teardown)."""
+        if getattr(self, "_pipe", None) is not None:
+            self._pipe.close()
+            self._pipe = None
+
     def resize_slots(self, new_slots: int) -> None:
         """Elastic slot-count change mid-flight (scale with offered load).
         Active slots are compacted to the front of the new stacked cache;
@@ -1384,6 +1874,7 @@ class LMServer:
         self._fork_pending = [self._fork_pending[i] for i in keep] + \
             [0] * (new_slots - len(keep))
         self.n_slots = new_slots
+        self._refresh_placement()
 
     def resize_block_pool(self, new_n_blocks: int) -> None:
         """Elastic block-pool resize (grow under admission pressure, shrink
@@ -1395,15 +1886,17 @@ class LMServer:
             raise RuntimeError(
                 "block pool resize requires cache_layout='paged'")
         from repro.runtime.elastic import resize_block_pool
-        # the allocator renumbers live blocks by compaction order; the
-        # prefix index must follow (shared/indexed blocks keep their
-        # refcounts, only their ids move)
-        old_live = np.sort(np.where(self.alloc.refcount > 0)[0])
-        self.state = resize_block_pool(self.state, self.alloc, new_n_blocks)
+        # the allocator's shard-preserving compaction returns the explicit
+        # renumbering (NOT simple sorted order once n_shards > 1); the
+        # prefix index follows the same map — shared/indexed blocks keep
+        # their refcounts, only their ids move
+        self.state, old_ids, new_ids = resize_block_pool(
+            self.state, self.alloc, new_n_blocks)
         if self.prefix_index is not None:
             self.prefix_index.remap(
-                {int(b): i for i, b in enumerate(old_live)})
+                {int(o): int(n) for o, n in zip(old_ids, new_ids)})
         self._sync_tables()
+        self._refresh_placement()
 
     # ------------------------------------------------------------------
     # observability
@@ -1453,6 +1946,31 @@ class LMServer:
                          lambda: alloc.fragmentation,
                          help="free holes inside the live block region as "
                               "a fraction of that region (0 = compact)")
+            # block-locality telemetry: how well the per-shard free lists
+            # kept page-gather decode local (single-shard pools read
+            # local=everything, spilled=0, remote=0)
+            reg.gauge_fn("serve_block_local_allocs",
+                         lambda: alloc.local_allocs,
+                         help="block allocations on the owning slot's "
+                              "home data-shard")
+            reg.gauge_fn("serve_block_spilled_allocs",
+                         lambda: alloc.spilled_allocs,
+                         help="block allocations that fell to a remote "
+                              "shard (home free list was dry)")
+            reg.gauge_fn("serve_block_remote_fraction",
+                         lambda: alloc.remote_fraction(),
+                         help="fraction of live table references whose "
+                              "block lives off the slot's shard — each is "
+                              "a cross-shard gather every decode tick")
+
+            def _collect_shard_depth(r, _alloc=alloc):
+                g = r.gauge("serve_block_free_per_shard",
+                            help="free-list depth per data shard of the "
+                                 "page pool", label_names=("shard",))
+                for k, v in enumerate(_alloc.free_by_shard()):
+                    g.labels(str(k)).set(v)
+
+            reg.add_collector(_collect_shard_depth)
         if self._health_spec:
             reg.add_collector(self._collect_health)
 

@@ -323,3 +323,163 @@ def test_prefix_index_remap_follows_pool_resize():
     assert ix.match(p) == [0, 1]
     ix.remap({0: 0})                         # block 1 freed by the resize
     assert ix.match(p) == [0] and len(ix) == 1
+
+
+# ---------------------------------------------------------------------------
+# sharded allocator (meshed serving: per-shard free lists + locality)
+# ---------------------------------------------------------------------------
+
+def test_shard_of_block_matches_xla_contiguous_chunks():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=4, n_shards=2)
+    assert [a.shard_of_block(b) for b in range(8)] == [0] * 4 + [1] * 4
+    assert [a.shard_of_slot(s) for s in range(4)] == [0, 0, 1, 1]
+    assert a.free_by_shard() == [4, 4]
+
+
+def test_single_shard_degrades_to_flat_allocator():
+    """n_shards=1 must behave bit-for-bit like the pre-sharding allocator:
+    lowest free id first, no spills ever counted."""
+    a = BlockAllocator(n_blocks=6, block_size=4, n_slots=2)
+    a.ensure(0, 8)
+    a.ensure(1, 8)
+    assert sorted(a.slot_blocks(0)) == [0, 1]
+    assert sorted(a.slot_blocks(1)) == [2, 3]
+    a.release(0)
+    a.ensure(1, 16)                          # reuses the freed low ids
+    assert sorted(a.slot_blocks(1)) == [0, 1, 2, 3]
+    assert a.spilled_allocs == 0
+    assert a.remote_fraction() == 0.0
+
+
+def test_locality_prefers_home_shard():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=4, n_shards=2)
+    a.ensure(0, 8)          # slot 0 home shard 0
+    a.ensure(2, 8)          # slot 2 home shard 1
+    assert {a.shard_of_block(b) for b in a.slot_blocks(0)} == {0}
+    assert {a.shard_of_block(b) for b in a.slot_blocks(2)} == {1}
+    assert a.local_allocs == 4 and a.spilled_allocs == 0
+    assert a.remote_fraction() == 0.0
+
+
+def test_locality_spills_when_home_shard_dry():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=4, n_shards=2)
+    a.ensure(0, 16)         # all 4 shard-0 blocks
+    assert a.free_by_shard() == [0, 4]
+    a.ensure(1, 8)          # home shard 0 is dry -> spill to shard 1
+    assert {a.shard_of_block(b) for b in a.slot_blocks(1)} == {1}
+    assert a.spilled_allocs == 2
+    assert a.remote_fraction() == pytest.approx(2 / 6)
+    a.check_invariants()
+    # full exhaustion still raises
+    a.ensure(2, 8)
+    with pytest.raises(RuntimeError):
+        a.ensure(3, 4)
+
+
+def test_round_robin_ignores_home_shard():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=4, n_shards=2,
+                       placement="round_robin")
+    a.ensure(0, 16)         # 4 blocks for a shard-0 slot
+    shards = [a.shard_of_block(b) for b in a.slot_blocks(0)]
+    assert shards.count(0) == 2 and shards.count(1) == 2
+    assert a.spilled_allocs == 2  # half landed off-home
+    with pytest.raises(ValueError):
+        BlockAllocator(4, 4, 1, n_shards=2, placement="nope")
+
+
+def test_n_shards_must_divide_pool():
+    with pytest.raises(ValueError):
+        BlockAllocator(n_blocks=7, block_size=4, n_slots=2, n_shards=2)
+
+
+def test_freed_blocks_return_to_their_own_shard():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=4, n_shards=2)
+    a.ensure(0, 16)
+    a.ensure(1, 8)          # spilled to shard 1
+    a.release(1)
+    assert a.free_by_shard() == [0, 4]       # spilled blocks went home to 1
+    a.release(0)
+    assert a.free_by_shard() == [4, 4]
+    a.check_invariants()
+
+
+def test_fork_cow_prefers_home_shard():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=4, n_shards=2)
+    a.ensure(0, 4)                            # block on shard 0
+    donor = a.slot_blocks(0)
+    a.share(2, donor)                         # slot 2 (home shard 1) shares
+    src, dst = a.fork_cow(2, 0)
+    assert a.shard_of_block(dst) == 1         # fork brought the copy local
+    a.check_invariants()
+
+
+def test_resize_pool_preserves_shard_residency():
+    a = BlockAllocator(n_blocks=16, block_size=4, n_slots=4, n_shards=2)
+    a.ensure(0, 8)
+    a.ensure(2, 8)
+    homes = {b: a.shard_of_block(b) for s in (0, 2) for b in a.slot_blocks(s)}
+    old_ids, new_ids = a.resize_pool(8)
+    a.check_invariants()
+    moved = dict(zip(map(int, old_ids), map(int, new_ids)))
+    for old, shard in homes.items():
+        assert a.shard_of_block(moved[old]) == shard
+    with pytest.raises(ValueError):
+        a.resize_pool(2)                      # 4 live blocks don't fit
+    with pytest.raises(ValueError):
+        a.resize_pool(7)                      # not a multiple of n_shards
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 24)),
+                min_size=1, max_size=40),
+       st.sampled_from(["locality", "round_robin"]))
+def test_sharded_admit_retire_preserves_invariants(ops, placement):
+    """Property: per-shard free lists stay disjoint and complete under any
+    admit/grow/retire interleaving, for both placement policies, and
+    locality never spills while the home shard has free blocks."""
+    a = BlockAllocator(n_blocks=16, block_size=4, n_slots=4, n_shards=2,
+                       placement=placement)
+    lens = [0] * 4
+    for slot, n in ops:
+        if n == 0:
+            a.release(slot)
+            lens[slot] = 0
+        else:
+            n = max(lens[slot], n)
+            need = blocks_for(n, 4) - blocks_for(lens[slot], 4)
+            if need > a.free_count:
+                with pytest.raises(RuntimeError):
+                    a.ensure(slot, n)
+            else:
+                home_free = a.free_by_shard()[a.shard_of_slot(slot)]
+                spills0 = a.spilled_allocs
+                a.ensure(slot, n)
+                lens[slot] = n
+                if placement == "locality" and need <= home_free:
+                    assert a.spilled_allocs == spills0
+        a.check_invariants()
+    assert a.local_allocs + a.spilled_allocs >= a.used_count
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 1))
+def test_sharded_resize_and_prefix_remap_stay_consistent(n_live, grow):
+    """Property: after shared-prefix COW traffic and a pool resize, the
+    prefix index follows the explicit (old, new) map and every remapped
+    block keeps its shard."""
+    a = BlockAllocator(n_blocks=16, block_size=4, n_slots=4, n_shards=2)
+    ix = PrefixIndex(4)
+    prompt = np.arange(4 * n_live, dtype=np.int32)
+    a.ensure(0, 4 * n_live)
+    chain = a.slot_blocks(0)
+    ix.insert_chain(prompt, chain)
+    a.share(2, ix.match(prompt))              # cross-shard sharing
+    a.fork_cow(2, 0)
+    homes = {int(b): a.shard_of_block(int(b)) for b in chain}
+    old_ids, new_ids = a.resize_pool(24 if grow else 16)
+    a.check_invariants()
+    moved = dict(zip(map(int, old_ids), map(int, new_ids)))
+    ix.remap(moved)
+    assert ix.match(prompt) == [moved[int(b)] for b in chain]
+    for old, shard in homes.items():
+        assert a.shard_of_block(moved[old]) == shard

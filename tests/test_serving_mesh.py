@@ -1,0 +1,224 @@
+"""Meshed serving engine: dp x tp token parity, pipelined prefill parity,
+and AOT warmup guarantees.
+
+Token-parity runs go through subprocesses with forced host devices (the
+same pattern as test_multidevice.py) so the main pytest process keeps its
+single-device view. Each subprocess serves the SAME request stream on a
+single device and on a data=2 x model=4 mesh and asserts the greedy token
+streams match exactly — including the mirage_rrns stochastic backend,
+whose noise keys derive from engine counters and therefore line up
+tick-for-tick across placements.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(py_src: str, n_dev: int = 8, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", py_src], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+_PARITY_SRC = """
+    import jax, numpy as np
+    from repro.configs import get_config
+    from repro.core.precision import get_policy
+    from repro.models import build_model
+    from repro.models.lm import LMCallOptions
+    from repro.runtime.server import LMServer, Request
+    from repro.launch.mesh import make_debug_mesh
+
+    arch, pol, layout = {arch!r}, {pol!r}, {layout!r}
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, get_policy(pol),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(mesh):
+        kw = dict(cache_layout=layout)
+        if layout == "paged":
+            kw.update(block_size=16, n_blocks=32)
+        s = LMServer(model, params, cap=64, batch_slots=4, buckets=(16,),
+                     mesh=mesh, **kw)
+        rng = np.random.default_rng(0)
+        for i in range(6):
+            s.submit(Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                max_tokens=8))
+        s.run_until_drained()
+        toks = {{r.rid: list(map(int, r.tokens_out))
+                 for r in s.scheduler.finished}}
+        assert len(toks) == 6
+        return toks
+
+    single = run(None)
+    mesh = make_debug_mesh(2, 4)
+    meshed = run(mesh)
+    assert single == meshed, (single, meshed)
+    print("MESH_PARITY_OK")
+"""
+
+
+@pytest.mark.parametrize("arch,pol,layout", [
+    ("qwen2-0.5b", "mirage", "paged"),
+    ("qwen2-0.5b", "mirage_rrns", "paged"),
+    ("mixtral-8x7b", "mirage", "paged"),
+    ("mamba2-2.7b", "mirage", "dense"),
+    ("zamba2-2.7b", "mirage", "dense"),
+])
+def test_meshed_engine_token_parity(arch, pol, layout):
+    """dp=2 x tp=4 meshed engine emits the exact single-device stream."""
+    src = textwrap.dedent(_PARITY_SRC.format(arch=arch, pol=pol,
+                                             layout=layout))
+    out = _run(src)
+    assert "MESH_PARITY_OK" in out
+
+
+def test_meshed_paged_allocator_is_sharded():
+    """Under a dp=2 mesh the allocator grows per-shard free lists and the
+    locality policy keeps allocations on the slot's home shard."""
+    src = textwrap.dedent("""
+        import jax, numpy as np
+        from repro.configs import get_config
+        from repro.core.precision import get_policy
+        from repro.models import build_model
+        from repro.models.lm import LMCallOptions
+        from repro.runtime.server import LMServer, Request
+        from repro.launch.mesh import make_debug_mesh
+
+        cfg = get_config("qwen2-0.5b").reduced()
+        model = build_model(cfg, get_policy("mirage"),
+                            LMCallOptions(q_chunk=16, kv_chunk=16))
+        params = model.init(jax.random.PRNGKey(0))
+        s = LMServer(model, params, cap=64, batch_slots=4, buckets=(16,),
+                     cache_layout="paged", block_size=16, n_blocks=32,
+                     mesh=make_debug_mesh(2, 4))
+        assert s.alloc.n_shards == 2, s.alloc.n_shards
+        rng = np.random.default_rng(0)
+        for i in range(6):
+            s.submit(Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                max_tokens=8))
+        s.run_until_drained()
+        assert s.alloc.local_allocs > 0
+        assert s.alloc.spilled_allocs == 0, s.alloc.spilled_allocs
+        assert s.alloc.remote_fraction() == 0.0
+        s.alloc.check_invariants()
+        print("ALLOC_SHARDED_OK")
+    """)
+    assert "ALLOC_SHARDED_OK" in _run(src)
+
+
+# ---------------------------------------------------------------------------
+# in-process (single device): pipelining and warmup
+# ---------------------------------------------------------------------------
+
+def _build(arch="qwen2-0.5b", pol="mirage", **kw):
+    import jax
+    from repro.configs import get_config
+    from repro.core.precision import get_policy
+    from repro.models import build_model
+    from repro.models.lm import LMCallOptions
+    from repro.runtime.server import LMServer
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, get_policy(pol),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, LMServer(model, params, cap=32, batch_slots=4,
+                         buckets=(16,), **kw)
+
+
+def _requests(cfg, n=6, max_tokens=8):
+    import numpy as np
+    from repro.runtime.server import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                    max_tokens=max_tokens)
+            for i in range(n)]
+
+
+def _drain(server, reqs):
+    for r in reqs:
+        server.submit(r)
+    server.run_until_drained()
+    return {r.rid: list(map(int, r.tokens_out))
+            for r in server.scheduler.finished}
+
+
+def test_pipelined_prefill_token_parity():
+    """pipeline_depth>0 overlaps prefill compute with decode ticks on a
+    worker thread; with a deterministic backend the emitted streams are
+    identical to the synchronous engine."""
+    cfg, sync = _build()
+    want = _drain(sync, _requests(cfg))
+    _, piped = _build(pipeline_depth=2)
+    try:
+        got = _drain(piped, _requests(cfg))
+    finally:
+        piped.close()
+    assert want == got
+
+
+def test_pipelined_prefill_error_propagates():
+    """A worker-thread failure surfaces on the scheduler thread instead of
+    hanging the drain loop."""
+    cfg, piped = _build(pipeline_depth=1)
+    try:
+        piped._prefill_compute = None  # simulates a dead jitted step
+        with pytest.raises(TypeError):
+            _drain(piped, _requests(cfg, n=2))
+    finally:
+        piped.close()
+
+
+def test_warmup_compiles_all_shapes_and_prevents_recompiles():
+    """warmup() pre-compiles every (bucket, batch) prefill shape plus the
+    tick; a warmed drain triggers zero new compilations and emits the same
+    tokens as a cold engine."""
+    cfg, cold = _build()
+    want = _drain(cold, _requests(cfg))
+
+    _, warm = _build()
+    stats = warm.warmup()
+    assert stats["compiled"] >= 2  # at least one prefill shape + the tick
+    assert stats["seconds"] > 0
+    counts = warm.compile_counts()
+    got = _drain(warm, _requests(cfg))
+    assert want == got, "warmup changed the emitted stream"
+    assert warm.compile_counts() == counts, (
+        "recompilation during a warmed drain", counts, warm.compile_counts())
+
+
+def test_warmup_requires_idle_engine():
+    cfg, srv = _build()
+    srv.submit(_requests(cfg, n=1)[0])
+    with pytest.raises(RuntimeError):
+        srv.warmup()
+
+
+def test_warmup_spec_decode_and_paged():
+    """Warmup covers the verify step (spec_k) and the paged layout."""
+    cfg, srv = _build(cache_layout="paged", block_size=8, n_blocks=32,
+                      spec_k=2)
+    counts0 = srv.warmup()
+    assert counts0["compiled"] >= 3  # prefill + tick + verify
+    counts = srv.compile_counts()
+    assert counts["verify_tick"] >= 1
+    _drain(srv, _requests(cfg))
+    assert srv.compile_counts() == counts
