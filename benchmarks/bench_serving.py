@@ -21,6 +21,11 @@ so ``--json`` makes them machine-readable):
     monolithic prefill (dense) vs chunked/piggybacked prefill. Rows report
     the max tick (the stall), the steady-state median tick, and the long
     request's TTFT for both engines.
+  * ``serving_degraded`` — graceful degradation under an SNR ramp:
+    throughput + exact-match-vs-clean-fp32 fraction for the raw
+    mirage_rrns engine vs the SNR guardian's verify-before-commit drain,
+    per collapse scale. The gate requires guardian-on to be EXACTLY fp32
+    at the severest collapse while guardian-off diverges.
 
   PYTHONPATH=src python -m benchmarks.bench_serving --json out.json
 """
@@ -733,6 +738,113 @@ def mesh_sweep(print_fn=print, arch: str = "qwen2-0.5b",
     return results
 
 
+def degraded_sweep(print_fn=print, arch: str = "qwen2-0.5b",
+                   slots: int = 2, prompt_len: int = 12,
+                   max_tokens: int = 8, n_requests: int = 4,
+                   snr_db: float = 60.0, noise_seed: int = 7,
+                   scales=(1e2, 1e6), window: int = 2,
+                   enforce: bool = True):
+    """Graceful degradation under an SNR ramp: throughput + exactness vs
+    the clean fp32 engine, guardian off vs on.
+
+    For each collapse scale the whole drain runs with the detector sigma
+    multiplied by ``scale`` (an SNR drop of ``20*log10(scale)`` dB).
+    Rows per scale:
+
+      * ``off_*``  — the raw mirage_rrns engine under the collapse:
+        achieved tok/s and the fraction of requests whose greedy stream
+        exactly matches clean fp32 (the corruption the guardian prevents);
+      * ``on_*``   — the same collapse drained through the SNR guardian's
+        verify-before-commit windows: tok/s (the price: rollbacks +
+        re-prefills + backend switches), exact-match fraction, the final
+        ladder level and the number of guardian transitions.
+
+    Exactness gate (``enforce``): at the severest scale the guardian-on
+    drain must be EXACTLY fp32 (every committed window ran on the fp32
+    rung — ``rrns_uncorrected == 0`` is the per-window certificate) while
+    guardian-off must have diverged; anything else means the guardian
+    stopped guarding. Mild-scale rows are informational: windows that
+    verify clean at low redundancy legitimately commit quantized-RRNS
+    streams, which differ from fp32 without being faulty.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.precision import get_policy
+    from repro.models import build_model
+    from repro.models.lm import LMCallOptions
+    from repro.runtime.faults import FaultInjector, FaultSchedule
+    from repro.runtime.resilience import SNRGuardian
+    from repro.runtime.server import LMServer
+
+    cfg = get_config(arch).reduced()
+    opts = LMCallOptions(q_chunk=32, kv_chunk=32)
+    cap = prompt_len + max_tokens + 4
+    fp32 = build_model(cfg, get_policy("fp32"), opts)
+    params = fp32.init(jax.random.PRNGKey(0))
+    rrns = build_model(cfg, get_policy("mirage_rrns", snr_db=snr_db,
+                                       noise_seed=noise_seed), opts)
+    print_fn(f"# serving_degraded: {arch} rrns@{snr_db:.0f}dB slots={slots} "
+             f"requests={n_requests} window={window}")
+
+    ref = LMServer(fp32, params, cap=cap, batch_slots=slots)
+    toks, dt, _ = _drain(ref, _requests(cfg, n_requests, prompt_len,
+                                        max_tokens))
+    want = {r.rid: list(map(int, r.tokens_out))
+            for r in ref.scheduler.finished}
+    print_fn(f"serving_degraded,fp32_clean,{toks / dt:.2f},tok_per_s")
+
+    def exact_frac(server):
+        got = {r.rid: list(map(int, r.tokens_out))
+               for r in server.scheduler.finished}
+        return sum(got.get(rid) == toks_ for rid, toks_ in want.items()) \
+            / len(want)
+
+    results = {}
+    for scale in scales:
+        spec = f"snr_drop@0:1000000:scale={scale}"
+        tag = f"snr-{20 * np.log10(scale):.0f}db"
+
+        inj = FaultInjector(FaultSchedule.parse(spec), seed=0)
+        off = LMServer(rrns, params, cap=cap, batch_slots=slots,
+                       instrument=True, fault_injector=inj)
+        toks, dt, _ = _drain(off, _requests(cfg, n_requests, prompt_len,
+                                            max_tokens))
+        off_exact = exact_frac(off)
+        print_fn(f"serving_degraded,off_{tag},{toks / dt:.2f},"
+                 f"tok_per_s;exact={off_exact:.2f}")
+
+        inj = FaultInjector(FaultSchedule.parse(spec), seed=0)
+        on = LMServer(rrns, params, cap=cap, batch_slots=slots,
+                      instrument=True, fault_injector=inj)
+        guardian = SNRGuardian(on, window=window, cooldown=10 ** 6)
+        for r in _requests(cfg, n_requests, prompt_len, max_tokens):
+            on.submit(r)
+        t0 = time.perf_counter()
+        guardian.run_until_drained()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.tokens_out) for r in on.scheduler.finished)
+        on_exact = exact_frac(on)
+        print_fn(f"serving_degraded,on_{tag},{toks / dt:.2f},"
+                 f"tok_per_s;exact={on_exact:.2f};level={guardian.level};"
+                 f"transitions={len(guardian.transitions)}")
+        results[scale] = {"off_exact": off_exact, "on_exact": on_exact,
+                          "level": guardian.level,
+                          "transitions": len(guardian.transitions)}
+
+    worst = results[max(scales)]
+    print_fn(f"serving_degraded,exactness_gate,"
+             f"{float(worst['on_exact'] == 1.0 and worst['off_exact'] < 1.0)},"
+             f"guardian_on_exact_and_off_diverged")
+    if enforce and not (worst["on_exact"] == 1.0
+                        and worst["off_exact"] < 1.0):
+        raise RuntimeError(
+            f"degradation gate failed at scale={max(scales):g}: guardian-on "
+            f"exact fraction {worst['on_exact']:.2f} (must be 1.0), "
+            f"guardian-off {worst['off_exact']:.2f} (must be < 1.0)")
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -754,6 +866,8 @@ def main(argv=None):
                     help="skip the observability overhead/health sweep")
     ap.add_argument("--skip-mesh", action="store_true",
                     help="skip the meshed-serving sweep")
+    ap.add_argument("--skip-degraded", action="store_true",
+                    help="skip the SNR-adaptive degradation sweep")
     ap.add_argument("--mesh-tp", type=int, nargs="+", default=[1, 2, 4],
                     help="model-parallel degrees for the mesh sweep")
     ap.add_argument("--mesh-child", default=None, metavar="JSON",
@@ -852,6 +966,19 @@ def main(argv=None):
               f"corrected residue faults at {args.obs_snr_db:g} dB, 0 on "
               f"the clean channel, tokens identical to the uninstrumented "
               f"engine")
+    if not args.skip_degraded:
+        deg = degraded_sweep(writer, arch=args.arch,
+                             slots=min(2, max(args.slots)),
+                             prompt_len=args.prompt_len,
+                             max_tokens=(6 if args.quick else 8),
+                             n_requests=4,
+                             scales=((1e6,) if args.quick else (1e2, 1e6)),
+                             enforce=True)  # exactness gate is deterministic
+        w = deg[max(deg)]
+        print(f"# SNR-adaptive degradation: guardian-on exact fraction "
+              f"{w['on_exact']:.2f} at the severest collapse "
+              f"(guardian-off {w['off_exact']:.2f}), "
+              f"{w['transitions']} ladder transitions")
     if not args.skip_mesh:
         mesh = mesh_sweep(writer, arch=args.arch, policy=args.policy,
                           slots=max(args.slots),

@@ -123,6 +123,12 @@ def main(argv=None):
             # stay enforced even at CI scale.
             bench_serving.mesh_sweep(slots=4, tp_list=(1, 2), max_tokens=8,
                                      n_requests=6, enforce=True)
+            # SNR-adaptive degradation: guardian-on must stream exact
+            # fp32 under a full collapse while guardian-off diverges —
+            # deterministic, so the gate stays enforced at CI scale
+            bench_serving.degraded_sweep(slots=2, n_requests=4,
+                                         max_tokens=6, scales=(1e6,),
+                                         enforce=True)
         if want("roofline"):
             roofline_section()
     elapsed = time.time() - t0

@@ -22,15 +22,67 @@ per-level sigma on every modulus (see :meth:`AnalogChannelConfig.from_policy`).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
-from typing import Optional, Sequence
+import threading
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.analog import device
 from repro.obs import health as obs_health
+
+
+# -- runtime fault controls (chaos injection) ----------------------------
+#
+# The serving engine compiles its step functions ONCE; mid-run channel
+# faults (SNR collapse, burst storms, stuck detector channels) must
+# therefore enter the traced computation as *operands*, not as config
+# constants. ``fault_scope`` is a trace-time thread-local — the same
+# ambient-scope pattern as ``gemm.noise_key_scope`` — carrying a small
+# pytree of traced control arrays that the channel stages consume when a
+# scope is active. With no scope (the default) every stage traces exactly
+# as before: zero overhead, bit-identical programs. With a scope whose
+# controls are the identity (``identity_fault_controls``) the extra traced
+# ops are arithmetic no-ops (noise * sigma * 1.0, where(False, ...)), so
+# outputs stay bit-identical to the unscoped engine under the same keys.
+
+_FAULT = threading.local()
+
+
+def identity_fault_controls(n_moduli: int) -> Dict[str, jnp.ndarray]:
+    """The do-nothing control pytree for an ``n_moduli``-channel readout:
+    detector sigma unscaled, no extra bursts, no stuck channels."""
+    return {
+        "sigma_scale": jnp.float32(1.0),
+        "burst_rate": jnp.float32(0.0),
+        "burst_width": jnp.int32(1),
+        "stuck_mask": jnp.zeros((n_moduli,), jnp.bool_),
+        "stuck_level": jnp.zeros((n_moduli,), jnp.int32),
+    }
+
+
+@contextlib.contextmanager
+def fault_scope(controls: Optional[Dict[str, jnp.ndarray]]):
+    """Make ``controls`` ambient for channel stages traced inside the
+    scope. ``None`` is allowed and pushes an inert scope (stages trace
+    the unfaulted path), so call sites can pass through unconditionally."""
+    stack = getattr(_FAULT, "stack", None)
+    if stack is None:
+        stack = _FAULT.stack = []
+    stack.append(controls)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def fault_controls() -> Optional[Dict[str, jnp.ndarray]]:
+    """The innermost active fault-control pytree, or ``None``."""
+    stack = getattr(_FAULT, "stack", None)
+    return stack[-1] if stack else None
 
 
 def detector_sigma_levels(m: int, snr_db: float) -> float:
@@ -155,10 +207,15 @@ def converter_quantize(residues: jax.Array, moduli: Sequence[int],
 
 
 def phase_noise(residues: jax.Array, moduli: Sequence[int],
-                sigmas: Sequence[float], key: jax.Array) -> jax.Array:
+                sigmas, key: jax.Array) -> jax.Array:
     """Per-modulus additive Gaussian phase noise, re-quantized to the nearest
-    level and wrapped mod m (the detector reads phases on a ring)."""
-    if all(s <= 0 for s in sigmas):
+    level and wrapped mod m (the detector reads phases on a ring).
+
+    ``sigmas`` is a per-modulus sequence of floats (static: an all-zero
+    chain short-circuits to the identity) or a traced f32 array of the
+    same length (runtime fault controls: always traced, zero sigma is an
+    arithmetic no-op)."""
+    if not isinstance(sigmas, jax.Array) and all(s <= 0 for s in sigmas):
         return residues
     sig = jnp.asarray(sigmas, jnp.float32).reshape(
         (-1,) + (1,) * (residues.ndim - 1))
@@ -188,8 +245,8 @@ def crosstalk_mix(residues: jax.Array, moduli: Sequence[int],
                    _mods_col(moduli, residues.ndim)).astype(jnp.int32)
 
 
-def burst_errors(residues: jax.Array, moduli: Sequence[int], rate: float,
-                 width: int, key: jax.Array) -> jax.Array:
+def burst_errors(residues: jax.Array, moduli: Sequence[int], rate,
+                 width, key: jax.Array) -> jax.Array:
     """Correlated burst corruption: with probability ``rate`` per output
     element, ``width`` ADJACENT residue channels (wrapping at the array
     edge, like the physical detector bank) take uniform errors in
@@ -201,8 +258,11 @@ def burst_errors(residues: jax.Array, moduli: Sequence[int], rate: float,
     is a single-residue error — exactly the regime two redundant moduli
     correct 100% of; at ``width>=2`` the burst exceeds the correction
     radius and the decode degrades detectably (tested both ways).
+
+    ``rate``/``width`` may be traced scalars (runtime fault controls);
+    the zero-rate short-circuit only applies to the static case.
     """
-    if rate <= 0:
+    if not isinstance(rate, jax.Array) and rate <= 0:
         return residues
     n = len(moduli)
     k_hit, k_pos, k_err = jax.random.split(key, 3)
@@ -243,10 +303,18 @@ def apply_readout_channel(residues: jax.Array, moduli: Sequence[int],
                           cfg: AnalogChannelConfig,
                           key: Optional[jax.Array],
                           group_axis: int = 1) -> jax.Array:
-    """Readout-side chain: crosstalk -> detector noise -> ADC re-quantize."""
+    """Readout-side chain: crosstalk -> detector noise -> ADC re-quantize.
+
+    Under an active :func:`fault_scope` the detector sigma is scaled by the
+    traced ``sigma_scale`` control (SNR-collapse injection: scaling the
+    same normal draw preserves bit-identity at scale 1.0) and ``stuck``
+    channels are clamped to their stuck level after the noise stage."""
+    ctl = fault_controls()
     out = crosstalk_mix(residues, moduli, cfg.crosstalk, group_axis)
     sigmas = cfg.detector_sigmas(moduli)
-    if any(s > 0 for s in sigmas):
+    if ctl is not None:
+        sigmas = jnp.asarray(sigmas, jnp.float32) * ctl["sigma_scale"]
+    if isinstance(sigmas, jax.Array) or any(s > 0 for s in sigmas):
         noisy = phase_noise(out, moduli, sigmas, key)
         if obs_health.active():
             # per-channel count of residues the detector noise moved >= 1
@@ -256,4 +324,16 @@ def apply_readout_channel(residues: jax.Array, moduli: Sequence[int],
                 (noisy != out).astype(jnp.int32),
                 axis=tuple(range(1, out.ndim))))
         out = noisy
+    if ctl is not None:
+        shape = (-1,) + (1,) * (out.ndim - 1)
+        mask = ctl["stuck_mask"].reshape(shape)
+        level = jnp.mod(
+            ctl["stuck_level"].astype(jnp.float32).reshape(shape),
+            _mods_col(moduli, out.ndim)).astype(jnp.int32)
+        stuck = jnp.where(mask, level, out)
+        if obs_health.active():
+            obs_health.record("detector_flips", jnp.sum(
+                (stuck != out).astype(jnp.int32),
+                axis=tuple(range(1, out.ndim))))
+        out = stuck
     return converter_quantize(out, moduli, cfg.adc_bits)

@@ -97,6 +97,7 @@ class RRNSTables:
     comp: np.ndarray          # (S, n_total - n_required) int32 complement
     binom: Tuple[int, ...]    # vote count per consistent-complement count
     f32_exact: bool           # every decode bound fits the f32 window
+    vote_threshold: int       # min winner votes inside the correction radius
 
     @property
     def n_subsets(self) -> int:
@@ -153,6 +154,16 @@ def build_tables(moduli: Sequence[int], n_required: int,
         np.int64).reshape(len(subsets), n_total - n_required)
     binom = tuple(math.comb(n_required + e, n_required)
                   for e in range(n_total - n_required + 1))
+    # Trust certificate (classic RRNS): with r redundant moduli the decode
+    # corrects t = floor(r/2) residue errors, and a winner is inside that
+    # radius iff it is consistent with >= n_total - t moduli, i.e. its
+    # vote count reaches C(n_required + r - t, n_required). Winners below
+    # this (however "legal" their value) are beyond the correction radius
+    # and untrustworthy — note psi = (M_base - 1) // 2 makes the all-base
+    # subset legal for EVERY residue tuple, so mere legality certifies
+    # nothing.
+    r = n_total - n_required
+    vote_threshold = math.comb(n_required + r - r // 2, n_required)
     return RRNSTables(
         moduli=moduli, n_required=n_required, psi=int(psi),
         subsets=subsets,
@@ -163,6 +174,7 @@ def build_tables(moduli: Sequence[int], n_required: int,
         comp=comp.astype(np.int32),
         binom=binom,
         f32_exact=bool(f32_exact),
+        vote_threshold=int(vote_threshold),
     )
 
 
@@ -297,14 +309,19 @@ def rrns_decode(residues: jax.Array,
     decoded = jnp.where(any_legal, best_val, zero).astype(jnp.int32)
     corrected = jnp.where(any_legal, best_votes < float(S), True)
     if obs_health.active():
-        # split the conflated flag for telemetry: repaired (a legal value
-        # won with dissent) vs unrepairable (no legal reconstruction —
-        # the output clamps to 0). Guarded: without an open collection
-        # scope these reductions are never traced. One fused reduction
-        # (cheaper than two chains in the op-dispatch-bound decode step):
-        # vot >= S implies legal, so legal - full_agreement = repaired and
-        # size - legal = unrepairable.
-        n = jnp.sum(jnp.stack([best_votes >= 0.0, best_votes >= float(S)])
+        # split the conflated flag for telemetry by the correction-radius
+        # certificate: corrected = winner inside the radius (votes >=
+        # tables.vote_threshold) but with dissent — exactly repaired;
+        # uncorrected = winner beyond the radius or no legal value at all
+        # — untrustworthy output. Legality alone certifies nothing (the
+        # all-base subset is legal for every residue tuple), so the old
+        # no-legal-value split could never fire. Guarded: without an open
+        # collection scope these reductions are never traced. One fused
+        # reduction (cheaper than two chains in the op-dispatch-bound
+        # decode step): vot >= S implies trusted, so trusted -
+        # full_agreement = repaired and size - trusted = untrustworthy.
+        T = float(tables.vote_threshold)
+        n = jnp.sum(jnp.stack([best_votes >= T, best_votes >= float(S)])
                     .astype(jnp.int32),
                     axis=tuple(range(1, best_votes.ndim + 1)))
         obs_health.record("rrns_corrected", n[0] - n[1])
@@ -351,8 +368,10 @@ def rrns_decode_reference(residues: jax.Array,
     decoded = jnp.where(any_legal, decoded, 0)
     corrected = jnp.where(any_legal, max_votes < S, True)
     if obs_health.active():
+        # same correction-radius split as the fused decode
+        trusted = max_votes >= tables.vote_threshold
         obs_health.record("rrns_corrected", jnp.sum(
-            (any_legal & (max_votes < S)).astype(jnp.int32)))
+            (trusted & (max_votes < S)).astype(jnp.int32)))
         obs_health.record("rrns_uncorrected",
-                          jnp.sum((~any_legal).astype(jnp.int32)))
+                          jnp.sum((~trusted).astype(jnp.int32)))
     return decoded, corrected

@@ -125,7 +125,11 @@ def _analog_forward(x, w, policy, key, correct: bool, reference: bool = False):
     cfg = channel.AnalogChannelConfig.from_policy(policy)
     moduli = (rrns.rrns_moduli(policy) if correct
               else tuple(policy.moduli))
-    if cfg.stochastic:
+    # runtime fault controls (chaos injection) make otherwise-static
+    # stages data-dependent: the noise/burst paths must trace even when
+    # the config alone would skip them, and they need key material
+    ctl = channel.fault_controls()
+    if cfg.stochastic or ctl is not None:
         k_shape = (w.orig_k, w.residues.shape[-1]) \
             if isinstance(w, stationary.StationaryResidues) else w.shape
         k_prog, k_det, k_burst = jax.random.split(
@@ -138,7 +142,7 @@ def _analog_forward(x, w, policy, key, correct: bool, reference: bool = False):
     if use_pallas:
         from repro.kernels import ops as kops
         sig = cfg.detector_sigmas(moduli)
-        if cfg.crosstalk or not any(s > 0 for s in sig):
+        if ctl is not None or cfg.crosstalk or not any(s > 0 for s in sig):
             # crosstalk mixes NEIGHBOR group outputs — outside one kernel
             # block's reach — and a noiseless readout has nothing to fuse:
             # both run the plain kernel + the (cheap) jnp readout chain
@@ -167,7 +171,14 @@ def _analog_forward(x, w, policy, key, correct: bool, reference: bool = False):
     else:
         res = _residue_dots_jnp(xr, wr, moduli)
         res = channel.apply_readout_channel(res, moduli, cfg, k_det)
-    if cfg.burst_rate > 0:
+    if ctl is not None:
+        # traced burst controls: the schedule's storm adds onto any static
+        # config rate; width takes the wider of the two
+        res = channel.burst_errors(
+            res, moduli, cfg.burst_rate + ctl["burst_rate"],
+            jnp.maximum(jnp.int32(cfg.burst_width), ctl["burst_width"]),
+            k_burst)
+    elif cfg.burst_rate > 0:
         res = channel.burst_errors(res, moduli, cfg.burst_rate,
                                    cfg.burst_width, k_burst)
     if correct:

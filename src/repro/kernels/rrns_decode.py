@@ -122,14 +122,15 @@ def _decode_flat(res_flat: jax.Array, tables, block_e: int,
     decoded = jnp.where(any_legal, dec, 0.0).astype(jnp.int32)
     corrected = jnp.where(any_legal, vot < float(S), True)
     if obs_health.active():
-        # same repaired/unrepairable split as rrns.rrns_decode, recorded
+        # same correction-radius split as rrns.rrns_decode, recorded
         # here because the kernel epilogue is the only place the vote
-        # counts still exist. One fused reduction (vot >= S implies legal,
-        # so legal - full_agreement = repaired and E - legal =
-        # unrepairable): these sums stay live in the decode hot path and
-        # cost ~6% of decode throughput on the op-dispatch-bound
+        # counts still exist. One fused reduction (vot >= S implies
+        # trusted, so trusted - full_agreement = repaired and E - trusted
+        # = untrustworthy): these sums stay live in the decode hot path
+        # and cost ~6% of decode throughput on the op-dispatch-bound
         # interpret-mode box — see the bench_serving obs_sweep notes.
-        n = jnp.sum(jnp.stack([vot >= 0.0, vot >= float(S)])
+        T = float(tables.vote_threshold)
+        n = jnp.sum(jnp.stack([vot >= T, vot >= float(S)])
                     .astype(jnp.int32), axis=1)
         obs_health.record("rrns_corrected", n[0] - n[1])
         obs_health.record("rrns_uncorrected", jnp.int32(E) - n[0])

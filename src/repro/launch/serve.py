@@ -18,6 +18,17 @@ their first N tokens so hits occur); ``--spec-k K`` self-drafts K tokens
 per tick and verifies them in one jitted step (paged + greedy only,
 token-identical to plain greedy decode).
 
+Robustness: ``--chaos SPEC`` injects the seeded fault schedule (SNR
+collapses, burst storms, stuck detector channels, block-pool squeezes,
+prefill-worker crashes, host-transfer corruption — see
+``repro.runtime.faults``); ``--guardian`` drains through the SNR guardian's
+verify-before-commit windows (``repro.runtime.resilience``), escalating
+RRNS redundancy and hard-falling-back to fp32 when the analog-health
+counters report uncorrectable faults; ``--ttl-s`` / ``--queue-ttl-s`` give
+requests decode/admission deadlines (terminal status ``timed_out``);
+``--max-queue-depth`` caps admission (rejected with a retry-after hint);
+``--max-retries`` bounds retries of fault-aborted requests.
+
 Observability: ``--metrics-port P`` serves the engine's metrics registry
 over HTTP (``/metrics`` Prometheus text, ``/metrics.json`` snapshot,
 ``/trace`` Chrome trace; port 0 picks a free one); ``--trace-export F``
@@ -114,6 +125,32 @@ def main(argv=None):
                          "into this directory")
     ap.add_argument("--metrics-dump", default=None, metavar="FILE",
                     help="write the final metrics snapshot as JSON")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="fault-injection schedule, e.g. "
+                         "'snr_drop@4:12:scale=30;worker_crash@2;"
+                         "pool_exhaustion@3:9:blocks=16' (see "
+                         "repro.runtime.faults)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed for the host-side fault sites (replays "
+                         "bit-identically)")
+    ap.add_argument("--guardian", action="store_true",
+                    help="drain through the SNR guardian: verify-before-"
+                         "commit windows over the analog-health counters, "
+                         "escalating RRNS redundancy and falling back to "
+                         "fp32 (requires --policy mirage_rrns + --snr-db)")
+    ap.add_argument("--guardian-window", type=int, default=4,
+                    help="decode ticks per guarded verify window")
+    ap.add_argument("--ttl-s", type=float, default=None,
+                    help="per-request end-to-end deadline: requests still "
+                         "decoding past it retire as timed_out")
+    ap.add_argument("--queue-ttl-s", type=float, default=None,
+                    help="admission deadline: requests still queued past "
+                         "it retire as timed_out")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="admission cap: reject submissions (with a "
+                         "retry-after hint) past this queue depth")
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="retry budget for fault-aborted requests")
     args = ap.parse_args(argv)
     if args.engine == "oracle" and args.sample:
         ap.error("--sample needs the batched engine (the per-slot oracle "
@@ -131,6 +168,18 @@ def main(argv=None):
                                     or args.warmup or args.pipeline_depth):
         ap.error("--mesh-data/--mesh-model/--warmup/--pipeline-depth need "
                  "the batched engine")
+    if args.engine == "oracle" and (args.chaos or args.guardian
+                                    or args.max_queue_depth
+                                    or args.ttl_s or args.queue_ttl_s):
+        ap.error("--chaos/--guardian/--max-queue-depth/--ttl-s/--queue-ttl-s "
+                 "need the batched engine")
+    if args.guardian and args.policy != "mirage_rrns":
+        ap.error("--guardian escalates RRNS redundancy; it needs "
+                 "--policy mirage_rrns (plus --snr-db for a stochastic "
+                 "channel worth guarding)")
+    if args.guardian and args.pipeline_depth:
+        ap.error("--guardian snapshots at window boundaries; drop "
+                 "--pipeline-depth")
 
     mesh = None
     if args.mesh_data > 1 or args.mesh_model > 1:
@@ -153,6 +202,13 @@ def main(argv=None):
     model = build_model(cfg, policy, LMCallOptions(q_chunk=32, kv_chunk=32))
     params = model.init(jax.random.PRNGKey(0))
 
+    injector = None
+    if args.chaos:
+        from repro.runtime.faults import FaultInjector, FaultSchedule
+        schedule = FaultSchedule.parse(args.chaos)
+        injector = FaultInjector(schedule, seed=args.chaos_seed)
+        print(f"chaos: {schedule.describe()} (seed {args.chaos_seed})")
+
     cap = args.prompt_len + args.max_tokens + 4
     if args.engine == "batched":
         server = LMServer(model, params, cap=cap, batch_slots=args.slots,
@@ -165,7 +221,12 @@ def main(argv=None):
                           spec_k=args.spec_k,
                           mesh=mesh,
                           pipeline_depth=args.pipeline_depth,
-                          block_placement=args.block_placement)
+                          block_placement=args.block_placement,
+                          fault_injector=injector,
+                          max_queue_depth=args.max_queue_depth,
+                          default_ttl_s=args.ttl_s,
+                          default_queue_ttl_s=args.queue_ttl_s,
+                          max_retries=args.max_retries)
         if mesh is not None:
             print(f"mesh: data={args.mesh_data} x model={args.mesh_model} "
                   f"({len(mesh.devices.flat)} devices); allocator shards="
@@ -203,17 +264,45 @@ def main(argv=None):
             rid=rid,
             prompt=np.concatenate([shared, tail]),
             max_tokens=args.max_tokens))
+    guardian = None
+    if args.guardian:
+        from repro.runtime.resilience import SNRGuardian
+        guardian = SNRGuardian(server, window=args.guardian_window)
+        drain = guardian.run_until_drained
+    else:
+        drain = server.run_until_drained
     profile_cm = (obs_trace.profile_window(args.profile_window, tracer)
                   if args.profile_window else contextlib.nullcontext())
     with profile_cm:
-        finished = server.run_until_drained()
+        finished = drain()
+        finished = (server.scheduler.finished
+                    if getattr(server, "scheduler", None) is not None
+                    else finished)
     dt = time.perf_counter() - t0
     tot_toks = sum(len(r.tokens_out) for r in finished)
-    ttfts = [r.t_first_token - r.t_enqueue for r in finished]
+    # only requests that actually streamed have a TTFT (a chaos run can
+    # time out / reject everything — the summary must not NaN)
+    ttfts = [r.t_first_token - r.t_enqueue for r in finished
+             if r.t_first_token > 0]
+    mean_ttft_ms = float(np.mean(ttfts)) * 1e3 if ttfts else 0.0
     print(f"[{args.engine}] served {len(finished)} requests, {tot_toks} "
           f"tokens in {dt:.2f}s ({tot_toks / dt:.1f} tok/s); "
-          f"mean TTFT {np.mean(ttfts)*1e3:.1f}ms; "
+          f"mean TTFT {mean_ttft_ms:.1f}ms; "
           f"{server.metrics['ticks']} decode ticks")
+    if getattr(server, "scheduler", None) is not None:
+        by_status = {}
+        for r in finished:
+            by_status[r.status] = by_status.get(r.status, 0) + 1
+        print(f"  terminal statuses: {by_status}")
+    if guardian is not None:
+        print(f"  guardian: level {guardian.level} "
+              f"({len(guardian.transitions)} transitions)")
+        for t in guardian.transitions:
+            print(f"    {t}")
+    if injector is not None and injector.log:
+        print(f"  chaos log ({len(injector.log)} events):")
+        for line in injector.log[:20]:
+            print(f"    {line}")
     if getattr(server, "alloc", None) is not None:
         a = server.alloc
         print(f"  paged KV: block_size={a.block_size}, pool={a.n_blocks} "

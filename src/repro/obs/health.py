@@ -162,10 +162,13 @@ def spec(policy) -> Dict[str, Tuple[int, ...]]:
     """Accumulator shapes a policy's serving path can record.
 
     Keys:
-      rrns_corrected     faults a decode subset-vote repaired (legal value
-                         found, but >= 1 subset disagreed)
-      rrns_uncorrected   decodes with NO legal reconstruction (output
-                         clamped to 0 — the correction radius was exceeded)
+      rrns_corrected     faults a decode subset-vote repaired exactly
+                         (winner inside the correction radius — consistent
+                         with >= n_total - floor(r/2) moduli — but >= 1
+                         residue disagreed)
+      rrns_uncorrected   decodes whose winner is BEYOND the correction
+                         radius (or has no legal reconstruction at all):
+                         the output value is untrustworthy
       detector_flips     per-channel count of residues moved >= 1 phase
                          level by detector noise (readout side)
       drift_flips        per-channel count from programming drift (program

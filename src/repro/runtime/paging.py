@@ -130,6 +130,9 @@ class BlockAllocator:
         self.local_allocs = 0
         self.spilled_allocs = 0
         self._rr = 0                 # round_robin rotation cursor
+        # blocks withheld from allocation by fault injection (chaos pool
+        # squeeze): off every free heap but still refcount-zero
+        self.quarantined: set = set()
         # host->device table sync flag: the server pushes ``tables`` to the
         # cache's ``bt`` leaf only when this is set (and clears it)
         self.dirty = True
@@ -390,6 +393,10 @@ class BlockAllocator:
         changes with the pool size) and refcounts move with the
         renumbering, so shared blocks stay shared."""
         new_n_blocks = int(new_n_blocks)
+        if self.quarantined:
+            raise RuntimeError(
+                f"{len(self.quarantined)} blocks are quarantined; "
+                f"unquarantine before resizing the pool")
         if new_n_blocks < 1 or new_n_blocks % self.n_shards:
             raise ValueError(
                 f"new_n_blocks={new_n_blocks} must be a positive multiple "
@@ -437,6 +444,39 @@ class BlockAllocator:
         return (np.asarray(old_ids, np.int64),
                 np.asarray(new_ids, np.int64))
 
+    # -- fault injection -------------------------------------------------
+
+    def quarantine(self, n: int) -> List[int]:
+        """Withhold up to ``n`` FREE blocks from allocation (chaos fault
+        site ``pool_exhaustion``: simulated pressure without touching any
+        live data). Quarantined blocks leave their shard's free heap —
+        ``free_count`` drops, so admission and :meth:`ensure` hit the real
+        exhaustion paths — but keep refcount zero and rejoin the pool via
+        :meth:`unquarantine`. Pops HIGHEST ids first so the squeeze does
+        not fight defrag-on-retirement's preference for low ids. Returns
+        the block ids actually withheld (may be < ``n`` on a dry pool)."""
+        taken: List[int] = []
+        for h in self._free:
+            h.sort(reverse=True)         # temporary: pop high ids
+        while len(taken) < int(n) and any(self._free):
+            k = max(range(self.n_shards), key=lambda j: len(self._free[j]))
+            taken.append(self._free[k].pop(0))
+        for h in self._free:
+            heapq.heapify(h)
+        self.quarantined.update(taken)
+        return taken
+
+    def unquarantine(self, blocks: Optional[Sequence[int]] = None) -> None:
+        """Return ``blocks`` (default: all) from quarantine to their home
+        shards' free heaps."""
+        ids = list(self.quarantined) if blocks is None else \
+            [int(b) for b in blocks]
+        for b in ids:
+            if b not in self.quarantined:
+                raise ValueError(f"block {b} is not quarantined")
+            self.quarantined.discard(b)
+            self._push_free(b)
+
     # -- integrity -------------------------------------------------------
 
     def check_invariants(self) -> None:
@@ -466,8 +506,13 @@ class BlockAllocator:
                 refs[b] += 1
         assert np.array_equal(refs, self.refcount), \
             "refcount != live table references"
+        q = {int(b) for b in self.quarantined}
+        assert not (free & q), "quarantined block on a free heap"
+        assert all(self.refcount[b] == 0 for b in q), \
+            "quarantined block has live references"
         zero = {b for b in range(self.n_blocks) if self.refcount[b] == 0}
-        assert free == zero, "free heaps != zero-refcount blocks"
+        assert free | q == zero, \
+            "free heaps + quarantine != zero-refcount blocks"
 
 
 class PrefixIndex:

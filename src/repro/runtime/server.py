@@ -125,6 +125,7 @@ from __future__ import annotations
 import collections
 import collections.abc
 import contextlib
+import copy
 import dataclasses
 import queue
 import threading
@@ -135,6 +136,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analog import channel as analog_channel
 from repro.core import gemm
 from repro.models import lm as lm_helpers
 from repro.obs import health as obs_health
@@ -174,6 +176,21 @@ def _lookup_draft(ctx: np.ndarray, k: int, n: int = 3) -> np.ndarray:
     return out
 
 
+class AdmissionRejected(RuntimeError):
+    """Raised by ``submit`` when the engine refuses a request instead of
+    queueing it unboundedly (queue-depth cap hit, or the engine is
+    draining). Carries ``retry_after_s`` — the backoff hint a fronting
+    load balancer would surface as HTTP 429 Retry-After."""
+
+    def __init__(self, msg: str, retry_after_s: float = 0.1):
+        super().__init__(msg)
+        self.retry_after_s = float(retry_after_s)
+
+
+#: terminal request statuses — every submitted request ends in exactly one
+TERMINAL_STATUSES = ("completed", "timed_out", "rejected", "failed")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -185,6 +202,31 @@ class Request:
     t_admit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    # -- robustness lifecycle -------------------------------------------
+    # queued -> active -> completed | timed_out | failed; rejected at
+    # submit. A fault-aborted request transitions active -> queued again
+    # (bounded by retries), restarting its stream from scratch.
+    status: str = "queued"
+    ttl_s: Optional[float] = None        # total deadline from enqueue
+    queue_ttl_s: Optional[float] = None  # admission deadline from enqueue
+    max_retries: int = 0                 # 0 = use the engine default
+    retries: int = 0
+    error: Optional[str] = None          # terminal failure reason
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL_STATUSES
+
+    def deadline(self, now: float) -> bool:
+        """Total-TTL expiry at wall time ``now``."""
+        return self.ttl_s is not None and now - self.t_enqueue > self.ttl_s
+
+    def queue_deadline(self, now: float) -> bool:
+        """Queue-TTL (or total-TTL) expiry while still waiting."""
+        if self.queue_ttl_s is not None and \
+                now - self.t_enqueue > self.queue_ttl_s:
+            return True
+        return self.deadline(now)
 
     @property
     def queue_time(self) -> float:
@@ -261,6 +303,12 @@ class _SchedulerMetrics(collections.abc.MutableMapping):
         ("spec_ticks", "speculative verify ticks run"),
         ("spec_slot_ticks", "per-slot speculative verify steps"),
         ("spec_accepted", "draft tokens accepted"),
+        # request-level robustness: terminal statuses other than
+        # completed, plus fault-abort retries returned to the queue
+        ("timed_out", "requests retired by queue/decode deadline"),
+        ("rejected", "requests refused at admission (queue cap/drain)"),
+        ("failed", "requests terminally failed (retries exhausted)"),
+        ("retried", "fault-aborted requests returned to the queue"),
     )
 
     def __init__(self, registry: MetricsRegistry):
@@ -310,10 +358,12 @@ class Scheduler:
     """
 
     def __init__(self, on_token: Optional[Callable[[Request, int], None]] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 max_queue_depth: Optional[int] = None):
         self.waiting: collections.deque[Request] = collections.deque()
         self.finished: List[Request] = []
         self.on_token = on_token
+        self.max_queue_depth = max_queue_depth
         self.registry = registry if registry is not None else MetricsRegistry()
         self.metrics: _SchedulerMetrics = _SchedulerMetrics(self.registry)
         self._h_ttft = self.registry.histogram(
@@ -328,7 +378,18 @@ class Scheduler:
             help="requests waiting for admission")
 
     def submit(self, req: Request) -> None:
+        if self.max_queue_depth is not None and \
+                len(self.waiting) >= self.max_queue_depth:
+            req.status = "rejected"
+            req.error = "queue full"
+            self.metrics["rejected"] += 1
+            # backoff hint: roughly one admission wave per queued request
+            raise AdmissionRejected(
+                f"request {req.rid}: queue at max depth "
+                f"{self.max_queue_depth}",
+                retry_after_s=0.05 * len(self.waiting))
         req.t_enqueue = time.perf_counter()
+        req.status = "queued"
         self.waiting.append(req)
 
     def take(self, n: int) -> List[Request]:
@@ -342,6 +403,7 @@ class Scheduler:
         t = time.perf_counter()
         for r in reqs:
             r.t_admit = t
+            r.status = "active"
         self.metrics["admitted"] += len(reqs)
         self.metrics["prefill_batches"] += 1
 
@@ -350,29 +412,65 @@ class Scheduler:
         if self.on_token is not None:
             self.on_token(req, tok)
 
-    def retire(self, req: Request) -> Request:
+    def retire(self, req: Request, status: str = "completed") -> Request:
+        """Move ``req`` to ``finished`` with a terminal ``status``. The
+        latency histograms only observe phases the request actually
+        reached: a request timed out in the queue has no TTFT/TPOT and a
+        never-admitted one has no queue-exit time — observing zeros there
+        would poison the percentiles."""
+        if status not in TERMINAL_STATUSES:
+            raise ValueError(f"non-terminal retirement status {status!r}")
         req.t_done = time.perf_counter()
-        self.metrics["completed"] += 1
+        req.status = status
+        self.metrics[status if status != "completed" else "completed"] += 1
         self.metrics["tokens"] += len(req.tokens_out)
-        self._h_ttft.observe(req.ttft)
-        self._h_tpot.observe(req.tpot)
-        self._h_queue.observe(req.queue_time)
+        if req.t_first_token > 0:
+            self._h_ttft.observe(req.ttft)
+            self._h_tpot.observe(req.tpot)
+        if req.t_admit > 0:
+            self._h_queue.observe(req.queue_time)
         self.finished.append(req)
         return req
+
+    def expire_queued(self, now: Optional[float] = None) -> List[Request]:
+        """Retire waiting requests whose queue (or total) deadline passed;
+        FCFS order of the survivors is preserved."""
+        now = time.perf_counter() if now is None else now
+        if not any(r.queue_ttl_s is not None or r.ttl_s is not None
+                   for r in self.waiting):
+            return []
+        expired, kept = [], collections.deque()
+        for r in self.waiting:
+            if r.queue_deadline(now):
+                r.error = "deadline exceeded in queue"
+                expired.append(self.retire(r, status="timed_out"))
+            else:
+                kept.append(r)
+        self.waiting = kept
+        return expired
 
     def latency_summary(self) -> Dict[str, float]:
         """Means + exact p50/p95/p99 tails over every retired request (the
         registry histograms expose bucket-interpolated estimates of the
         same distributions for live scraping; these are the exact values
-        the benchmark rows record)."""
+        the benchmark rows record).
+
+        Robust to degenerate drains: an empty ``finished`` list returns
+        all-zero rows, and requests that never reached a given phase
+        (rejected / timed out before their first token) are excluded from
+        that phase's statistics instead of contributing garbage."""
         keys = [f"{m}_{s}_s" for m in ("ttft", "tpot")
                 for s in ("mean", "p50", "p95", "p99")] + ["queue_mean_s"]
-        done = self.finished
-        if not done:
-            return {k: 0.0 for k in keys}
-        out = {"queue_mean_s": float(np.mean([r.queue_time for r in done]))}
-        for name, arr in (("ttft", np.asarray([r.ttft for r in done])),
-                          ("tpot", np.asarray([r.tpot for r in done]))):
+        out = {k: 0.0 for k in keys}
+        admitted = [r for r in self.finished if r.t_admit > 0]
+        if admitted:
+            out["queue_mean_s"] = float(
+                np.mean([r.queue_time for r in admitted]))
+        streamed = [r for r in self.finished if r.t_first_token > 0]
+        if not streamed:
+            return out
+        for name, arr in (("ttft", np.asarray([r.ttft for r in streamed])),
+                          ("tpot", np.asarray([r.tpot for r in streamed]))):
             out[f"{name}_mean_s"] = float(arr.mean())
             for q in (50, 95, 99):
                 out[f"{name}_p{q}_s"] = float(np.percentile(arr, q))
@@ -400,6 +498,10 @@ class _PrefillPipeline:
         self.server = server
         self.depth = int(depth)
         self.inflight = 0      # submitted, not yet scattered (decode thread)
+        # chaos hook (runtime.faults ``worker_crash``): fail the NEXT job
+        # the worker picks up — the job errors exactly as a real compute
+        # crash would, exercising the release/requeue recovery path
+        self.crash_next = False
         self._in: queue.Queue = queue.Queue()
         self._out: queue.Queue = queue.Queue()
         self._thread = threading.Thread(
@@ -420,12 +522,18 @@ class _PrefillPipeline:
             job = self._in.get()
             if job is None:
                 return
+            if self.crash_next:
+                self.crash_next = False
+                self._out.put((job, None, RuntimeError(
+                    "injected prefill worker crash")))
+                continue
             try:
                 out = srv._prefill_compute(
                     srv._exec_params, jnp.asarray(job["tokens"]),
-                    jnp.asarray(job["lens"]), job["nk"], job["sk"])
+                    jnp.asarray(job["lens"]), job["nk"], job["sk"],
+                    *job.get("ctl", ()))
                 self._out.put((job, out, None))
-            except BaseException as e:    # re-raised on the decode thread
+            except BaseException as e:    # handled on the decode thread
                 self._out.put((job, None, e))
 
     def collect(self, block: bool) -> List[Tuple[Dict[str, Any], Any, Any]]:
@@ -485,7 +593,12 @@ class LMServer:
                  instrument: bool = True,
                  mesh=None,
                  pipeline_depth: int = 0,
-                 block_placement: str = "locality"):
+                 block_placement: str = "locality",
+                 fault_injector=None,
+                 max_queue_depth: Optional[int] = None,
+                 default_ttl_s: Optional[float] = None,
+                 default_queue_ttl_s: Optional[float] = None,
+                 max_retries: int = 1):
         self.model = model
         self.params = params
         self.cap = cap
@@ -592,13 +705,33 @@ class LMServer:
             raise ValueError(f"bucket {self.buckets[-1]} exceeds cache "
                              f"capacity {self.cache_len}")
         self.scheduler = scheduler or Scheduler(on_token=on_token)
+        if max_queue_depth is not None:
+            self.scheduler.max_queue_depth = int(max_queue_depth)
         self.slot_req: List[Optional[Request]] = [None] * batch_slots
+
+        # request-level robustness: per-request deadlines default to these
+        # engine-wide TTLs at submit; fault-aborted requests retry up to
+        # ``max_retries`` times (per-request override via
+        # ``Request.max_retries``) before failing terminally
+        self.default_ttl_s = default_ttl_s
+        self.default_queue_ttl_s = default_queue_ttl_s
+        self.max_retries = int(max_retries)
+        self._draining = False
+        self.last_prefill_error: Optional[BaseException] = None
+        # chaos harness (runtime.faults): host-side sites apply between
+        # ticks; channel sites enter the jitted steps as ONE trailing
+        # traced control pytree (identity values when no window is
+        # active), so a chaos engine shares the clean engine's compiles
+        self._injector = fault_injector
+        self._chaos_tick = 0
+        self._ctl: Optional[Dict[str, np.ndarray]] = None
 
         # analog-health accumulators: shapes derive from the policy alone
         # (empty for deterministic backends → no "health" state key, no
         # collection scope, zero change to those paths).
         # ``instrument=False`` builds the UNINSTRUMENTED engine — the
         # overhead/parity comparator benchmarks measure against.
+        self.instrument = bool(instrument)
         self._health_spec = obs_health.spec(model.policy) if instrument \
             else {}
         if self._health_spec:
@@ -642,6 +775,7 @@ class LMServer:
         else:
             self._exec_params = params
 
+        self._compute_fault_ctl()
         self.state = self._init_state(batch_slots)
         self._bind_observability()
         self._place_on_mesh()
@@ -653,6 +787,52 @@ class LMServer:
     # ------------------------------------------------------------------
     # mesh placement + jitted-step construction
     # ------------------------------------------------------------------
+
+    def _compute_fault_ctl(self) -> None:
+        """Decide whether the jitted steps carry the trailing channel
+        fault-control operand: only when an injector schedules a channel
+        fault AND the current backend routes through the analog channel.
+        Re-run by :meth:`switch_backend` (the fp32 fallback has no channel
+        to fault — its steps keep the plain signatures)."""
+        from repro.core import backends as _backends
+        pol = self.model.policy
+        if _backends.resolve(pol).supports_noise:
+            from repro.analog import rrns as rrns_mod
+            self._ctl_n_moduli = len(
+                rrns_mod.rrns_moduli(pol)
+                if pol.mode in ("mirage_rrns", "mirage_rrns_ref")
+                else tuple(pol.moduli))
+        else:
+            self._ctl_n_moduli = 0
+        self._use_fault_ctl = (
+            self._injector is not None and self._ctl_n_moduli > 0
+            and self._injector.channel_faults_scheduled())
+
+    def _with_faults(self, fn):
+        """Wrap a step body to take ONE trailing fault-control pytree and
+        open :func:`repro.analog.channel.fault_scope` around the trace —
+        identity controls are bit-identical to no scope, so one compile
+        serves every fault intensity. No-op (``fn`` unchanged) when this
+        engine runs without scheduled channel faults."""
+        if not self._use_fault_ctl:
+            return fn
+
+        def wrapped(*args):
+            *rest, ctl = args
+            with analog_channel.fault_scope(ctl):
+                return fn(*rest)
+
+        return wrapped
+
+    def _fault_ctl_args(self) -> tuple:
+        """The trailing control operand for fault-wrapped step calls this
+        tick (empty tuple when the steps are unwrapped)."""
+        if not self._use_fault_ctl:
+            return ()
+        if self._ctl is None:
+            self._ctl = self._injector.controls(self._chaos_tick,
+                                                self._ctl_n_moduli)
+        return (self._ctl,)
 
     def _place_on_mesh(self) -> None:
         """Compute the engine's NamedShardings from the existing rules
@@ -683,22 +863,27 @@ class LMServer:
         elastic resize (the state tree and its shardings changed)."""
         mesh = self.mesh
         want_chunks = self.prefill_chunk is not None or self.prefix_cache
+        # model-invoking steps optionally take the trailing fault-control
+        # operand (wf); pure-scatter steps never do
+        wf = self._with_faults
+        x = 1 if self._use_fault_ctl else 0
 
         if mesh is None:
-            self._decode_tick = jax.jit(self._make_tick_fn())
-            self._prefill_insert = jax.jit(self._make_prefill_fn())
-            self._prefill_compute = jax.jit(self._make_prefill_compute_fn())
+            self._decode_tick = jax.jit(wf(self._make_tick_fn()))
+            self._prefill_insert = jax.jit(wf(self._make_prefill_fn()))
+            self._prefill_compute = jax.jit(
+                wf(self._make_prefill_compute_fn()))
             self._prefill_scatter = jax.jit(self._make_prefill_scatter_fn())
             # prefix-cache misses/partial hits prefill through the chunk
             # step (one call at pos0 = matched length), so both share fns
             if want_chunks:
                 mid, last = self._make_chunk_fns()
-                self._chunk_mid = jax.jit(mid)
-                self._chunk_last = jax.jit(last)
+                self._chunk_mid = jax.jit(wf(mid))
+                self._chunk_last = jax.jit(wf(last))
             if self.prefix_cache:
                 self._attach = jax.jit(self._make_attach_fn())
             if self.spec_k:
-                self._verify_tick = jax.jit(self._make_verify_fn())
+                self._verify_tick = jax.jit(wf(self._make_verify_fn()))
             return
 
         from jax.sharding import NamedSharding, PartitionSpec
@@ -715,25 +900,25 @@ class LMServer:
                            out_shardings=out_sh,
                            donate_argnums=(1 if has_params else 0,))
 
-        self._decode_tick = sharded(self._make_tick_fn(), 2)
-        self._prefill_insert = sharded(self._make_prefill_fn(), 7)
+        self._decode_tick = sharded(wf(self._make_tick_fn()), 2 + x)
+        self._prefill_insert = sharded(wf(self._make_prefill_fn()), 7 + x)
         # pipeline halves: compute reads only params (never donated, so the
         # worker thread can run it concurrently with decode); scatter is
         # the donated state update
         self._prefill_compute = jax.jit(
-            self._make_prefill_compute_fn(),
-            in_shardings=(ps, None, None, None, None))
+            wf(self._make_prefill_compute_fn()),
+            in_shardings=(ps,) + (None,) * (4 + x))
         self._prefill_scatter = sharded(self._make_prefill_scatter_fn(), 6,
                                         has_params=False)
         if want_chunks:
             mid, last = self._make_chunk_fns()
-            self._chunk_mid = sharded(mid, 5, payload=False)
-            self._chunk_last = sharded(last, 8)
+            self._chunk_mid = sharded(wf(mid), 5 + x, payload=False)
+            self._chunk_last = sharded(wf(last), 8 + x)
         if self.prefix_cache:
             self._attach = sharded(self._make_attach_fn(), 5,
                                    has_params=False, payload=False)
         if self.spec_k:
-            self._verify_tick = sharded(self._make_verify_fn(), 2)
+            self._verify_tick = sharded(wf(self._make_verify_fn()), 2 + x)
 
     def _refresh_placement(self) -> None:
         """After an elastic resize changed the state tree: recompute
@@ -1046,6 +1231,16 @@ class LMServer:
     # ------------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if self._draining:
+            req.status = "rejected"
+            req.error = "server draining"
+            self.scheduler.metrics["rejected"] += 1
+            raise AdmissionRejected(
+                f"request {req.rid}: server is draining")
+        if req.ttl_s is None:
+            req.ttl_s = self.default_ttl_s
+        if req.queue_ttl_s is None:
+            req.queue_ttl_s = self.default_queue_ttl_s
         # chunked prefill streams arbitrarily long prompts through the paged
         # cache (up to its linear capacity); bucketed prefill is bounded by
         # the largest bucket
@@ -1259,7 +1454,8 @@ class LMServer:
                     self.state, payload = self._prefill_insert(
                         self._exec_params, self.state, jnp.asarray(tokens),
                         jnp.asarray(lens), jnp.asarray(slots),
-                        jnp.asarray(eos), jnp.asarray(max_tok), nk, sk)
+                        jnp.asarray(eos), jnp.asarray(max_tok), nk, sk,
+                        *self._fault_ctl_args())
                     # TTFT is stamped only once the token bytes are on host
                     payload = np.asarray(jax.device_get(payload))
                 t_host = time.perf_counter()
@@ -1324,7 +1520,8 @@ class LMServer:
                 self._prefill_count += 1
                 job = {"group": group, "my_slots": my_slots,
                        "tokens": tokens, "lens": lens, "slots": slots,
-                       "eos": eos, "max_tok": max_tok, "nk": nk, "sk": sk}
+                       "eos": eos, "max_tok": max_tok, "nk": nk, "sk": sk,
+                       "ctl": self._fault_ctl_args()}
                 for j, r in enumerate(group):
                     self.prefilling.append(
                         {"req": r, "slot": my_slots[j], "pos": 0,
@@ -1338,7 +1535,28 @@ class LMServer:
         block = not can_decode and pipe.inflight > 0
         for job, out, err in pipe.collect(block=block):
             if err is not None:
-                raise err
+                # worker crash mid-compute: the live state is untouched
+                # (compute reads only params + prompt tokens, the scatter
+                # never ran). Release the claimed slots/blocks and return
+                # each request to the queue head for a bounded retry — one
+                # crashed batch must not kill every stream on the engine.
+                self.last_prefill_error = err
+                self.prefilling = [e for e in self.prefilling
+                                   if e["job"] is not job]
+                for j in reversed(range(len(job["group"]))):
+                    r = job["group"][j]
+                    s = job["my_slots"][j]
+                    if self.slot_req[s] is r:
+                        self.slot_req[s] = None
+                        self._release_slot(s)
+                        self._slot_pos[s] = 0
+                        self._slot_budget[s] = 0
+                        self._slot_poscap[s] = 0
+                    t = self._retry_or_fail(
+                        r, f"prefill worker crash: {err}")
+                    if t is not None:
+                        retired.append(t)
+                continue
             tok, new_cache, hvals = out
             self._sync_tables()
             with obs_trace.get_tracer().span(
@@ -1431,7 +1649,8 @@ class LMServer:
             self._exec_params, self.state, jnp.asarray(suffix),
             jnp.asarray(slot, jnp.int32), jnp.asarray(m.m, jnp.int32),
             jnp.asarray(C, jnp.int32), jnp.asarray(eos, jnp.int32),
-            jnp.asarray(req.max_tokens, jnp.int32), nk, sk)
+            jnp.asarray(req.max_tokens, jnp.int32), nk, sk,
+            *self._fault_ctl_args())
         payload = np.asarray(jax.device_get(payload))
         req.t_first_token = time.perf_counter()
         self._slot_pos[slot] = L
@@ -1552,14 +1771,16 @@ class LMServer:
         tr = obs_trace.get_tracer()
         if not last:
             with tr.span("serve.chunk", {"take": take}):
-                self.state = self._chunk_mid(*args, nk)
+                self.state = self._chunk_mid(*args, nk,
+                                             *self._fault_ctl_args())
             e["pos"] = pos + take
         else:
             eos = -1 if req.eos_id is None else req.eos_id
             with tr.span("serve.chunk", {"take": take, "last": True}):
                 self.state, payload = self._chunk_last(
                     *args, jnp.asarray(eos, jnp.int32),
-                    jnp.asarray(req.max_tokens, jnp.int32), nk, sk)
+                    jnp.asarray(req.max_tokens, jnp.int32), nk, sk,
+                    *self._fault_ctl_args())
                 payload = np.asarray(jax.device_get(payload))
             req.t_first_token = time.perf_counter()
             self.prefilling.pop(0)
@@ -1578,16 +1799,104 @@ class LMServer:
         """Admit waiting requests (piggybacking one prefill chunk when
         chunked prefill is on), then decode one token for EVERY active slot
         in a single jitted call — or, with ``spec_k``, verify ``k`` drafted
-        tokens per slot in a single jitted call."""
+        tokens per slot in a single jitted call.
+
+        Robustness hooks run first: scheduled chaos faults apply for this
+        tick, then queue/decode deadlines retire expired requests — every
+        path out of the engine leaves a terminal ``Request.status``."""
         if self.scheduler.registry is not self._bound_registry:
             self._bind_observability()
         tr = obs_trace.get_tracer()
         t_tick = time.perf_counter()
+        if self._injector is not None:
+            self._apply_host_faults()
         with tr.span("serve.tick"):
-            done = self._tick_body(tr)
+            done = self._expire_deadlines()
+            done.extend(self._tick_body(tr))
         self.scheduler.metrics["ticks"] += 1
+        self._chaos_tick += 1
+        self._ctl = None
         self._h_tick.observe(time.perf_counter() - t_tick)
         return done
+
+    def _apply_host_faults(self) -> None:
+        """Evaluate the fault schedule at this engine tick: refresh the
+        traced channel controls and apply the host-side sites (block-pool
+        squeeze, prefill-worker crash). The pool squeeze only ever takes
+        blocks from the FREE budget — blocks reserved for already-admitted
+        requests stay allocatable, so the ``reserved: cannot fail``
+        invariants of the decode/chunk paths survive any schedule."""
+        inj, t = self._injector, self._chaos_tick
+        if self._use_fault_ctl:
+            self._ctl = inj.controls(t, self._ctl_n_moduli)
+        if self.alloc is not None:
+            want = inj.pool_squeeze(t)
+            have = len(self.alloc.quarantined)
+            if want > have:
+                take = min(want - have, max(0, self._free_budget()))
+                if take > 0:
+                    self.alloc.quarantine(take)
+            elif want < have:
+                self.alloc.unquarantine(
+                    sorted(self.alloc.quarantined)[:have - want])
+        if self._pipe is not None and inj.worker_crash(t):
+            self._pipe.crash_next = True
+
+    def _expire_deadlines(self) -> List[Request]:
+        """Retire queued requests past their queue/total TTL and abort
+        active slots past their total TTL (terminal status ``timed_out`` —
+        deadlines are final, never retried). Slots mid-PIPELINED-prefill
+        are skipped until their scatter lands (the worker job still
+        references them); they expire on the next tick."""
+        now = time.perf_counter()
+        done: List[Request] = list(self.scheduler.expire_queued(now))
+        pipe_mid = {e["slot"] for e in self.prefilling} \
+            if self._pipe is not None else set()
+        for i, req in enumerate(self.slot_req):
+            if req is None or i in pipe_mid:
+                continue
+            if req.deadline(now):
+                req.error = "deadline exceeded mid-flight"
+                self._abort_slot(i)
+                done.append(self.scheduler.retire(req, status="timed_out"))
+        return done
+
+    def _abort_slot(self, slot: int) -> None:
+        """Tear a live slot down outside the normal retirement path
+        (deadline / fault abort): drop host bookkeeping, release its
+        blocks, and clear the device-side active bit eagerly so the next
+        decode tick freezes the slot instead of emitting for it."""
+        self.slot_req[slot] = None
+        self.prefilling = [e for e in self.prefilling if e["slot"] != slot]
+        self._release_slot(slot)
+        self._slot_pos[slot] = 0
+        self._slot_budget[slot] = 0
+        self._slot_poscap[slot] = 0
+        active = self.state["active"].at[slot].set(False)
+        if self.mesh is not None:
+            active = jax.device_put(active, self._state_sh["active"])
+        self.state["active"] = active
+
+    def _retry_or_fail(self, req: Request,
+                       reason: str) -> Optional[Request]:
+        """Fault-abort disposition: within the retry budget the request
+        returns to the QUEUE HEAD with its stream reset (it restarts from
+        scratch — emitted tokens are withdrawn, so a streaming consumer
+        sees the retry as a new stream); past it the request retires with
+        terminal status ``failed`` and ``error`` set. Returns the retired
+        request, or None when requeued."""
+        limit = req.max_retries if req.max_retries > 0 else self.max_retries
+        if req.retries < limit:
+            req.retries += 1
+            req.tokens_out = []
+            req.t_first_token = 0.0
+            req.t_admit = 0.0
+            req.status = "queued"
+            self.scheduler.metrics["retried"] += 1
+            self.scheduler.waiting.appendleft(req)
+            return None
+        req.error = reason
+        return self.scheduler.retire(req, status="failed")
 
     def _tick_body(self, tr) -> List[Request]:
         with tr.span("serve.admit"):
@@ -1614,14 +1923,29 @@ class LMServer:
             self._tick_count += 1
             with tr.span("serve.decode", {"slots": len(decode_slots)}):
                 self.state, payload = self._decode_tick(
-                    self._exec_params, self.state, nk, sk)
+                    self._exec_params, self.state, nk, sk,
+                    *self._fault_ctl_args())
             with tr.span("serve.host_sync"):
                 # the ONE transfer
                 payload = np.asarray(jax.device_get(payload))
+            vocab = self.model.cfg.vocab_size
+            if self._injector is not None:
+                payload = payload.copy()  # device_get views are read-only
+                payload[:, 0] = self._injector.corrupt_tokens(
+                    self._chaos_tick, payload[:, 0], vocab)
             t_host = time.perf_counter()
             for i, (tok, is_done) in enumerate(payload):
                 req = self.slot_req[i]
                 if req is None or tok < 0:
+                    continue
+                if tok >= vocab:
+                    # out-of-vocab token = corrupted device->host transfer:
+                    # the stream can no longer be trusted — abort the slot
+                    # and retry the request from scratch (bounded)
+                    self._abort_slot(i)
+                    t = self._retry_or_fail(req, "corrupted host transfer")
+                    if t is not None:
+                        done.append(t)
                     continue
                 self._slot_pos[i] += 1
                 if req.t_first_token == 0.0:
@@ -1669,14 +1993,27 @@ class LMServer:
         tr = obs_trace.get_tracer()
         with tr.span("serve.verify", {"slots": len(decode_slots), "k": k}):
             self.state, payload = self._verify_tick(
-                self._exec_params, self.state, jnp.asarray(drafts), nk)
+                self._exec_params, self.state, jnp.asarray(drafts), nk,
+                *self._fault_ctl_args())
         with tr.span("serve.host_sync"):
             payload = np.asarray(jax.device_get(payload))
+        vocab = self.model.cfg.vocab_size
+        if self._injector is not None:
+            payload = payload.copy()  # device_get views are read-only
+            payload[:, :k + 1] = self._injector.corrupt_tokens(
+                self._chaos_tick, payload[:, :k + 1], vocab)
         t_host = time.perf_counter()
         done: List[Request] = []
         self.scheduler.metrics["spec_ticks"] += 1
         for i in decode_slots:
             req = self.slot_req[i]
+            if np.any(payload[i, :k + 1] >= vocab):
+                # corrupted transfer (see _tick_body): abort + retry
+                self._abort_slot(i)
+                t = self._retry_or_fail(req, "corrupted host transfer")
+                if t is not None:
+                    done.append(t)
+                continue
             is_done = payload[i, k + 1]
             n_acc = 0
             for t in payload[i, :k + 1]:
@@ -1705,6 +2042,231 @@ class LMServer:
                 break
             finished.extend(self.tick())
         return finished
+
+    def drain(self, max_ticks: int = 10_000) -> List[Request]:
+        """Graceful drain: stop admitting NEW work (``submit`` raises
+        :class:`AdmissionRejected` while draining) but run every queued
+        and in-flight request to a terminal status."""
+        self._draining = True
+        try:
+            return self.run_until_drained(max_ticks)
+        finally:
+            self._draining = False
+
+    def shutdown(self, max_ticks: int = 10_000) -> List[Request]:
+        """Teardown: reject everything still WAITING (terminal status
+        ``rejected`` — a restart would re-run their prefills anyway),
+        drain the in-flight slots to completion, stop the pipeline
+        worker. Returns every request retired here."""
+        self._draining = True
+        out: List[Request] = []
+        while self.scheduler.waiting:
+            r = self.scheduler.waiting.popleft()
+            r.error = "server shutting down"
+            out.append(self.scheduler.retire(r, status="rejected"))
+        out.extend(self.run_until_drained(max_ticks))
+        self.close()
+        return out
+
+    # ------------------------------------------------------------------
+    # crash-consistent snapshots + backend switching
+    # ------------------------------------------------------------------
+
+    _SNAP_VERSION = 1
+
+    @staticmethod
+    def _req_to_dict(r: Request) -> Dict[str, Any]:
+        return {"rid": r.rid, "prompt": np.asarray(r.prompt, np.int32),
+                "max_tokens": int(r.max_tokens), "eos_id": r.eos_id,
+                "tokens_out": list(r.tokens_out),
+                "t_enqueue": r.t_enqueue, "t_admit": r.t_admit,
+                "t_first_token": r.t_first_token, "t_done": r.t_done,
+                "status": r.status, "ttl_s": r.ttl_s,
+                "queue_ttl_s": r.queue_ttl_s,
+                "max_retries": int(r.max_retries),
+                "retries": int(r.retries), "error": r.error}
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Crash-consistent engine snapshot: ONE picklable host pytree
+        holding the device state, allocator tables, prefix index, request
+        queues, RNG base keys and their counters. Restoring it — into this
+        engine or an identically-configured one in a fresh process —
+        resumes token-identical streams (per-tick analog noise included:
+        the keys and counters replay the exact fold schedule). Requires a
+        quiescent prefill pipeline (in-flight worker compute is thread
+        state that cannot be captured consistently) — tick until
+        ``_pipe.inflight == 0`` first."""
+        if self._pipe is not None and self._pipe.inflight:
+            raise RuntimeError(
+                "snapshot requires a quiescent prefill pipeline (tick "
+                "until no prefill is in flight)")
+        live: Dict[int, Request] = {}
+        for r in list(self.scheduler.waiting) + \
+                [e["req"] for e in self.prefilling] + \
+                [x for x in self.slot_req if x is not None]:
+            live[r.rid] = r
+        return {
+            "version": self._SNAP_VERSION,
+            "n_slots": self.n_slots,
+            "state": jax.device_get(self.state),
+            "alloc": copy.deepcopy(self.alloc.__dict__)
+            if self.alloc is not None else None,
+            "prefix": copy.deepcopy(self.prefix_index.__dict__)
+            if self.prefix_index is not None else None,
+            "requests": {rid: self._req_to_dict(r)
+                         for rid, r in live.items()},
+            "waiting": [r.rid for r in self.scheduler.waiting],
+            "slot_req": [r.rid if r is not None else None
+                         for r in self.slot_req],
+            "prefilling": [{"rid": e["req"].rid, "slot": e["slot"],
+                            "pos": e["pos"]} for e in self.prefilling],
+            "slot_pos": list(self._slot_pos),
+            "slot_budget": list(self._slot_budget),
+            "slot_poscap": list(self._slot_poscap),
+            "fork_pending": list(self._fork_pending),
+            "counters": {"tick": self._tick_count,
+                         "prefill": self._prefill_count,
+                         "chunk": self._chunk_count,
+                         "chaos": self._chaos_tick},
+            "keys": {"noise": np.asarray(self._noise_base),
+                     "sample": np.asarray(self._sample_base)},
+            "metrics": {k: int(v)
+                        for k, v in self.scheduler.metrics.items()
+                        if k != "prefilling"},
+            "finished_rids": [r.rid for r in self.scheduler.finished],
+        }
+
+    def restore(self, snap: Dict[str, Any],
+                requests: Optional[Dict[int, Request]] = None) -> None:
+        """Load a :meth:`snapshot` back into this engine (same model /
+        policy / topology configuration). ``requests`` optionally maps
+        rid -> live ``Request`` objects to mutate in place — the
+        guardian's rollback path, which must keep object identity across
+        the restore; without it, requests are rebuilt from the snapshot
+        (the fresh-process crash-recovery path; requests already finished
+        at snapshot time are not reconstructed — their streams were
+        delivered before the crash)."""
+        if snap.get("version") != self._SNAP_VERSION:
+            raise ValueError(f"snapshot version {snap.get('version')!r} != "
+                             f"engine version {self._SNAP_VERSION}")
+        if snap["n_slots"] != self.n_slots:
+            raise ValueError(f"snapshot has {snap['n_slots']} slots, "
+                             f"engine has {self.n_slots}")
+        if self._pipe is not None and self._pipe.inflight:
+            raise RuntimeError("cannot restore over in-flight prefills")
+        state = jax.tree_util.tree_map(jnp.asarray, snap["state"])
+        if self.mesh is not None:
+            state = jax.device_put(state, self._state_sh)
+        self.state = state
+        if self.alloc is not None and snap["alloc"] is not None:
+            self.alloc.__dict__.clear()
+            self.alloc.__dict__.update(copy.deepcopy(snap["alloc"]))
+            self.alloc.dirty = True
+            self._sync_tables()
+        if self.prefix_index is not None and snap["prefix"] is not None:
+            self.prefix_index.__dict__.clear()
+            self.prefix_index.__dict__.update(copy.deepcopy(snap["prefix"]))
+        pool: Dict[int, Request] = {
+            r.rid: r for r in self.scheduler.finished}
+        for r in list(self.scheduler.waiting) + \
+                [x for x in self.slot_req if x is not None] + \
+                [e["req"] for e in self.prefilling]:
+            pool[r.rid] = r
+        if requests:
+            pool.update(requests)
+
+        def revive(rid: int) -> Request:
+            d = snap["requests"][rid]
+            r = pool.get(rid)
+            if r is None:
+                r = Request(rid=d["rid"],
+                            prompt=np.asarray(d["prompt"], np.int32),
+                            max_tokens=d["max_tokens"],
+                            eos_id=d["eos_id"])
+                pool[rid] = r
+            r.tokens_out = list(d["tokens_out"])
+            r.t_enqueue = d["t_enqueue"]
+            r.t_admit = d["t_admit"]
+            r.t_first_token = d["t_first_token"]
+            r.t_done = d["t_done"]
+            r.status = d["status"]
+            r.ttl_s = d["ttl_s"]
+            r.queue_ttl_s = d["queue_ttl_s"]
+            r.max_retries = d["max_retries"]
+            r.retries = d["retries"]
+            r.error = d["error"]
+            return r
+
+        self.scheduler.waiting = collections.deque(
+            revive(rid) for rid in snap["waiting"])
+        self.slot_req = [revive(rid) if rid is not None else None
+                         for rid in snap["slot_req"]]
+        self.prefilling = [{"req": revive(e["rid"]), "slot": e["slot"],
+                            "pos": e["pos"]} for e in snap["prefilling"]]
+        self._slot_pos = list(snap["slot_pos"])
+        self._slot_budget = list(snap["slot_budget"])
+        self._slot_poscap = list(snap["slot_poscap"])
+        self._fork_pending = list(snap["fork_pending"])
+        c = snap["counters"]
+        self._tick_count = c["tick"]
+        self._prefill_count = c["prefill"]
+        self._chunk_count = c["chunk"]
+        self._chaos_tick = c["chaos"]
+        self._ctl = None
+        self._noise_base = jnp.asarray(snap["keys"]["noise"])
+        self._sample_base = jnp.asarray(snap["keys"]["sample"])
+        for k, v in snap["metrics"].items():
+            self.scheduler.metrics[k] = v
+        self.scheduler.finished = [
+            pool[rid] for rid in snap["finished_rids"] if rid in pool]
+
+    def switch_backend(self, new_policy) -> None:
+        """Reprogram the engine's numeric backend mid-flight — the
+        SNR-adaptive degradation path (:mod:`repro.runtime.resilience`):
+        rebuild the model on ``new_policy`` (e.g. escalated RRNS
+        redundancy, or the fp32 hard-fallback), re-encode stationary
+        residues from the RAW params (residue coding is policy-specific),
+        swap the analog-health accumulators to the new policy's spec, and
+        rebuild every jitted step. In-flight KV/recurrent state is plain
+        numeric state, not policy-coded — live streams continue under the
+        new backend from their current positions."""
+        if self._pipe is not None and self._pipe.inflight:
+            raise RuntimeError(
+                "cannot switch backends with pipelined prefills in flight")
+        from repro.models.registry import build_model
+        self.model = build_model(self.model.cfg, new_policy, self.model.opt)
+        if self.stationary_weights:
+            from repro.core import backends as _backends
+            from repro.core import stationary
+            if _backends.resolve(new_policy).supports_stationary_residues:
+                self._exec_params = stationary.encode_stationary_params(
+                    self.params, new_policy)
+            else:
+                self._exec_params = self.params
+        else:
+            self._exec_params = self.params
+        self._health_spec = obs_health.spec(new_policy) \
+            if self.instrument else {}
+        if self._health_spec:
+            from repro.analog import rrns as rrns_mod
+            self._health_moduli = (
+                rrns_mod.rrns_moduli(new_policy)
+                if new_policy.mode in ("mirage_rrns", "mirage_rrns_ref")
+                else tuple(new_policy.moduli))
+        else:
+            self._health_moduli = ()
+        state = dict(self.state)
+        state.pop("health", None)
+        if self._health_spec:
+            state["health"] = obs_health.init(self._health_spec)
+        self.state = state
+        seed = new_policy.noise_seed \
+            if new_policy.noise_seed is not None else 0
+        self._noise_base = jax.random.PRNGKey(seed)
+        self._compute_fault_ctl()
+        self._ctl = None
+        self._place_on_mesh()
+        self._build_steps()
 
     # ------------------------------------------------------------------
     # AOT warmup
@@ -1756,6 +2318,10 @@ class LMServer:
         t0 = time.perf_counter()
         before = sum(self.compile_counts().values())
         nk, sk = self._next_keys(3, 0)
+        # fault-wrapped steps warm with identity controls (bit-identical
+        # to the unwrapped trace; same compile serves live fault values)
+        fc = (analog_channel.identity_fault_controls(self._ctl_n_moduli),) \
+            if self._use_fault_ctl else ()
         cache = self.state["cache"]
         saved = jax.device_get({
             "state": {k: v for k, v in self.state.items() if k != "cache"},
@@ -1779,19 +2345,19 @@ class LMServer:
                 mt = jnp.ones((B,), jnp.int32)
                 if self._pipe is not None:
                     tok, nc, hv = self._prefill_compute(
-                        self._exec_params, tokens, lens, nk, sk)
+                        self._exec_params, tokens, lens, nk, sk, *fc)
                     self.state, _ = self._prefill_scatter(
                         self.state, tok, nc, hv, slots, eos, mt)
                 else:
                     self.state, _ = self._prefill_insert(
                         self._exec_params, self.state, tokens, lens, slots,
-                        eos, mt, nk, sk)
+                        eos, mt, nk, sk, *fc)
         self.state, _ = self._decode_tick(self._exec_params, self.state,
-                                          nk, sk)
+                                          nk, sk, *fc)
         if self.spec_k:
             drafts = jnp.zeros((self.n_slots, self.spec_k), jnp.int32)
             self.state, _ = self._verify_tick(self._exec_params, self.state,
-                                              drafts, nk)
+                                              drafts, nk, *fc)
         z = jnp.asarray(0, jnp.int32)
         if self.prefill_chunk is not None or self.prefix_cache:
             sizes = set()
@@ -1809,11 +2375,11 @@ class LMServer:
                 if self.prefill_chunk is not None and C == self.prefill_chunk:
                     self.state = self._chunk_mid(
                         self._exec_params, self.state, toks, z, z,
-                        jnp.asarray(C, jnp.int32), nk)
+                        jnp.asarray(C, jnp.int32), nk, *fc)
                 self.state, _ = self._chunk_last(
                     self._exec_params, self.state, toks, z, z,
                     jnp.asarray(C, jnp.int32), jnp.asarray(-1, jnp.int32),
-                    jnp.asarray(1, jnp.int32), nk, sk)
+                    jnp.asarray(1, jnp.int32), nk, sk, *fc)
         if self.prefix_cache:
             self.state = self._attach(self.state, z, z, z,
                                       jnp.asarray(-1, jnp.int32),

@@ -1,0 +1,297 @@
+"""Chaos-injection harness + request-level robustness: schedule parsing and
+control composition, deterministic host corruption, engine survival of every
+host-side fault site (corrupted transfers, pool squeezes, prefill worker
+crashes), deadline expiry in queue and mid-decode, admission caps, graceful
+drain/shutdown, and the empty-drain latency guards."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import get_policy
+from repro.models import build_model
+from repro.models.lm import LMCallOptions
+from repro.runtime.faults import (SITES, FaultEvent, FaultInjector,
+                                  FaultSchedule)
+from repro.runtime.server import (TERMINAL_STATUSES, AdmissionRejected,
+                                  LMServer, Request, Scheduler)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg, get_policy("mirage"),
+                        LMCallOptions(q_chunk=16, kv_chunk=16))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_requests(cfg, n, lens, max_tokens=4, seed=0, **req_kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        lens[i % len(lens)]).astype(np.int32),
+                    max_tokens=max_tokens, **req_kw)
+            for i in range(n)]
+
+
+# --------------------------------------------------------------------------
+# schedule / injector unit semantics
+# --------------------------------------------------------------------------
+
+def test_schedule_parse_compact_form():
+    s = FaultSchedule.parse(
+        "snr_drop@4:12:scale=30;worker_crash@2;"
+        "pool_exhaustion@3:9:blocks=16")
+    assert len(s) == 3
+    snr, crash, pool = s.events
+    assert (snr.site, snr.start, snr.stop) == ("snr_drop", 4, 12)
+    assert snr.get("scale") == 30.0
+    assert (crash.start, crash.stop) == (2, 3)  # stop defaults start+1
+    assert pool.get("blocks") == 16
+    assert s.horizon == 12
+    assert s.sites() == {"snr_drop", "worker_crash", "pool_exhaustion"}
+    assert FaultSchedule.parse("").describe() == "(empty)"
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultEvent(site="meteor_strike", start=0, stop=1)
+    with pytest.raises(ValueError, match="bad window"):
+        FaultEvent(site="snr_drop", start=5, stop=5)
+    with pytest.raises(ValueError, match="unknown params"):
+        FaultEvent(site="snr_drop", start=0, stop=1, params={"rate": 2})
+    with pytest.raises(ValueError, match="expected site@"):
+        FaultSchedule.parse("snr_drop")
+
+
+def test_controls_compose_and_identity():
+    inj = FaultInjector(FaultSchedule.parse(
+        "snr_drop@0:4:scale=10;snr_drop@2:4:scale=3;"
+        "burst_storm@2:3:rate=0.1,width=2;burst_storm@2:3:rate=0.2,width=4;"
+        "stuck_channel@2:3:channel=1,level=7"), seed=0)
+    c = inj.controls(2, n_moduli=3)
+    assert c["sigma_scale"] == np.float32(30.0)      # overlaps multiply
+    assert np.isclose(c["burst_rate"], 0.3)          # rates add
+    assert c["burst_width"] == 4                     # width takes max
+    assert list(c["stuck_mask"]) == [False, True, False]
+    assert c["stuck_level"][1] == 7
+    ident = inj.controls(100, n_moduli=3)            # outside every window
+    assert ident["sigma_scale"] == 1.0 and ident["burst_rate"] == 0.0
+    assert not ident["stuck_mask"].any()
+    assert any("enters window" in l for l in inj.log)
+    assert any("leaves window" in l for l in inj.log)
+
+
+def test_corrupt_tokens_deterministic_and_out_of_vocab():
+    toks = np.arange(64, dtype=np.int64)
+    mk = lambda seed: FaultInjector(
+        FaultSchedule.parse("host_corruption@3:5:rate=0.5"), seed=seed)
+    a = mk(1).corrupt_tokens(3, toks, vocab_size=100)
+    b = mk(1).corrupt_tokens(3, toks, vocab_size=100)
+    np.testing.assert_array_equal(a, b)              # seeded replay
+    hit = a != toks
+    assert hit.any() and (a[hit] >= 100).all()       # always out-of-vocab
+    assert (mk(2).corrupt_tokens(3, toks, 100) != a).any()
+    np.testing.assert_array_equal(                   # inactive tick: no-op
+        mk(1).corrupt_tokens(7, toks, 100), toks)
+
+
+def test_worker_crash_fires_once_per_event():
+    inj = FaultInjector(FaultSchedule.parse("worker_crash@2;worker_crash@5"))
+    fired = [t for t in range(8) if inj.worker_crash(t)]
+    assert fired == [2, 5]
+    assert not inj.worker_crash(2)                   # consumed
+
+
+# --------------------------------------------------------------------------
+# engine under host-side fault sites
+# --------------------------------------------------------------------------
+
+def test_host_corruption_detected_retried_and_token_exact(served):
+    """A corrupted device->host transfer is caught by vocab-range
+    validation, the slot aborted and the request retried from scratch —
+    the committed streams never contain a corrupt token and, once the
+    window passes, match the clean engine exactly."""
+    cfg, model, params = served
+    kw = dict(n=4, lens=[6, 9], max_tokens=4, seed=3)
+    clean = LMServer(model, params, cap=24, batch_slots=2)
+    for r in _mk_requests(cfg, **kw):
+        clean.submit(r)
+    want = {r.rid: r.tokens_out for r in clean.run_until_drained()}
+
+    inj = FaultInjector(
+        FaultSchedule.parse("host_corruption@1:3:rate=1.0"), seed=1)
+    chaos = LMServer(model, params, cap=24, batch_slots=2,
+                     fault_injector=inj, max_retries=8)
+    reqs = _mk_requests(cfg, **kw)
+    for r in reqs:
+        chaos.submit(r)
+    finished = chaos.run_until_drained()
+    assert all(r.status in TERMINAL_STATUSES for r in reqs)
+    assert chaos.metrics["retried"] >= 1
+    assert any("host_corruption flipped" in l for l in inj.log)
+    got = {r.rid: r.tokens_out for r in finished if r.status == "completed"}
+    assert got == {rid: want[rid] for rid in got} and got
+    assert all(s is None for s in chaos.slot_req)    # no stranded slots
+
+
+def test_pool_exhaustion_squeeze_delays_but_preserves_streams(served):
+    """A quarantine squeeze on the paged block pool forces admissions
+    through the real exhaustion paths; the drain still completes with the
+    clean engine's exact streams, the quarantine is returned when the
+    window closes, and the allocator invariants hold throughout."""
+    cfg, model, params = served
+    kw = dict(n=5, lens=[8, 11], max_tokens=4, seed=2)
+    pkw = dict(cache_layout="paged", block_size=4, n_blocks=48)
+    clean = LMServer(model, params, cap=24, batch_slots=2, **pkw)
+    for r in _mk_requests(cfg, **kw):
+        clean.submit(r)
+    want = {r.rid: r.tokens_out for r in clean.run_until_drained()}
+
+    inj = FaultInjector(
+        FaultSchedule.parse("pool_exhaustion@1:5:blocks=40"), seed=0)
+    chaos = LMServer(model, params, cap=24, batch_slots=2,
+                     fault_injector=inj, **pkw)
+    squeezed = []
+    reqs = _mk_requests(cfg, **kw)
+    for r in reqs:
+        chaos.submit(r)
+    while (chaos.scheduler.waiting
+           or any(s is not None for s in chaos.slot_req)):
+        chaos.tick()
+        chaos.alloc.check_invariants()
+        squeezed.append(len(chaos.alloc.quarantined))
+    got = {r.rid: r.tokens_out for r in chaos.scheduler.finished}
+    assert got == want
+    assert max(squeezed) > 0                         # the squeeze happened
+    assert not chaos.alloc.quarantined               # and was returned
+    assert all(r.status == "completed" for r in reqs)
+
+
+# --------------------------------------------------------------------------
+# deadlines, retries, admission control, drain
+# --------------------------------------------------------------------------
+
+def test_queue_deadline_expires_waiting_requests(served):
+    """Queue-TTL expiry runs at tick start, BEFORE admission: with a zero
+    TTL every request retires as timed_out without ever reaching a slot —
+    and the latency summary stays all-zero-guarded for phases nothing
+    reached. A generous TTL admits and completes everything."""
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=1,
+                      default_queue_ttl_s=0.0)
+    reqs = _mk_requests(cfg, n=4, lens=[6], max_tokens=3)
+    for r in reqs:
+        server.submit(r)
+    finished = server.run_until_drained()
+    assert len(finished) == 4
+    assert all(r.status == "timed_out" for r in reqs)
+    assert all(r.t_admit == 0.0 for r in reqs)       # never admitted
+    assert server.metrics["timed_out"] == 4
+    s = server.scheduler.latency_summary()
+    assert all(v == 0.0 for v in s.values())         # guarded, not NaN
+
+    roomy = LMServer(model, params, cap=24, batch_slots=1,
+                     default_queue_ttl_s=600.0)
+    reqs2 = _mk_requests(cfg, n=3, lens=[6], max_tokens=3)
+    for r in reqs2:
+        roomy.submit(r)
+    roomy.run_until_drained()
+    assert all(r.status == "completed" for r in reqs2)
+
+
+def test_decode_deadline_aborts_mid_flight_and_frees_blocks(served):
+    """A TTL that expires mid-decode retires the request as timed_out,
+    clears its slot and returns its KV blocks (shared-prefix refcounts
+    included) — the paged pool ends the drain fully free."""
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=2,
+                      cache_layout="paged", block_size=4, n_blocks=32,
+                      prefix_cache=True)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    reqs = [Request(rid=i, prompt=shared.copy(), max_tokens=12)
+            for i in range(2)]
+    for r in reqs:
+        server.submit(r)
+    server.tick()
+    for r in reqs:
+        r.ttl_s = 1e-9                               # expire both mid-flight
+    finished = server.run_until_drained()
+    assert {r.rid for r in finished} == {0, 1}
+    assert all(r.status == "timed_out" for r in reqs)
+    assert all(r.error for r in reqs)
+    assert all(s is None for s in server.slot_req)
+    server.alloc.check_invariants()
+    assert server.alloc.used_count == 0              # no leaked blocks
+
+
+def test_admission_cap_rejects_with_retry_after(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=1,
+                      max_queue_depth=2)
+    reqs = _mk_requests(cfg, n=5, lens=[6], max_tokens=3)
+    rejected = []
+    for r in reqs:
+        try:
+            server.submit(r)
+        except AdmissionRejected as e:
+            rejected.append((r, e))
+    assert len(rejected) == 3                # 2 queued, the rest bounced
+    assert all(r.status == "rejected" for r, _ in rejected)
+    assert all(e.retry_after_s > 0 for _, e in rejected)
+    assert server.metrics["rejected"] == 3
+    server.run_until_drained()
+    assert all(r.status == "completed"
+               for r in reqs if r not in [x for x, _ in rejected])
+
+
+def test_drain_refuses_new_work_and_shutdown_flushes(served):
+    cfg, model, params = served
+    server = LMServer(model, params, cap=24, batch_slots=2)
+    reqs = _mk_requests(cfg, n=2, lens=[6], max_tokens=3)
+    for r in reqs:
+        server.submit(r)
+    server.drain()
+    assert all(r.status == "completed" for r in reqs)
+    # drain() is a flush, not a teardown: admission reopens afterwards.
+    late = _mk_requests(cfg, n=1, lens=[6], max_tokens=3, seed=9)[0]
+    late.rid += 100
+    server.submit(late)
+    server.drain()
+    assert late.status == "completed"
+
+    server2 = LMServer(model, params, cap=24, batch_slots=1)
+    active = _mk_requests(cfg, n=1, lens=[6], max_tokens=3)[0]
+    queued = _mk_requests(cfg, n=2, lens=[6], max_tokens=3, seed=1)
+    server2.submit(active)
+    for q in queued:
+        q.rid += 10
+        server2.submit(q)
+    server2.tick()                                   # admit the first
+    server2.shutdown()
+    assert active.status == "completed"
+    assert all(q.status == "rejected" for q in queued)
+    assert all(q.error == "server shutting down" for q in queued)
+    # shutdown leaves the engine closed: no admission afterwards.
+    with pytest.raises(AdmissionRejected, match="draining"):
+        server2.submit(_mk_requests(cfg, n=1, lens=[6], seed=9)[0])
+
+
+def test_latency_summary_empty_and_phase_guards():
+    """satellite: a drain that retired nothing (or only never-streamed
+    requests) must yield all-zero latency rows, not NaN."""
+    sched = Scheduler()
+    s = sched.latency_summary()
+    assert set(s) == {"ttft_mean_s", "ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+                      "tpot_mean_s", "tpot_p50_s", "tpot_p95_s", "tpot_p99_s",
+                      "queue_mean_s"}
+    assert all(v == 0.0 for v in s.values())
+    r = Request(rid=0, prompt=np.zeros(4, np.int32), max_tokens=4)
+    r.t_enqueue = 1.0                                # queued, never admitted
+    sched.retire(r, status="timed_out")
+    s = sched.latency_summary()
+    assert all(v == 0.0 for v in s.values())
+    assert sched.metrics["timed_out"] == 1

@@ -295,11 +295,14 @@ def test_health_counters_match_oracle_on_double_residue_errors():
     np.testing.assert_array_equal(cor, cor_np)
     n_corr, n_unc = int(h["rrns_corrected"]), int(h["rrns_uncorrected"])
     assert n_corr + n_unc == int(cor_np.sum()) > 0
-    # ground truth is nonzero, so a 0 decode + flag == no legal value
-    # (with 10 size-3 subsets some legal — if wrong — value usually
-    # exists, so this is typically 0: detected-but-miscorrected events
-    # land in rrns_corrected, exactly like the oracle's corrected flag)
-    assert n_unc == int(((dec_np == 0) & cor_np).sum())
+    # the split follows the correction-radius certificate: a trustworthy
+    # winner agrees with >= n_total - floor(r/2) = 4 moduli (single-error
+    # radius for r=2). Double-error elements fall below it even when some
+    # legal — wrong — value wins the vote (legality alone certifies
+    # nothing: the all-base subset is legal for every residue tuple)
+    cons = np.stack([dec_np % m == res[i] % m
+                     for i, m in enumerate(ALL)]).sum(axis=0)
+    assert n_unc == int((cons < len(ALL) - 1).sum()) > 0
 
 
 def test_health_counters_zero_on_clean_residues():

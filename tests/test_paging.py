@@ -483,3 +483,59 @@ def test_sharded_resize_and_prefix_remap_stay_consistent(n_live, grow):
     assert ix.match(prompt) == [moved[int(b)] for b in chain]
     for old, shard in homes.items():
         assert a.shard_of_block(moved[old]) == shard
+
+
+# ---------------------------------------------------------------------------
+# quarantine (the pool_exhaustion chaos fault site)
+# ---------------------------------------------------------------------------
+
+def test_quarantine_squeezes_free_pool_high_ids_first():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_slots=2)
+    a.ensure(0, 9)                            # 3 used, 5 free
+    taken = a.quarantine(3)
+    assert len(taken) == 3 and a.free_count == 2
+    assert min(taken) > max(b for b in range(8)
+                            if b not in taken and a.refcount[b] == 0)
+    a.check_invariants()
+    # squeezing a dry pool caps at what is actually free
+    more = a.quarantine(10)
+    assert len(more) == 2 and a.free_count == 0
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.ensure(1, 4)                        # zero free budget: no admission
+
+
+def test_unquarantine_restores_admission_and_guards_resize():
+    a = BlockAllocator(n_blocks=6, block_size=4, n_slots=2)
+    a.ensure(0, 8)                            # 2 used, 4 free
+    taken = a.quarantine(4)
+    with pytest.raises(RuntimeError, match="quarantined"):
+        a.resize_pool(12)                     # no elastic resize mid-squeeze
+    a.unquarantine(taken[:2])
+    a.ensure(1, 8)                            # admission possible again
+    a.check_invariants()
+    a.unquarantine()                          # default: return everything
+    assert not a.quarantined and a.free_count == 2
+    a.check_invariants()
+    with pytest.raises(ValueError, match="not quarantined"):
+        a.unquarantine([taken[0]])            # double return
+
+
+def test_quarantined_blocks_survive_release_and_share_traffic():
+    """Release/share/fork churn around an active squeeze never touches the
+    quarantined ids, and they come back clean."""
+    a = BlockAllocator(n_blocks=10, block_size=4, n_slots=3)
+    ix = PrefixIndex(4)
+    prompt = np.arange(8, dtype=np.int32)
+    a.ensure(0, 8)
+    ix.insert_chain(prompt, a.slot_blocks(0))
+    taken = set(a.quarantine(4))
+    a.share(1, ix.match(prompt))              # shared-prefix admission
+    a.fork_cow(1, 0)                          # COW write on the shared block
+    a.release(0)                              # timed-out sharer retires
+    a.check_invariants()
+    assert all(a.refcount[b] == 0 for b in taken)
+    assert not taken & set(a.slot_blocks(1))
+    a.release(1)
+    a.unquarantine()
+    a.check_invariants()
+    assert a.free_count == 10

@@ -1,0 +1,191 @@
+"""SNR-adaptive degradation + crash-consistent snapshots.
+
+The acceptance gate lives here: under a mid-run SNR collapse the guardian's
+verify-before-commit windows roll back every window whose
+``rrns_uncorrected`` delta is nonzero, walk the degradation ladder
+(r=2 -> r=4 -> fp32) and end up streaming EXACTLY the clean fp32 engine's
+greedy tokens — while the same collapse without the guardian diverges.
+Snapshot/restore is exercised both through the guardian's rollbacks and as
+a standalone fresh-engine resume (dense and paged+prefix-shared).
+
+The single-family (qwen2) chaos gate runs in tier-1; the full four-family
+sweep is CI's chaos-smoke job (RUN_CHAOS_FAMILIES=1).
+"""
+
+import functools
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.precision import get_policy
+from repro.models import build_model
+from repro.models.lm import LMCallOptions
+from repro.runtime.faults import FaultInjector, FaultSchedule
+from repro.runtime.resilience import SNRGuardian, degradation_ladder
+from repro.runtime.server import LMServer, Request
+
+COLLAPSE = "snr_drop@0:100000:scale=1e6"   # -120 dB: nothing survives
+
+
+def _mk_requests(cfg, n=4, lens=(6, 9), max_tokens=4, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        lens[i % len(lens)]).astype(np.int32),
+                    max_tokens=max_tokens)
+            for i in range(n)]
+
+
+def _streams(server, reqs, runner=None):
+    for r in reqs:
+        server.submit(r)
+    (runner or server.run_until_drained)()
+    return {r.rid: list(map(int, r.tokens_out))
+            for r in server.scheduler.finished}
+
+
+@functools.lru_cache(maxsize=None)
+def _family(arch):
+    cfg = get_config(arch).reduced()
+    opts = LMCallOptions(q_chunk=16, kv_chunk=16)
+    fp32 = build_model(cfg, get_policy("fp32"), opts)
+    params = fp32.init(jax.random.PRNGKey(0))
+    rrns = build_model(cfg, get_policy("mirage_rrns", snr_db=60.0,
+                                       noise_seed=7), opts)
+    return cfg, fp32, rrns, params
+
+
+# --------------------------------------------------------------------------
+# ladder + guardian preconditions
+# --------------------------------------------------------------------------
+
+def test_degradation_ladder_shape():
+    pol = get_policy("mirage_rrns", snr_db=60.0, noise_seed=7)
+    ladder = degradation_ladder(pol, max_r=4)
+    assert [p.mode for p in ladder] == ["mirage_rrns", "mirage_rrns", "fp32"]
+    assert ladder[0] is pol
+    assert len(ladder[1].redundant_moduli) == 4
+    assert ladder[1].k == pol.k and ladder[1].moduli == pol.moduli
+    with pytest.raises(ValueError, match="mirage_rrns"):
+        degradation_ladder(get_policy("fp32"))
+
+
+def test_guardian_preconditions():
+    cfg, _, rrns, params = _family("qwen2-0.5b")
+    plain = LMServer(rrns, params, cap=24, batch_slots=2, instrument=False)
+    with pytest.raises(ValueError, match="instrument"):
+        SNRGuardian(plain)
+    piped = LMServer(rrns, params, cap=24, batch_slots=2,
+                     instrument=True, pipeline_depth=1)
+    try:
+        with pytest.raises(ValueError, match="pipeline"):
+            SNRGuardian(piped)
+    finally:
+        piped.close()
+
+
+# --------------------------------------------------------------------------
+# THE chaos parity gate
+# --------------------------------------------------------------------------
+
+def _chaos_parity(arch):
+    cfg, fp32, rrns, params = _family(arch)
+    want = _streams(LMServer(fp32, params, cap=24, batch_slots=2),
+                    _mk_requests(cfg))
+
+    # guardian ON: every committed window certifies rrns_uncorrected == 0,
+    # and under a from-tick-0 collapse that means every committed window
+    # ran on the fp32 rung -> streams are exactly the fp32 engine's
+    inj = FaultInjector(FaultSchedule.parse(COLLAPSE), seed=0)
+    guarded = LMServer(rrns, params, cap=24, batch_slots=2,
+                       instrument=True, fault_injector=inj)
+    guardian = SNRGuardian(guarded, window=2, cooldown=10_000)
+    got = _streams(guarded, _mk_requests(cfg),
+                   runner=guardian.run_until_drained)
+    assert got == want, f"{arch}: guardian-on streams differ from clean fp32"
+    assert guardian.level == len(guardian.ladder) - 1   # walked to fp32
+    assert len(guardian.transitions) >= 2               # r=4 then fp32
+    assert all(r.status == "completed"
+               for r in guarded.scheduler.finished)
+
+    # guardian OFF: the same collapse streams uncorrectable garbage
+    inj2 = FaultInjector(FaultSchedule.parse(COLLAPSE), seed=0)
+    naked = LMServer(rrns, params, cap=24, batch_slots=2,
+                     instrument=True, fault_injector=inj2)
+    diverged = _streams(naked, _mk_requests(cfg))
+    assert diverged != want, f"{arch}: collapse had no effect?"
+    unc = naked.health_snapshot().get("rrns_uncorrected", 0)
+    assert (sum(unc) if isinstance(unc, list) else unc) > 0
+
+
+def test_chaos_parity_guardian_vs_fp32_qwen2():
+    _chaos_parity("qwen2-0.5b")
+
+
+@pytest.mark.skipif(not os.environ.get("RUN_CHAOS_FAMILIES"),
+                    reason="full four-family chaos sweep runs in CI's "
+                           "chaos-smoke job (set RUN_CHAOS_FAMILIES=1)")
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "mamba2-2.7b",
+                                  "zamba2-2.7b"])
+def test_chaos_parity_guardian_all_families(arch):
+    _chaos_parity(arch)
+
+
+def test_guardian_recovers_after_transient_collapse():
+    """A bounded SNR hole: the guardian escalates through it, then the
+    cooldown probe steps back down once windows verify clean again. (No
+    fp32 parity claim here — after recovery the engine legitimately runs
+    the quantized rrns rung; exactness-vs-fp32 is certified only while
+    every committed window ran on the fp32 rung, i.e. the test above.)"""
+    cfg, _, rrns, params = _family("qwen2-0.5b")
+    inj = FaultInjector(
+        FaultSchedule.parse("snr_drop@0:4:scale=1e6"), seed=0)
+    srv = LMServer(rrns, params, cap=24, batch_slots=2,
+                   instrument=True, fault_injector=inj)
+    guardian = SNRGuardian(srv, window=2, cooldown=1)
+    reqs = _mk_requests(cfg, n=3, max_tokens=6)
+    _streams(srv, reqs, runner=guardian.run_until_drained)
+    assert all(r.status == "completed" for r in reqs)
+    assert any("escalate" in t for t in guardian.transitions)
+    assert any("probe down" in t for t in guardian.transitions)
+    assert guardian.level < len(guardian.ladder) - 1  # stepped back down
+
+
+# --------------------------------------------------------------------------
+# crash-consistent snapshots: fresh-engine resume
+# --------------------------------------------------------------------------
+
+def _snapshot_resume(server_kw, arch="qwen2-0.5b"):
+    cfg, fp32, _, params = _family(arch)
+    mk = lambda: LMServer(fp32, params, cap=24, batch_slots=2, **server_kw)
+    want = _streams(mk(), _mk_requests(cfg, n=4, max_tokens=6))
+
+    half = mk()
+    reqs = _mk_requests(cfg, n=4, max_tokens=6)
+    for r in reqs:
+        half.submit(r)
+    for _ in range(3):
+        half.tick()
+    snap = half.snapshot()
+
+    fresh = mk()                                      # a new "process"
+    fresh.restore(snap)
+    fresh.run_until_drained()
+    got = {r.rid: list(map(int, r.tokens_out))
+           for r in fresh.scheduler.finished}
+    assert got == want
+    if fresh.alloc is not None:
+        fresh.alloc.check_invariants()
+        assert fresh.alloc.used_count == 0
+
+
+def test_snapshot_restore_fresh_engine_dense():
+    _snapshot_resume({})
+
+
+def test_snapshot_restore_fresh_engine_paged_prefix():
+    _snapshot_resume({"cache_layout": "paged", "block_size": 4,
+                      "n_blocks": 48, "prefix_cache": True})

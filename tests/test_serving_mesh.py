@@ -175,16 +175,51 @@ def test_pipelined_prefill_token_parity():
     assert want == got
 
 
-def test_pipelined_prefill_error_propagates():
-    """A worker-thread failure surfaces on the scheduler thread instead of
-    hanging the drain loop."""
+def test_pipelined_prefill_crash_retries_then_fails():
+    """A worker-thread failure no longer hangs (or poisons) the drain
+    loop: the crashed job's requests release their slots, re-queue for a
+    bounded retry and — when the step stays broken — retire terminally as
+    status='failed' with the error recorded."""
     cfg, piped = _build(pipeline_depth=1)
     try:
-        piped._prefill_compute = None  # simulates a dead jitted step
-        with pytest.raises(TypeError):
-            _drain(piped, _requests(cfg, n=2))
+        piped._prefill_compute = None  # simulates a permanently dead step
+        reqs = _requests(cfg, n=2)
+        for r in reqs:
+            piped.submit(r)
+        finished = piped.run_until_drained()
+        assert {r.rid for r in finished} == {0, 1}
+        assert all(r.status == "failed" for r in reqs)
+        assert all(r.retries >= 1 for r in reqs)
+        assert all("prefill worker crash" in r.error for r in reqs)
+        assert piped.last_prefill_error is not None
+        assert all(s is None for s in piped.slot_req)
+        assert not piped.prefilling
+        assert piped.scheduler.metrics["retried"] >= 2
     finally:
         piped.close()
+
+
+def test_pipelined_injected_crash_recovers_with_retry():
+    """A TRANSIENT worker crash (the chaos harness's worker_crash site)
+    costs one retry and nothing else: the retried prefill reproduces the
+    exact streams of an unfaulted pipelined engine."""
+    from repro.runtime.faults import FaultInjector, FaultSchedule
+
+    cfg, clean = _build(pipeline_depth=2)
+    try:
+        want = _drain(clean, _requests(cfg))
+    finally:
+        clean.close()
+    inj = FaultInjector(FaultSchedule.parse("worker_crash@0"), seed=0)
+    _, chaos = _build(pipeline_depth=2, fault_injector=inj, max_retries=3)
+    try:
+        got = _drain(chaos, _requests(cfg))
+    finally:
+        chaos.close()
+    assert got == want
+    assert any("worker_crash fired" in l for l in inj.log)
+    assert chaos.scheduler.metrics["retried"] >= 1
+    assert all(r.status == "completed" for r in chaos.scheduler.finished)
 
 
 def test_warmup_compiles_all_shapes_and_prevents_recompiles():
